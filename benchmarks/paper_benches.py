@@ -1,0 +1,155 @@
+"""Benchmarks reproducing each measured table/figure of the paper.
+
+Each function returns rows of (name, us_per_call, derived-metrics-string).
+Wall-clock here is the *simulator's* cost; the derived column carries the
+reproduced paper figure vs. its published value.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import protocol_sim as ps
+from repro.core import sparse_collectives as sc
+from repro.core.link import PAPER_TIMING
+from repro.kernels import ops as K
+
+
+def _timed(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(out))
+    return out, (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_fig7_onedir():
+    """Fig. 7: continuous one-direction stream -> 32.3 MEvents/s."""
+    res, us = _timed(ps.saturated_onedir, 4096)
+    thr = float(ps.throughput_mev_s(res))
+    return [("fig7_onedir_throughput", us,
+             f"measured={thr:.2f}MEv/s paper=32.3 err={abs(thr-32.3)/32.3:.2%}")]
+
+
+def bench_fig8_bidir():
+    """Fig. 8: alternating bi-directional load -> 28.6 MEvents/s."""
+    res, us = _timed(ps.alternating_bidir, 2048)
+    thr = float(ps.throughput_mev_s(res))
+    return [("fig8_bidir_throughput", us,
+             f"measured={thr:.2f}MEv/s paper=28.6 err={abs(thr-28.6)/28.6:.2%}")]
+
+
+def bench_table2():
+    """Table II: the four key figures of the fabricated block."""
+    rows = []
+    res1, us1 = _timed(ps.saturated_onedir, 2048)
+    rows.append(("table2_throughput_onedir", us1,
+                 f"{float(ps.throughput_mev_s(res1)):.2f}MEv/s (paper 32.3)"))
+    res2, us2 = _timed(ps.alternating_bidir, 1024)
+    rows.append(("table2_throughput_bidir", us2,
+                 f"{float(ps.throughput_mev_s(res2)):.2f}MEv/s (paper 28.6)"))
+    rows.append(("table2_switch_latency", 0.0,
+                 f"{PAPER_TIMING.t_sw_ns}ns (paper 5ns)"))
+    rows.append(("table2_energy_per_event", 0.0,
+                 f"{PAPER_TIMING.e_event_pj}pJ@26bit (paper 11pJ)"))
+    return rows
+
+
+def bench_io_savings():
+    """§IV: 100 I/O pins saved on a 4-border 180-I/O chip; plus the
+    byte-domain analogue for the TPU adaptation."""
+    pins = PAPER_TIMING.io_pins_saved(n_links=4)
+    rows = [("io_pins_saved_4links", 0.0,
+             f"{pins} pins (paper 100; 180-I/O prototype -> "
+             f"{pins/180:.0%} of budget)")]
+    n = 1_000_000  # 1M-param gradient
+    for dev in (16, 256):
+        uni = sc.dense_allreduce_bytes(n, dev, bidirectional=False)
+        bi = sc.dense_allreduce_bytes(n, dev, bidirectional=True)
+        aer = sc.aer_allreduce_bytes(n, dev, frac=0.02)
+        rows.append((f"wire_bytes_per_dir_{dev}dev", 0.0,
+                     f"uni={uni:.3e} bidir={bi:.3e} (2x) "
+                     f"aer2%={aer:.3e} ({uni/max(aer,1):.0f}x)"))
+    return rows
+
+
+def bench_switch_timing():
+    """Fig. 2/7 detail: idle-switch vs overlapped reversal latencies."""
+    # single event after an idle switch: t = t_sw + t_sw2req + t_req2req
+    res = ps.simulate(jnp.zeros(1, jnp.int32), jnp.zeros(0, jnp.int32),
+                      initial_tx=0)
+    t_first = int(res.t_end)
+    # ping-pong: per-event cost under busy reversal
+    res2 = ps.alternating_bidir(256)
+    t_rev = (int(res2.t_end) - PAPER_TIMING.t_req2req_ns) / max(
+        int(res2.sent_l + res2.sent_r) - 1, 1)
+    return [
+        ("switch_idle_first_event", 0.0,
+         f"{t_first}ns = t_sw(5)+t_sw2req(5)+t_cycle(31)"),
+        ("switch_busy_reversal_cycle", 0.0,
+         f"{t_rev:.1f}ns/event (paper ~35ns)"),
+    ]
+
+
+def bench_aer_kernels():
+    """Compression path microbench: encode/decode throughput + ratio."""
+    rows = []
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (64, 1024)), jnp.float32)
+    tau = K.tau_from_fraction(x, 0.02)
+    evb, us_enc = _timed(K.aer_compress, x, tau, 128)
+    dense, us_dec = _timed(K.aer_decompress, evb, 1024)
+    ratio = x.size * 4 / float(evb.wire_bytes())
+    rows.append(("aer_encode_64x1024", us_enc,
+                 f"{x.size*4/us_enc/1e3:.1f}MB/s_sim ratio={ratio:.1f}x"))
+    rows.append(("aer_decode_64x1024", us_dec, "scatter-accumulate"))
+    # every decoded nonzero equals the original entry (events are exact)
+    d = np.asarray(dense)
+    xo = np.asarray(x)
+    nz = d != 0
+    ok = np.allclose(d[nz], xo[nz], atol=1e-6)
+    rows.append(("aer_roundtrip_events_exact", 0.0, f"ok={bool(ok)}"))
+    return rows
+
+
+def bench_subwords():
+    """Paper §V conclusion: sub-word serialization trades wires for beats.
+    The whole point vs full bit-serial: pins shrink ~linearly, throughput
+    degrades SUB-linearly (handshake overhead amortizes)."""
+    rows = []
+    for f in (1, 2, 13):
+        t = PAPER_TIMING.subword(f) if f > 1 else PAPER_TIMING
+        res = ps.simulate(jnp.zeros(256, jnp.int32),
+                          jnp.zeros(0, jnp.int32), initial_tx=1, timing=t)
+        thr = float(ps.throughput_mev_s(res))
+        rows.append((f"subword_factor_{f}", 0.0,
+                     f"wires={t.word_bits + 2} thr={thr:.1f}MEv/s "
+                     f"(pins/{f} costs thr x{32.26 / max(thr, 1e-9):.2f})"))
+    return rows
+
+
+def bench_snn_chip_array():
+    """Fig. 6 system context: 4x4 chip array, AER buses on every border."""
+    from repro.models import snn
+    cfg = snn.SnnConfig(grid=(4, 4), neurons=256)
+    params, state = snn.init_snn(cfg, jax.random.PRNGKey(0))
+    run = jax.jit(lambda p, s: snn.run_snn(p, cfg, s, 50))
+    (state2, ticks), us = _timed(run, params, state)
+    rep = snn.link_report(jax.tree.map(np.asarray, ticks))
+    return [
+        ("snn_4x4_50ticks", us,
+         f"{rep['events_per_s']:.3e}ev/s busy={rep['bus_busy_frac']:.2%} "
+         f"E={rep['energy_uj']:.2f}uJ "
+         f"wires/link {rep['shared_bus_wires_per_link']} vs dual "
+         f"{rep['dual_bus_wires_per_link']}"),
+    ]
+
+
+ALL = [bench_fig7_onedir, bench_fig8_bidir, bench_table2,
+       bench_switch_timing, bench_io_savings, bench_subwords,
+       bench_aer_kernels, bench_snn_chip_array]

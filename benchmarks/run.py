@@ -1,0 +1,21 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import paper_benches, roofline
+    rows = []
+    for fn in paper_benches.ALL:
+        rows.extend(fn())
+    rows.extend(roofline.run())
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == '__main__':
+    main()

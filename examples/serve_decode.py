@@ -1,0 +1,22 @@
+"""Batched serving example: prefill + KV/SSM-cache decode across
+architecture families (dense GQA, SWA ring-cache MoE, pure SSM).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve
+
+
+def main():
+    for arch in ("granite_3_2b", "mixtral_8x22b", "falcon_mamba_7b"):
+        print(f"=== {arch} ===")
+        serve.main(["--arch", arch, "--smoke", "--batch", "4",
+                    "--prompt-len", "32", "--gen", "12"])
+
+
+if __name__ == "__main__":
+    main()

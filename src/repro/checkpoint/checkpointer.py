@@ -1,0 +1,124 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout:  <dir>/step_<k>/arrays.npz + manifest.json  (written to a tmp dir,
+fsync'd, then atomically renamed — a crash mid-write never corrupts the
+latest checkpoint).  Saves run on a background thread (training continues);
+``wait()`` joins before the next save or at shutdown.  ``restore`` rebuilds
+the pytree and (optionally) re-shards every leaf onto a NEW mesh — elastic
+restart across different topologies is a first-class path, tested in
+tests/test_checkpoint.py.
+
+At 1000-node scale each host writes its own shard files; here the
+single-process container writes one file but keeps the same manifest/atomic
+protocol.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------ save --
+    def save(self, step: int, tree, blocking: bool = False):
+        self.wait()
+        arrays = _flatten_with_paths(tree)
+        treedef = jax.tree.structure(tree)
+
+        def _write():
+            tmp = os.path.join(self.dir, f".tmp_step_{step}_{os.getpid()}")
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            manifest = {
+                "step": step,
+                "time": time.time(),
+                "treedef": str(treedef),
+                "keys": sorted(arrays.keys()),
+                "shapes": {k: list(v.shape) for k, v in arrays.items()},
+                "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------- restore --
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                if os.path.exists(os.path.join(self.dir, name,
+                                               "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target_tree, shardings=None):
+        """Restore into the structure of ``target_tree``; optionally
+        device_put every leaf with a (new-mesh) sharding tree."""
+        self.wait()
+        path = os.path.join(self.dir, f"step_{step:08d}", "arrays.npz")
+        data = np.load(path)
+        arrays = {k: data[k] for k in data.files}
+
+        flat = jax.tree_util.tree_flatten_with_path(target_tree)
+        leaves = []
+        for p, leaf in flat[0]:
+            key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                           for q in p)
+            arr = arrays[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape,
+                                                    leaf.shape)
+            leaves.append(arr.astype(leaf.dtype))
+        tree = jax.tree.unflatten(flat[1], leaves)
+        if shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        return tree

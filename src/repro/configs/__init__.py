@@ -1,0 +1,4 @@
+"""Architecture configs: one module per assigned arch + the paper-native SNN."""
+from .base import (ALL_SHAPES, ARCH_IDS, ModelConfig, MoeConfig,  # noqa: F401
+                   MambaConfig, RunConfig, ShapeConfig, get_config,
+                   get_smoke_config, input_specs, shapes_for)

@@ -1,0 +1,222 @@
+"""Config system: model / shape / mesh / run configs + the arch registry.
+
+Every assigned architecture provides a module ``configs/<id>.py`` exposing
+``CONFIG`` (the exact published configuration) and ``smoke_config()`` (a
+reduced same-family config for CPU tests).  ``input_specs()`` builds
+ShapeDtypeStruct stand-ins for the dry-run (never allocates).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoeConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    # "ep": experts sharded over the model axis (needs E % tp == 0)
+    # "tp": every expert's d_ff sharded over the model axis (E < tp)
+    layout: str = "ep"
+    router_z_loss: float = 1e-3
+    aux_loss: float = 1e-2
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0          # 0 -> ceil(d_model / 16)
+    chunk: int = 128          # selective-scan chunk length
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"      # dense | moe | mamba | hybrid | encoder | vision
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_head: int = 0            # 0 -> d_model // n_heads
+    d_ff: int = 1024
+    vocab: int = 1024
+    act: str = "silu"
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    sliding_window: int = 0    # 0 = full attention; >0 = SWA window
+    causal: bool = True        # False for encoder-only
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+
+    moe: MoeConfig | None = None
+    moe_every: int = 1         # MoE replaces FFN every k-th layer (1 = all)
+    mamba: MambaConfig | None = None
+    # hybrid (Jamba): per-super-block layer pattern, e.g.
+    #   ("mamba","mamba_moe",...) scanned over n_layers // len(pattern) periods
+    block_pattern: Sequence[str] = ()
+    # vision: cross-attention inserted at these positions within a period of
+    # ``xattn_period`` layers; image tokens come from a stub frontend
+    xattn_period: int = 0
+    xattn_pos: int = 3
+    n_img_tokens: int = 0
+    d_frontend: int = 0        # stub modality frontend embedding width
+    modality: str = "text"     # text | audio_frames | image+text
+
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+
+    # attention chunking (pure-JAX flash): 0 = auto
+    q_chunk: int = 0
+    kv_chunk: int = 0
+    # sequence-chunked cross-entropy (never materializes (B,S,V) logits):
+    # 0 = auto (chunk when S*V is large), -1 = disabled
+    loss_chunk: int = 0
+
+    # remat policy for the layer scan: none | dots | full
+    remat: str = "full"
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head",
+                               self.d_model // max(self.n_heads, 1))
+
+    @property
+    def dt_rank(self) -> int:
+        m = self.mamba or MambaConfig()
+        return m.dt_rank or -(-self.d_model // 16)
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Shapes (the assigned input-shape sets)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K,
+                                  LONG_500K)}
+
+
+def shapes_for(cfg: ModelConfig) -> list[ShapeConfig]:
+    """The spec's skip rules: encoder-only archs have no decode shapes;
+    ``long_500k`` needs a sub-quadratic path (SSM / hybrid / SWA)."""
+    out = [TRAIN_4K, PREFILL_32K]
+    if cfg.causal:
+        out.append(DECODE_32K)
+        subquadratic = (cfg.family in ("mamba", "hybrid")
+                        or cfg.sliding_window > 0)
+        if subquadratic:
+            out.append(LONG_500K)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Run config (distribution + technique knobs)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RunConfig:
+    # gradient cross-replica reduction: psum | bidir_ring | ring | aer_topk
+    dp_reduce: str = "psum"
+    aer_frac: float = 0.02          # fraction shipped per step (aer_topk)
+    aer_budget: int = 128
+    fsdp: bool = True               # shard params over the data axis too
+    seq_parallel: bool = False      # shard residual-stream seq over model
+    # logical-rule overrides, e.g. {"mamba_inner": ("data", "model")} for
+    # 2D weight-stationary serving layouts ("act:" prefix = activation map)
+    rules_overrides: tuple = ()     # of (key, value) pairs
+    grad_accum: int = 1
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    seed: int = 0
+    checkpoint_every: int = 0       # 0 = off
+    checkpoint_dir: str = ""
+    keep_checkpoints: int = 3
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = [
+    "minitron_8b", "granite_3_2b", "qwen3_14b", "granite_34b",
+    "llama32_vision_11b", "hubert_xlarge", "mixtral_8x22b",
+    "moonshot_v1_16b_a3b", "jamba_v01_52b", "falcon_mamba_7b",
+]
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.smoke_config()
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation) — dry-run fodder
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract input batch for (arch × shape).
+
+    Token LMs take int32 tokens/labels; audio/vlm frontends are STUBS that
+    feed precomputed frame/patch embeddings alongside text tokens.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+
+    if shape.kind == "train" or shape.kind == "prefill":
+        if cfg.modality == "audio_frames":
+            specs = {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_frontend), f32),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                "mask": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            }
+        else:
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            }
+        if cfg.modality == "image+text":
+            specs["img_embed"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, cfg.d_frontend), f32)
+        return specs
+
+    # decode: one new token against a seq_len-deep cache
+    specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+             "pos": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    if cfg.modality == "image+text":
+        specs["img_embed"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_img_tokens, cfg.d_frontend), f32)
+    return specs

@@ -1,0 +1,5 @@
+"""Core: the paper's contribution — bi-directional AE transceiver protocol,
+its timing/energy contract, and the TPU-scale adaptations (event-sparse
+collectives + half-duplex link scheduling)."""
+
+from . import events, fifo, link, protocol_sim, transceiver  # noqa: F401

@@ -1,0 +1,100 @@
+"""Address-Event word formats.
+
+The paper transmits 26-bit parallel Address-Events (AEs) between chips.  Two
+wire formats live here:
+
+* the *protocol* format — a raw 26-bit address word, exactly as driven onto
+  the shared AER bus by the transceiver block (used by the protocol
+  simulator and the SNN chip-array example, where an event is "neuron X on
+  core Y spiked");
+
+* the *payload* format — the TPU-side adaptation, where an event is a sparse
+  (address, value) pair produced by gradient/activation compression.  We pack
+  a block-local 16-bit address together with a bfloat16 payload into one
+  uint32 "wire word" so that event streams have a fixed, hardware-honest
+  width (the analogue of the paper's fixed 26-bit bus).
+
+Everything is pure jnp and jit/scan-friendly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+AER_ADDR_BITS = 26  # width of the paper's parallel AER bus
+AER_ADDR_MASK = (1 << AER_ADDR_BITS) - 1
+
+# Payload ("ML") event word: [31:16] block-local address, [15:0] bf16 bits.
+EVENT_IDX_BITS = 16
+EVENT_MAX_BLOCK = 1 << EVENT_IDX_BITS
+
+
+# ---------------------------------------------------------------------------
+# Protocol format: raw 26-bit addresses (fields: chip-local x/y/core/neuron).
+# ---------------------------------------------------------------------------
+
+def pack_aer_address(core: jnp.ndarray, neuron: jnp.ndarray,
+                     neuron_bits: int = 16) -> jnp.ndarray:
+    """Pack (core, neuron) into a 26-bit AER address word (uint32).
+
+    The paper does not prescribe a field split; neuromorphic convention is a
+    hierarchical (core, neuron) address.  ``neuron_bits`` low bits hold the
+    neuron id, the remaining ``26 - neuron_bits`` hold the core id.
+    """
+    core = jnp.asarray(core, jnp.uint32)
+    neuron = jnp.asarray(neuron, jnp.uint32)
+    word = (core << neuron_bits) | (neuron & jnp.uint32((1 << neuron_bits) - 1))
+    return word & jnp.uint32(AER_ADDR_MASK)
+
+
+def unpack_aer_address(word: jnp.ndarray, neuron_bits: int = 16):
+    word = jnp.asarray(word, jnp.uint32) & jnp.uint32(AER_ADDR_MASK)
+    neuron = word & jnp.uint32((1 << neuron_bits) - 1)
+    core = word >> neuron_bits
+    return core, neuron
+
+
+# ---------------------------------------------------------------------------
+# Payload format: (idx:16 | bf16:16) -> uint32
+# ---------------------------------------------------------------------------
+
+def _f32_to_bf16_bits(val: jnp.ndarray) -> jnp.ndarray:
+    """float32 -> uint16 holding the bf16 bit pattern (round-to-nearest-even
+    via jnp cast, which is what the TPU datapath does)."""
+    bf = val.astype(jnp.bfloat16)
+    return jax.lax.bitcast_convert_type(bf, jnp.uint16)
+
+
+def _bf16_bits_to_f32(bits: jnp.ndarray) -> jnp.ndarray:
+    bf = jax.lax.bitcast_convert_type(bits.astype(jnp.uint16), jnp.bfloat16)
+    return bf.astype(jnp.float32)
+
+
+def pack_events(idx: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
+    """Pack block-local indices (< 2**16) and float values into uint32 words.
+
+    idx: int array, val: float array (same shape).  Returns uint32 words.
+    Values are rounded to bf16 — the precision actually shipped on the wire.
+    """
+    idx16 = jnp.asarray(idx, jnp.uint32) & jnp.uint32(0xFFFF)
+    vbits = _f32_to_bf16_bits(jnp.asarray(val, jnp.float32)).astype(jnp.uint32)
+    return (idx16 << 16) | vbits
+
+
+def unpack_events(words: jnp.ndarray):
+    """uint32 words -> (idx int32, val float32 (bf16-precision))."""
+    words = jnp.asarray(words, jnp.uint32)
+    idx = (words >> 16).astype(jnp.int32)
+    val = _bf16_bits_to_f32((words & jnp.uint32(0xFFFF)).astype(jnp.uint16))
+    return idx, val
+
+
+def event_bytes(n_events: int | jnp.ndarray, word_bytes: int = 4):
+    """Wire bytes for an event stream (the 'pins -> bytes' accounting)."""
+    return n_events * word_bytes
+
+
+def roundtrip_error_bound() -> float:
+    """Max relative error introduced by bf16 payload quantisation."""
+    return 2.0 ** -8  # bf16 has 8 mantissa bits incl. implicit one

@@ -1,0 +1,67 @@
+"""Bounded functional FIFO — the TX/RX FIFOs of Fig. 1, as a pytree.
+
+A FIFO is a (buffer, head, count) triple manipulated by pure functions so it
+can live inside ``lax.scan`` carries.  Overflow pushes are dropped and
+reported (the hardware analogue: the 4-phase handshake would stall upstream;
+the protocol simulator uses the reported flag to model back-pressure).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class Fifo(NamedTuple):
+    buf: jnp.ndarray    # (capacity,) any dtype
+    head: jnp.ndarray   # scalar int32 — index of oldest element
+    count: jnp.ndarray  # scalar int32 — number of valid elements
+
+    @property
+    def capacity(self) -> int:
+        return self.buf.shape[0]
+
+
+def make_fifo(capacity: int, dtype=jnp.uint32) -> Fifo:
+    return Fifo(
+        buf=jnp.zeros((capacity,), dtype),
+        head=jnp.zeros((), jnp.int32),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def fifo_push(f: Fifo, value: jnp.ndarray, enable=True):
+    """Push ``value`` if ``enable`` and not full.  Returns (fifo, ok)."""
+    cap = f.capacity
+    ok = jnp.logical_and(jnp.asarray(enable), f.count < cap)
+    slot = (f.head + f.count) % cap
+    newval = jnp.where(ok, jnp.asarray(value, f.buf.dtype), f.buf[slot])
+    buf = f.buf.at[slot].set(newval)
+    count = f.count + ok.astype(jnp.int32)
+    return Fifo(buf, f.head, count), ok
+
+
+def fifo_pop(f: Fifo, enable=True):
+    """Pop oldest element if ``enable`` and non-empty.
+
+    Returns (fifo, value, ok).  ``value`` is unspecified when not ok.
+    """
+    ok = jnp.logical_and(jnp.asarray(enable), f.count > 0)
+    value = f.buf[f.head]
+    head = jnp.where(ok, (f.head + 1) % f.capacity, f.head)
+    count = f.count - ok.astype(jnp.int32)
+    return Fifo(f.buf, head, count), value, ok
+
+
+def fifo_peek(f: Fifo):
+    """(value_at_head, non_empty)."""
+    return f.buf[f.head], f.count > 0
+
+
+def fifo_empty(f: Fifo):
+    return f.count == 0
+
+
+def fifo_full(f: Fifo):
+    return f.count >= f.capacity

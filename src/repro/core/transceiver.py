@@ -1,0 +1,142 @@
+"""SW_Control FSM of the bi-directional AE transceiver block (paper §II–III).
+
+Signal conventions (one block's point of view, matching Fig. 1 / Table I):
+
+* ``sw_ack``  — the block's own state wire, driven out to the peer.
+  Logic 1: "I need / hold the transmitter role" (events pending, or bus
+  held).  Logic 0: "nothing to transmit — the bus may be yours".
+* ``sw_req``  — the peer's ``sw_ack``, wired in (the two are swapped).
+* ``mode``    — TX (1) or RX (0).  ``TX_EN = mode``, ``RX_EN = ~mode``; the
+  paper generates these as complementary enables for the tri-state pads.
+* ``rx_p``    — RX_Probe: has this block received ≥ 1 event since entering
+  RX mode?  At global reset it is initialised to 1 for the block reset into
+  RX mode ("except that this block is initially reset to RX mode for a
+  chip-level global reset") and 0 for the TX block.
+* ``tx_p``    — TX_Probe: are events pending in the TX FIFO?
+
+Mode-switch guards (paper §II, verbatim):
+
+  request RX→TX  (assert sw_ack ↑)  iff  mode == RX  ∧  rx_p == 1
+                                        ∧  tx_pending > 0
+  grant   TX→RX  (deassert sw_ack ↓) iff mode == TX  ∧  sw_req == 1
+                                        ∧  tx_pending == 0
+
+Mode resolution (Table I):
+
+  (sw_ack, sw_req) = (1, 0) → TX        (request granted / steady TX)
+  (sw_ack, sw_req) = (0, 1) → RX        (granted away / steady RX)
+  (sw_ack, sw_req) = (1, 1) → hold      (switch pending: current TX holds)
+  (sw_ack, sw_req) = (0, 0) → hold      (idle bus)
+
+Beyond-paper extension: ``max_burst``.  The paper's grant rule only releases
+the bus once the transmitter has fully drained, so two *saturated* sources
+starve each other's reverse traffic (the paper's bidirectional measurement
+alternates single events, sidestepping this).  ``max_burst = B`` makes a
+transmitter voluntarily grant after B consecutive events whenever the peer
+is requesting; ``B = 0`` disables the extension (paper-faithful).  The same
+bounded-burst idea becomes the chunked bidirectional collective schedule in
+``core/halfduplex.py``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+RX, TX = 0, 1
+
+
+class XcvrState(NamedTuple):
+    mode: jnp.ndarray    # int32: 0 = RX, 1 = TX
+    sw_ack: jnp.ndarray  # int32: own state wire
+    rx_p: jnp.ndarray    # int32: received >= 1 event since entering RX
+    burst: jnp.ndarray   # int32: consecutive events sent in current TX tenure
+
+
+def reset_state(initial_mode: int) -> XcvrState:
+    """Chip-level global reset (PRst/SRst in Fig. 3).
+
+    Exactly one block of a linked pair must be reset into TX mode.  The RX
+    block gets ``rx_p = 1`` (the paper's reset exemption) so it can claim the
+    bus before ever receiving an event; the TX block starts with the bus.
+    """
+    mode = jnp.asarray(initial_mode, jnp.int32)
+    return XcvrState(
+        mode=mode,
+        sw_ack=mode,                       # TX block holds the bus from reset
+        rx_p=jnp.asarray(1 - initial_mode, jnp.int32),
+        burst=jnp.zeros((), jnp.int32),
+    )
+
+
+class XcvrOut(NamedTuple):
+    tx_en: jnp.ndarray
+    rx_en: jnp.ndarray
+    switched: jnp.ndarray  # 1 iff mode changed this step
+
+
+def step(state: XcvrState,
+         sw_req: jnp.ndarray,
+         tx_pending: jnp.ndarray,
+         rx_strobe: jnp.ndarray,
+         max_burst: int = 0):
+    """One FSM evaluation.
+
+    Args:
+      state:      current ``XcvrState``.
+      sw_req:     the peer's ``sw_ack`` (already swapped, per Fig. 1).
+      tx_pending: number of events in this block's TX FIFO (int).
+      rx_strobe:  1 if an event was received by this block since last step.
+      max_burst:  0 = paper-faithful; B > 0 = grant after B events if the
+                  peer requests (fairness extension, see module docstring).
+
+    Returns (new_state, XcvrOut).
+    """
+    sw_req = jnp.asarray(sw_req, jnp.int32)
+    tx_pending = jnp.asarray(tx_pending, jnp.int32)
+    rx_strobe = jnp.asarray(rx_strobe, jnp.int32)
+
+    mode = state.mode
+    tx_p = (tx_pending > 0).astype(jnp.int32)
+
+    # RX_Probe latches on any receive while in RX mode.
+    rx_p = jnp.where((mode == RX) & (rx_strobe == 1),
+                     jnp.int32(1), state.rx_p)
+
+    # --- request guard (Switch Controller NFET stack: TX_in_req·RX_EN·RX_P)
+    want_request = (mode == RX) & (tx_p == 1) & (rx_p == 1)
+
+    # --- grant guard (Switch Controller pFETs: SW_reqB + TX_P), plus the
+    # bounded-burst fairness extension.
+    drained = tx_p == 0
+    if max_burst > 0:
+        drained = drained | (state.burst >= max_burst)
+    want_grant = (mode == TX) & (sw_req == 1) & drained
+
+    sw_ack = jnp.where(mode == TX,
+                       jnp.where(want_grant, jnp.int32(0), jnp.int32(1)),
+                       jnp.where(want_request, jnp.int32(1), jnp.int32(0)))
+
+    # --- Table I mode resolution
+    new_mode = jnp.where((sw_ack == 1) & (sw_req == 0), jnp.int32(TX),
+                jnp.where((sw_ack == 0) & (sw_req == 1), jnp.int32(RX),
+                          mode))
+    switched = (new_mode != mode).astype(jnp.int32)
+
+    # Entering RX afresh clears the probe; burst counter clears on any switch.
+    rx_p = jnp.where((switched == 1) & (new_mode == RX), jnp.int32(0), rx_p)
+    burst = jnp.where(switched == 1, jnp.int32(0), state.burst)
+
+    new_state = XcvrState(mode=new_mode, sw_ack=sw_ack, rx_p=rx_p, burst=burst)
+    out = XcvrOut(
+        tx_en=(new_mode == TX).astype(jnp.int32),
+        rx_en=(new_mode == RX).astype(jnp.int32),
+        switched=switched,
+    )
+    return new_state, out
+
+
+def note_transmit(state: XcvrState) -> XcvrState:
+    """Record one event sent in the current TX tenure (burst accounting)."""
+    return state._replace(burst=state.burst + 1)

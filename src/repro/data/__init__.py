@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipelines."""
+from .pipeline import SyntheticLM  # noqa: F401

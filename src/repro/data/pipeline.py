@@ -1,0 +1,88 @@
+"""Deterministic synthetic data pipeline with per-host sharding + prefetch.
+
+Every batch is a pure function of (seed, step) — restart-safe by
+construction: resuming at step k regenerates exactly the batch the failed
+run would have seen (the checkpoint/restart test relies on this).  The
+token stream has learnable affine structure plus noise, so short training
+runs show real loss decrease.
+
+Per-host sharding follows the JAX SPMD convention: each process feeds its
+slice of the global batch; here ``local_slice`` implements the split and a
+background-thread prefetcher hides generation latency.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+
+class SyntheticLM:
+    def __init__(self, vocab: int, seq_len: int, global_batch: int,
+                 seed: int = 0, *, structure: float = 0.7,
+                 modality: str = "text", d_frontend: int = 0,
+                 n_img_tokens: int = 0):
+        self.vocab = vocab
+        self.seq = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+        self.structure = structure
+        self.modality = modality
+        self.d_frontend = d_frontend
+        self.n_img_tokens = n_img_tokens
+
+    # ------------------------------------------------------------------
+    def batch(self, step: int) -> dict:
+        """The full global batch for ``step`` (numpy)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        b, s, v = self.global_batch, self.seq, self.vocab
+        # learnable structure: per-sequence arithmetic ramp t_i = t0 + c*i
+        # (the model infers the stride c from context); `structure` controls
+        # the clean/noise mix so loss has real headroom to decrease.
+        c = rng.integers(1, min(v, 17), (b, 1))
+        t0 = rng.integers(0, v, (b, 1))
+        ar = np.arange(s)[None, :]
+        toks = (t0 + c * ar) % v
+        noise = rng.random((b, s)) > self.structure
+        toks = np.where(noise, rng.integers(0, v, (b, s)), toks)
+        toks = toks.astype(np.int32)
+        labels = np.concatenate([toks[:, 1:], toks[:, :1]], axis=1)
+        out = {"tokens": toks, "labels": labels}
+        if self.modality == "audio_frames":
+            frames = rng.standard_normal(
+                (b, s, self.d_frontend)).astype(np.float32)
+            out = {"frames": frames, "labels": toks,
+                   "mask": np.ones((b, s), np.int32)}
+        elif self.modality == "image+text":
+            out["img_embed"] = rng.standard_normal(
+                (b, self.n_img_tokens, self.d_frontend)).astype(np.float32)
+        return out
+
+    def local_slice(self, step: int, rank: int, world: int) -> dict:
+        assert self.global_batch % world == 0
+        per = self.global_batch // world
+        full = self.batch(step)
+        return {k: v[rank * per:(rank + 1) * per] for k, v in full.items()}
+
+    # ------------------------------------------------------------------
+    def prefetch(self, start_step: int, n_steps: int, depth: int = 2,
+                 rank: int = 0, world: int = 1):
+        """Background-thread prefetching iterator of (step, batch)."""
+        q: queue.Queue = queue.Queue(maxsize=depth)
+        stop = object()
+
+        def worker():
+            for s in range(start_step, start_step + n_steps):
+                q.put((s, self.local_slice(s, rank, world)))
+            q.put(stop)
+
+        th = threading.Thread(target=worker, daemon=True)
+        th.start()
+        while True:
+            item = q.get()
+            if item is stop:
+                break
+            yield item

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's communication hot-spots:
+AER event encode (TX), decode (RX), the fused LIF update used by the
+paper-native SNN chip-array example, and the fused Mamba selective scan
+(the compute hot-spot of the SSM/hybrid architectures).  See ops.py for the public API and
+ref.py for the pure-jnp oracles."""
+
+from .ops import (EventBlocks, aer_compress, aer_decompress,  # noqa: F401
+                  compress_with_feedback, lif_step, pad_to_blocks,
+                  tau_from_fraction, unpad_from_blocks)
+from .selective_scan import selective_scan_pallas  # noqa: F401

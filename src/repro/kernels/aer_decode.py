@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: AER event decoder (RX path of the transceiver).
+
+Accumulates fixed-width event slots back into a dense block:
+``dense[r, b] = sum_e [idx[r, e] == b] * val[r, e]``.  As with the encoder,
+the gather/scatter is recast as a one-hot contraction so the accumulation
+runs on the MXU; duplicate addresses therefore sum naturally (the AER
+semantics — two spikes at one address are two contributions).
+
+VMEM per grid step (rows_per_block=4, budget=128, block=1024): one-hot
+2 MiB + slots 4 KiB.  idx == -1 marks a void slot (matches no address).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_kernel(idx_ref, val_ref, out_ref):
+    idx = idx_ref[...]                  # (rows, budget) i32
+    val = val_ref[...]                  # (rows, budget)
+    rows, budget = idx.shape
+    block = out_ref.shape[-1]
+
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (rows, budget, block), 2)
+    onehot = ((idx[:, :, None] == iota_b) & (idx[:, :, None] >= 0)).astype(
+        jnp.float32)
+
+    dense = jax.lax.dot_general(
+        val.astype(jnp.float32)[:, None, :], onehot,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)[:, 0, :]
+    out_ref[...] = dense.astype(out_ref.dtype)
+
+
+def aer_decode_pallas(idx: jnp.ndarray, val: jnp.ndarray, block: int,
+                      *, rows_per_block: int = 4, interpret: bool = True):
+    """idx/val: (num_blocks, budget); returns dense (num_blocks, block)."""
+    nb, budget = idx.shape
+    assert nb % rows_per_block == 0, (nb, rows_per_block)
+    grid = (nb // rows_per_block,)
+
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_block, budget), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_block, budget), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_block, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), val.dtype),
+        interpret=interpret,
+    )(idx, val)

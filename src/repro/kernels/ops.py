@@ -1,0 +1,138 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles flattening/padding arbitrary tensors into (num_blocks, block) tiles,
+threshold selection, event packing (26-bit-style wire words), and the
+error-feedback compose used by the sparse collectives.
+
+``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere (this
+container is CPU-only; the BlockSpec layout is the TPU deployment config).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import events as ev
+from . import ref
+from .aer_decode import aer_decode_pallas
+from .aer_encode import aer_encode_pallas
+from .lif_step import lif_step_pallas
+
+DEFAULT_BLOCK = 1024
+DEFAULT_BUDGET = 128
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+class EventBlocks(NamedTuple):
+    """A compressed tensor: fixed-width AER event slots per block."""
+    idx: jnp.ndarray     # (num_blocks, budget) i32, -1 = void
+    val: jnp.ndarray     # (num_blocks, budget) float
+    count: jnp.ndarray   # (num_blocks,) i32 — events emitted
+    wanted: jnp.ndarray  # (num_blocks,) i32 — events over threshold
+
+    @property
+    def wire_words(self):
+        """Packed uint32 wire words ((idx:16|bf16:16) — events.py format)."""
+        return ev.pack_events(jnp.maximum(self.idx, 0), self.val)
+
+    def wire_bytes(self):
+        """Actual bytes on the wire under run-length framing: only `count`
+        slots per block ship (void slots are never driven onto the bus)."""
+        return jnp.sum(self.count) * 4 + self.count.shape[0] * 4
+
+
+def pad_to_blocks(x: jnp.ndarray, block: int = DEFAULT_BLOCK):
+    """Flatten + zero-pad to (num_blocks, block). Returns (tiles, orig_size)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    nb = max(1, -(-n // block))
+    pad = nb * block - n
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(nb, block), n
+
+
+def unpad_from_blocks(tiles: jnp.ndarray, orig_size: int, shape):
+    return tiles.reshape(-1)[:orig_size].reshape(shape)
+
+
+def tau_from_fraction(x_tiles: jnp.ndarray, frac: float):
+    """Per-block threshold that keeps ~frac of entries (quantile of |x|)."""
+    q = jnp.clip(1.0 - frac, 0.0, 1.0)
+    return jnp.quantile(jnp.abs(x_tiles.astype(jnp.float32)), q, axis=1).astype(
+        x_tiles.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "interpret",
+                                             "rows_per_block", "use_ref"))
+def aer_compress(x_tiles: jnp.ndarray, tau: jnp.ndarray,
+                 budget: int = DEFAULT_BUDGET, *, interpret: bool | None = None,
+                 rows_per_block: int = 4, use_ref: bool = False) -> EventBlocks:
+    """Encode (num_blocks, block) tiles into event slots."""
+    if use_ref:
+        out = ref.aer_encode(x_tiles, tau, budget)
+    else:
+        nb = x_tiles.shape[0]
+        rpb = rows_per_block
+        while nb % rpb:
+            rpb //= 2
+        out = aer_encode_pallas(x_tiles, tau, budget, rows_per_block=max(rpb, 1),
+                                interpret=_auto_interpret(interpret))
+    return EventBlocks(*out)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret",
+                                             "rows_per_block", "use_ref"))
+def aer_decompress(events_: EventBlocks, block: int = DEFAULT_BLOCK, *,
+                   interpret: bool | None = None, rows_per_block: int = 4,
+                   use_ref: bool = False) -> jnp.ndarray:
+    if use_ref:
+        return ref.aer_decode(events_.idx, events_.val, block)
+    nb = events_.idx.shape[0]
+    rpb = rows_per_block
+    while nb % rpb:
+        rpb //= 2
+    return aer_decode_pallas(events_.idx, events_.val, block,
+                             rows_per_block=max(rpb, 1),
+                             interpret=_auto_interpret(interpret))
+
+
+def compress_with_feedback(x: jnp.ndarray, residual: jnp.ndarray, *,
+                           frac: float = 0.05, budget: int = DEFAULT_BUDGET,
+                           block: int = DEFAULT_BLOCK,
+                           interpret: bool | None = None):
+    """Error-feedback AER compression of one tensor.
+
+    y = x + residual; events = encode(y); residual' = y - decode(events).
+    Returns (EventBlocks, new_residual, orig_size).
+    """
+    y = x + residual
+    tiles, n = pad_to_blocks(y, block)
+    tau = tau_from_fraction(tiles, frac)
+    events_ = aer_compress(tiles, tau, budget, interpret=interpret)
+    dec = aer_decompress(events_, block, interpret=interpret)
+    new_res = unpad_from_blocks(tiles - dec, n, x.shape)
+    return events_, new_res, n
+
+
+def lif_step(v: jnp.ndarray, i_syn: jnp.ndarray, *, decay: float = 0.9,
+             v_th: float = 1.0, v_reset: float = 0.0,
+             interpret: bool | None = None, use_ref: bool = False):
+    """Fused LIF update on (rows, lanes) state."""
+    if use_ref:
+        return ref.lif_step(v, i_syn, decay, v_th, v_reset)
+    rows = v.shape[0]
+    br = 8
+    while rows % br:
+        br //= 2
+    return lif_step_pallas(v, i_syn, decay=decay, v_th=v_th, v_reset=v_reset,
+                           block_rows=max(br, 1),
+                           interpret=_auto_interpret(interpret))

@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; kernels must match them bit-for-bit (integer
+outputs) / to float tolerance (float outputs) in the per-kernel sweep tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# aer_encode: block-local thresholded event extraction (the TX path).
+#
+# Given a (num_blocks, block) dense tensor and a per-block threshold tau,
+# select entries with |x| >= tau in index order, keeping at most `budget`
+# per block (overflow stays behind for the error-feedback residual), and
+# emit fixed-width event slots:
+#   idx[r, e]  = block-local index of the e-th selected entry, or -1
+#   val[r, e]  = its value, or 0
+#   count[r]   = number of entries selected AND emitted (<= budget)
+#   wanted[r]  = number of entries over threshold (>= count)
+# ---------------------------------------------------------------------------
+
+def aer_encode(x: jnp.ndarray, tau: jnp.ndarray, budget: int):
+    nb, blk = x.shape
+    tau = jnp.broadcast_to(jnp.asarray(tau, x.dtype).reshape(-1, 1), (nb, 1))
+    # AER semantics: no activity, no event — zeros never ship, even when the
+    # threshold collapses to 0 (else they'd waste budget slots).
+    mask = (jnp.abs(x) >= tau) & (x != 0)
+    csum = jnp.cumsum(mask.astype(jnp.int32), axis=1)
+    sel = mask & (csum <= budget)
+    dest = csum - 1  # target slot for selected entries
+
+    iota_e = jnp.arange(budget, dtype=jnp.int32)
+    # one-hot scatter: slot e receives the entry whose dest == e
+    onehot = (dest[:, :, None] == iota_e[None, None, :]) & sel[:, :, None]
+    onehot_f = onehot.astype(jnp.float32)
+    val = jnp.einsum("rbe,rb->re", onehot_f, x.astype(jnp.float32))
+    iota_b = jnp.arange(blk, dtype=jnp.float32) + 1.0
+    idx = jnp.einsum("rbe,b->re", onehot_f, iota_b).astype(jnp.int32) - 1
+
+    wanted = csum[:, -1]
+    count = jnp.minimum(wanted, budget)
+    return idx, val.astype(x.dtype), count, wanted
+
+
+# ---------------------------------------------------------------------------
+# aer_decode: event slots -> dense accumulation (the RX path).
+# Duplicate addresses accumulate (sum semantics); idx == -1 slots are void.
+# ---------------------------------------------------------------------------
+
+def aer_decode(idx: jnp.ndarray, val: jnp.ndarray, block: int):
+    nb, budget = idx.shape
+    iota_b = jnp.arange(block, dtype=jnp.int32)
+    onehot = (idx[:, :, None] == iota_b[None, None, :]) & (idx[:, :, None] >= 0)
+    dense = jnp.einsum("reb,re->rb", onehot.astype(jnp.float32),
+                       val.astype(jnp.float32))
+    return dense.astype(val.dtype)
+
+
+# ---------------------------------------------------------------------------
+# lif_step: fused leaky integrate-and-fire neuron update.
+#   v'      = v * decay + i_syn
+#   spike   = v' >= v_th
+#   v_next  = v_reset where spike else v'
+# Shapes: (rows, lanes) float32; returns (v_next, spike as input dtype).
+# ---------------------------------------------------------------------------
+
+def lif_step(v: jnp.ndarray, i_syn: jnp.ndarray, decay: float, v_th: float,
+             v_reset: float):
+    v2 = v * jnp.asarray(decay, v.dtype) + i_syn
+    spike = (v2 >= jnp.asarray(v_th, v.dtype))
+    v_next = jnp.where(spike, jnp.asarray(v_reset, v.dtype), v2)
+    return v_next, spike.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# selective_scan_ref: plain time-step loop oracle for the S6 recurrence
+#   h_t = exp(dt_t · A) ⊙ h_{t-1} + (dt_t · x_t) ⊗ B_t ;  y_t = h_t · C_t
+# ---------------------------------------------------------------------------
+
+def selective_scan_ref(x, dt, b_ssm, c_ssm, a):
+    """x, dt: (B, S, d_in); b_ssm/c_ssm: (B, S, N); a: (d_in, N).
+    Returns (y (B,S,d_in), h_final (B,d_in,N)), all f32."""
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp            # (B,d_in),(B,d_in),(B,N),(B,N)
+        abar = jnp.exp(dtt[..., None] * a)
+        bx = (dtt * xt)[..., None] * bt[:, None, :]
+        h = abar * h + bx
+        y = (h * ct[:, None, :]).sum(-1)
+        return h, y
+
+    B, S, d_in = x.shape
+    h0 = jnp.zeros((B, d_in, a.shape[1]), jnp.float32)
+    hf, ys = jax.lax.scan(step, h0,
+                          (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+                           b_ssm.swapaxes(0, 1), c_ssm.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), hf

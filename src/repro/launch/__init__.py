@@ -1,0 +1,1 @@
+"""Entry points: mesh construction, dry-run, train, serve."""

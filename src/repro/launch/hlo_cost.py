@@ -1,0 +1,329 @@
+"""Loop-aware cost analysis over post-optimization HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+model built on ``lax.scan`` (every stack here) is undercounted by the layer
+count.  This module re-derives the three roofline inputs from the HLO text
+with loop trip-count multiplication:
+
+  flops            — 2·M·N·K for every dot (+ convolutions), the matmul-
+                     roofline convention (elementwise flops are noise for
+                     these models);
+  bytes_accessed   — fusion-boundary traffic: every top-level op counts its
+                     operands + results once per execution (XLA's own
+                     fusion-boundary memory model), × loop trip counts;
+  collective bytes — per collective kind, result-shape bytes × trip counts
+                     (per-device traffic proxy).
+
+Trip counts come from the ``backend_config={"known_trip_count":{"n":...}}``
+annotation XLA attaches to compiled while loops; loops without one count
+once (reported in ``unknown_loops``).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s+(?:ROOT )?(%[\w.\-]+) = ")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\{\s*$")
+
+
+def _split_def(line: str):
+    """'  %x = TYPE opcode(args...' -> (name, type_str, opcode, args_rest)
+    robust to tuple types with /*index=N*/ comments and layouts."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str = rest[:i + 1]
+        rest = rest[i + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str = rest[:sp]
+        rest = rest[sp + 1:]
+    op_end = rest.find("(")
+    if op_end <= 0:
+        return None
+    opcode = rest[:op_end]
+    if not re.fullmatch(r"[\w\-]+", opcode):
+        return None
+    return name, type_str, opcode, rest[op_end + 1:]
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n":"(\d+)"')
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_DIMS_RE = re.compile(r"lhs_contracting_dims={([\d,]*)}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "while", "call", "conditional", "bitcast", "fusion-skip"}
+
+
+def _shape_elems_bytes(type_str: str):
+    elems, bts = 0, 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bts += n * _DTYPE_BYTES[dt]
+    return elems, bts
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+    operands: list = field(default_factory=list)
+
+
+def parse_hlo(text: str):
+    """-> (computations: name -> [Op], shapes: op name -> type_str)."""
+    comps, shapes = {}, {}
+    cur = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            cur = mc.group(1)
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        md = _split_def(line) if cur is not None else None
+        if md:
+            name, type_str, opcode, inner = md
+            depth, args = 1, ""
+            for ch in inner:
+                if ch == "(":
+                    depth += 1
+                if ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                args += ch
+            operands = _OPERAND_RE.findall(args)
+            op = Op(name=name, type_str=type_str, opcode=opcode, line=line,
+                    operands=operands)
+            comps[cur].append(op)
+            shapes[name] = type_str
+    return comps, shapes
+
+
+def _dot_flops(op: Op, shapes: dict) -> float:
+    out_elems, _ = _shape_elems_bytes(op.type_str)
+    m = _DIMS_RE.search(op.line)
+    k = 1
+    if m and op.operands:
+        lhs_type = shapes.get(op.operands[0], "")
+        sm = _SHAPE_RE.search(lhs_type)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for ci in m.group(1).split(","):
+                if ci:
+                    i = int(ci)
+                    if i < len(dims):
+                        k *= dims[i]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, shapes: dict) -> float:
+    out_elems, _ = _shape_elems_bytes(op.type_str)
+    rhs_type = shapes.get(op.operands[1], "") if len(op.operands) > 1 else ""
+    rhs_elems, _ = _shape_elems_bytes(rhs_type)
+    # per output element: 2 * (kernel elems / output channels); output
+    # channel count ~ last minor dim of out — use feature_group heuristic:
+    fg = 1
+    mg = re.search(r"feature_group_count=(\d+)", op.line)
+    if mg:
+        fg = int(mg.group(1))
+    return 2.0 * out_elems * max(rhs_elems / max(fg, 1), 1)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = field(default_factory=dict)
+    unknown_loops: int = 0
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k, v in o.coll.items():
+            self.coll[k] = self.coll.get(k, 0) + v
+        self.unknown_loops += o.unknown_loops
+        return self
+
+    def scaled(self, n):
+        return Cost(self.flops * n, self.bytes * n,
+                    {k: v * n for k, v in self.coll.items()},
+                    self.unknown_loops)
+
+
+def _sliced_params(comp_name, comps, shapes, cache):
+    """Parameter indices of ``comp_name`` that are only read via
+    dynamic-slice / gather inside the fused computation — XLA charges the
+    slice size, not the full buffer (scan weight stacks!).  Returns
+    {param_index: charged_bytes}."""
+    if comp_name in cache:
+        return cache[comp_name]
+    ops = comps.get(comp_name, [])
+    param_idx = {}      # op name -> parameter index
+    for op in ops:
+        if op.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", op.line)
+            if m:
+                param_idx[op.name] = int(m.group(1))
+    reads = {}          # param name -> list of (opcode, result bytes)
+    for op in ops:
+        for o in op.operands:
+            if o in param_idx:
+                _, rb = _shape_elems_bytes(op.type_str)
+                reads.setdefault(o, []).append((op.opcode, rb))
+    out = {}
+    for pname, uses in reads.items():
+        if uses and all(u[0] in ("dynamic-slice", "gather") for u in uses):
+            out[param_idx[pname]] = sum(u[1] for u in uses)
+    cache[comp_name] = out
+    return out
+
+
+def _comp_cost(name, comps, shapes, memo, inside_fusion=False):
+    key = (name, inside_fusion)
+    if key in memo:
+        return memo[key]
+    total = Cost()
+    for op in comps.get(name, []):
+        total += _op_cost(op, comps, shapes, memo, inside_fusion)
+    memo[key] = total
+    return total
+
+
+def _op_cost(op: Op, comps, shapes, memo, inside_fusion):
+    c = Cost()
+    oc = op.opcode
+    if oc == "dot":
+        c.flops += _dot_flops(op, shapes)
+    elif oc == "convolution":
+        c.flops += _conv_flops(op, shapes)
+    elif oc == "fusion":
+        m = _CALLS_RE.search(op.line)
+        if m:
+            sub = _comp_cost(m.group(1), comps, shapes, memo,
+                             inside_fusion=True)
+            c.flops += sub.flops          # dots inside fusions still count
+            for k, v in sub.coll.items():
+                c.coll[k] = c.coll.get(k, 0) + v
+    elif oc == "while":
+        mb, mc_ = _BODY_RE.search(op.line), _COND_RE.search(op.line)
+        mt = _TRIP_RE.search(op.line)
+        n = int(mt.group(1)) if mt else 1
+        if not mt:
+            c.unknown_loops += 1
+        if mb:
+            c += _comp_cost(mb.group(1), comps, shapes, memo).scaled(n)
+        if mc_:
+            c += _comp_cost(mc_.group(1), comps, shapes, memo).scaled(n + 1)
+    elif oc in ("call", "async-start"):
+        m = _CALLS_RE.search(op.line) or re.search(
+            r"to_apply=(%[\w.\-]+)", op.line)
+        if m:
+            c += _comp_cost(m.group(1), comps, shapes, memo)
+    elif oc == "conditional":
+        for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                             r"(?:true|false)_computation=(%[\w.\-]+))",
+                             op.line):
+            names = (m.group(1) or m.group(2) or "").split(",")
+            for nm in names:
+                nm = nm.strip()
+                if nm:
+                    c += _comp_cost(nm, comps, shapes, memo)
+
+    base = oc.replace("-start", "")
+    if base in COLLECTIVES:
+        _, b = _shape_elems_bytes(op.type_str)
+        c.coll[base] = c.coll.get(base, 0) + b
+        c.coll[base + "_count"] = c.coll.get(base + "_count", 0) + 1
+
+    # fusion-boundary bytes with in-place aliasing: when an operand has
+    # exactly the result type (dynamic-update-slice fusions, in-place
+    # elementwise, loop-carried copies), XLA aliases the buffer — traffic
+    # is the *touched* region (≈ the other operands), not the whole buffer.
+    # Operands consumed only via dynamic-slice/gather inside a fusion are
+    # charged at the slice size (scan weight stacks are read one page per
+    # iteration, not wholesale).
+    if not inside_fusion and oc not in _SKIP_BYTES_OPS and oc != "while":
+        sliced = {}
+        if oc == "fusion":
+            m = _CALLS_RE.search(op.line)
+            if m:
+                sliced = _sliced_params(m.group(1), comps, shapes,
+                                        memo.setdefault("__sliced__", {}))
+        _, ob = _shape_elems_bytes(op.type_str)
+        if oc in ("dynamic-slice", "gather"):
+            c.bytes += 2 * ob       # read slice + write result
+            return c
+        other, aliased = 0, False
+        for i, o in enumerate(op.operands):
+            t = shapes.get(o)
+            if not t:
+                continue
+            _, b = _shape_elems_bytes(t)
+            if i in sliced:
+                other += min(b, sliced[i])
+                continue
+            if not aliased and t.split("{")[0] == op.type_str.split("{")[0]:
+                aliased = True      # donated/aliased input: not re-read
+                continue
+            other += b
+        c.bytes += other + (min(ob, other) if aliased else ob)
+    return c
+
+
+def analyze(hlo_text: str, entry: str | None = None) -> dict:
+    comps, shapes = parse_hlo(hlo_text)
+    if entry is None:
+        m = re.search(r"^ENTRY (%[\w.\-]+)", hlo_text, re.M)
+        entry = m.group(1) if m else max(
+            comps, key=lambda k: len(comps[k]))
+    memo = {}
+    cost = _comp_cost(entry, comps, shapes, memo)
+    coll_total = sum(v for k, v in cost.coll.items()
+                     if not k.endswith("_count"))
+    return {
+        "flops": cost.flops,
+        "bytes_accessed": cost.bytes,
+        "collectives": cost.coll,
+        "collective_bytes_total": coll_total,
+        "unknown_trip_count_loops": cost.unknown_loops,
+        "entry": entry,
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,26 @@
+"""Production mesh construction (a FUNCTION — importing this module never
+touches jax device state; the 512-device dry-run forces the host platform
+device count before first jax init, see dryrun.py)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Axes: ("pod", "data", "model") multi-pod / ("data", "model") single-pod.
+    DP spans pod×data; TP/EP/SP span model.  More pods widen only the pure-
+    DP outer axis — the design scales by adding pods, not by resharding.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,1 @@
+"""Model substrate: layers and the architecture families."""

@@ -1,0 +1,163 @@
+"""Top-level model builder: embeddings/frontends + stack + head + loss +
+serving entry points, uniform across all ten assigned architectures.
+
+``build_model(cfg)`` returns an ``LM`` with pure functions:
+
+  init(key)                      -> (params, axes)        axes: logical specs
+  forward(params, batch)         -> (logits, aux)         full-sequence
+  loss(params, batch)            -> (scalar, metrics)     train objective
+  init_cache(batch, max_len)     -> cache pytree          (zeros; abstract ok)
+  prefill(params, batch, ...)    -> (last_logits, cache)
+  decode_step(params, cache, tokens, pos) -> (logits, cache)
+
+Modality frontends are STUBS per the assignment: audio/vision inputs arrive
+as precomputed frame/patch embeddings and pass through one projection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard_activation as shard
+from . import layers as L
+from . import transformer as T
+
+
+class LM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- init --
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        params, axes = {}, {}
+        if cfg.modality == "audio_frames":
+            params["frontend"], axes["frontend"] = L.linear_init(
+                ks[0], cfg.d_frontend, cfg.d_model, ("none", "embed"),
+                cfg.param_dtype)
+        else:
+            params["embed"], axes["embed"] = L.embed_init(
+                ks[0], cfg.vocab, cfg.d_model, cfg.param_dtype)
+        if cfg.modality == "image+text":
+            params["frontend"], axes["frontend"] = L.linear_init(
+                ks[3], cfg.d_frontend, cfg.d_model, ("none", "embed"),
+                cfg.param_dtype)
+        params["stack"], axes["stack"] = T.stack_init(ks[1], cfg)
+        params["ln_f"], axes["ln_f"] = L.rmsnorm_init(cfg.d_model)
+        if cfg.tie_embeddings:
+            pass  # head reuses embed table
+        else:
+            params["head"], axes["head"] = L.head_init(ks[2], cfg)
+        return params, axes
+
+    # ------------------------------------------------------ embeddings --
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        if cfg.modality == "audio_frames":
+            h = L.linear(params["frontend"], batch["frames"],
+                         cfg.compute_dtype)
+        else:
+            h = L.embed(params["embed"], batch["tokens"], cfg.compute_dtype)
+        img = None
+        if cfg.modality == "image+text":
+            img = L.linear(params["frontend"], batch["img_embed"],
+                           cfg.compute_dtype)
+            img = shard(img, ("batch", None, "embed"))
+        return shard(h, ("batch", "seq_sp", "embed")), img
+
+    def _head_raw(self, params, h):
+        """Head projection WITHOUT the final norm (pre-normed input)."""
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            w = params["embed"]["table"].astype(cfg.compute_dtype)
+            logits = h @ w.T
+        else:
+            logits = L.linear(params["head"], h, cfg.compute_dtype)
+        logits = L.mask_padded_vocab(logits, cfg.vocab)
+        return shard(logits, ("batch", None, "vocab")) if logits.ndim == 3 \
+            else logits
+
+    def _head(self, params, h):
+        h = L.rmsnorm(params["ln_f"], h, self.cfg.norm_eps)
+        return self._head_raw(params, h)
+
+    # ---------------------------------------------------------- forward --
+    def forward(self, params, batch):
+        cfg = self.cfg
+        h, img = self._embed_inputs(params, batch)
+        B, S = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h, aux = T.stack_apply(params["stack"], cfg, h, positions, img)
+        return self._head(params, h), aux
+
+    def _loss_chunk(self, S):
+        cfg = self.cfg
+        if cfg.loss_chunk == -1:
+            return 0
+        if cfg.loss_chunk > 0:
+            return cfg.loss_chunk
+        # auto: chunk when the full (B,S,V) logits would be huge
+        return 256 if (S > 512 and cfg.vocab >= 32768) else 0
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        mask = batch.get("mask")
+        S = batch["labels"].shape[1]
+        chunk = self._loss_chunk(S)
+        if chunk:
+            h, img = self._embed_inputs(params, batch)
+            B = h.shape[0]
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+            h, aux = T.stack_apply(params["stack"], cfg, h, positions, img)
+            h = L.rmsnorm(params["ln_f"], h, cfg.norm_eps)
+            nll = L.chunked_cross_entropy(
+                lambda hc: self._head_raw(params, hc), h, batch["labels"],
+                mask, chunk)
+        else:
+            logits, aux = self.forward(params, batch)
+            nll = L.cross_entropy(logits, batch["labels"], mask)
+        total = nll + aux["aux_loss"] + aux["z_loss"]
+        metrics = {"nll": nll, "aux_loss": aux["aux_loss"],
+                   "z_loss": aux["z_loss"], "drop_frac": aux["drop_frac"],
+                   "loss": total}
+        return total, metrics
+
+    # ---------------------------------------------------------- serving --
+    def init_cache(self, batch_size, max_len, dtype=None):
+        return T.init_cache(self.cfg, batch_size, max_len, dtype)
+
+    def prefill(self, params, batch, max_len=None):
+        """Returns (logits for the last position, decode cache with room
+        for ``max_len`` total positions)."""
+        cfg = self.cfg
+        h, img = self._embed_inputs(params, batch)
+        B, S = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h, cache = T.stack_prefill(params["stack"], cfg, h, positions, img,
+                                   max_len=max_len)
+        logits = self._head(params, h[:, -1:])
+        return logits, cache
+
+    def score(self, params, batch):
+        """Full-sequence logits for encoder-style scoring (no cache)."""
+        logits, _ = self.forward(params, batch)
+        return logits
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B, 1) int32; pos: (B,) absolute positions."""
+        cfg = self.cfg
+        h = L.embed(params["embed"], tokens, cfg.compute_dtype)
+        h = shard(h, ("batch", None, "embed"))
+        h, cache = T.stack_decode(params["stack"], cfg, h, pos, cache)
+        logits = self._head(params, h)
+        return logits, cache
+
+
+def build_model(cfg) -> LM:
+    return LM(cfg)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

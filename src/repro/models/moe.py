@@ -1,0 +1,137 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based dispatch.
+
+Dispatch is gather/scatter-based (sort-free, static shapes — SPMD friendly):
+per batch-group, each token's k expert choices get a position-in-expert from
+a running one-hot cumsum; tokens beyond an expert's capacity are dropped
+(their gate mass is simply not combined — residual connection carries them,
+the standard Switch/GShard behaviour).  No (tokens × experts × capacity)
+one-hot einsum is ever materialized: slot tables are built by scatter and
+read by gather, so dispatch is O(tokens) memory and 0 matmul FLOPs.
+
+Layouts (cfg.moe.layout):
+  "ep": expert axis sharded over the model mesh axis (requires E % tp == 0);
+        SPMD inserts the token all-to-all at the dispatch boundary.
+  "tp": every expert's d_ff sharded over the model axis (for E < tp, e.g.
+        Mixtral's 8 experts on a 16-wide axis).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard_activation as shard
+from .layers import _ACTS, _normal
+
+
+def moe_init(key, cfg):
+    m = cfg.moe
+    D, F, E = cfg.d_model, cfg.d_ff, m.num_experts
+    ks = jax.random.split(key, 4)
+    ep = m.layout == "ep"
+    e_ax = "experts" if ep else "none"
+    f_ax = "none" if ep else "ff"
+    p = {
+        "router": _normal(ks[0], (D, E), D ** -0.5, jnp.float32),
+        "wg": _normal(ks[1], (E, D, F), D ** -0.5, cfg.param_dtype),
+        "wi": _normal(ks[2], (E, D, F), D ** -0.5, cfg.param_dtype),
+        "wo": _normal(ks[3], (E, F, D),
+                      F ** -0.5 / (2 * cfg.n_layers) ** 0.5, cfg.param_dtype),
+    }
+    a = {
+        "router": ("none", "none"),
+        "wg": (e_ax, "embed", f_ax),
+        "wi": (e_ax, "embed", f_ax),
+        "wo": (e_ax, f_ax, "embed"),
+    }
+    return p, a
+
+
+def _capacity(cfg, tokens_per_group: int) -> int:
+    m = cfg.moe
+    c = int(-(-tokens_per_group * m.top_k * m.capacity_factor //
+              m.num_experts))
+    return max(c, 1)
+
+
+def moe_apply(p, cfg, x):
+    """x: (B, S, D) -> (out, aux) with aux = {aux_loss, z_loss, drop_frac}.
+
+    Each batch row is a dispatch group (rows are data-sharded, so the
+    position cumsum stays shard-local — no cross-device dispatch state).
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.num_experts, m.top_k
+    C = _capacity(cfg, S)
+    cd = cfg.compute_dtype
+    act = _ACTS[cfg.act]
+
+    logits = x.astype(jnp.float32) @ p["router"]          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, choice = jax.lax.top_k(probs, K)               # (B,S,K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # position-in-expert via one-hot cumsum over the (S*K) dispatch order
+    oh = jax.nn.one_hot(choice, E, dtype=jnp.int32)       # (B,S,K,E)
+    oh_flat = oh.reshape(B, S * K, E)
+    pos_flat = jnp.cumsum(oh_flat, axis=1) - oh_flat
+    pos = (pos_flat.reshape(B, S, K, E) * oh).sum(-1)     # (B,S,K)
+    valid = pos < C
+
+    # slot tables: token index + combine gate per (expert, slot), by scatter
+    tok_ids = jnp.broadcast_to(jnp.arange(S)[:, None], (S, K))
+    gate_flat = (gates * valid.astype(jnp.float32)).astype(jnp.float32)
+
+    def build_slots(choice_g, pos_g, gate_g):
+        st = jnp.zeros((E, C), jnp.int32)
+        sv = jnp.zeros((E, C), bool)
+        sg = jnp.zeros((E, C), jnp.float32)
+        st = st.at[choice_g.reshape(-1), pos_g.reshape(-1)].set(
+            tok_ids.reshape(-1), mode="drop")
+        sv = sv.at[choice_g.reshape(-1), pos_g.reshape(-1)].set(
+            True, mode="drop")
+        sg = sg.at[choice_g.reshape(-1), pos_g.reshape(-1)].set(
+            gate_g.reshape(-1), mode="drop")
+        return st, sv, sg
+
+    slot_tok, slot_valid, slot_gate = jax.vmap(build_slots)(
+        choice, pos, gate_flat)                                # (B,E,C)
+
+    # gather tokens into expert buffers
+    buf = jax.vmap(lambda xg, st: xg[st])(x, slot_tok)         # (B,E,C,D)
+    buf = jnp.where(slot_valid[..., None], buf, 0).astype(cd)
+    ep = m.layout == "ep"
+    buf = shard(buf, ("batch", "experts" if ep else None, None, None))
+
+    # expert FFN (grouped einsum)
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"].astype(cd))
+    hg = jnp.einsum("becd,edf->becf", buf, p["wg"].astype(cd))
+    h = act(hg) * h
+    h = shard(h, ("batch", "experts" if ep else None, None,
+                  None if ep else "ff"))
+    y = jnp.einsum("becf,efd->becd", h, p["wo"].astype(cd))    # (B,E,C,D)
+    y = shard(y, ("batch", "experts" if ep else None, None, None))
+
+    # combine: WEIGHT-THEN-SCATTER.  Each expert slot's output is scaled by
+    # its combine gate and scatter-added back to its token position.  The
+    # gate multiply happens on the expert-sharded side of the collective,
+    # so the cross-device reduction is one (B,S,D) psum — a gather-then-
+    # weight combine reduces (B,S,top_k,D) instead (top_k× the traffic;
+    # 6× for this arch — measured in EXPERIMENTS.md §Perf cell D).
+    contrib = y * slot_gate[..., None].astype(cd)              # (B,E,C,D)
+
+    def scatter_back(cg, st):
+        return jnp.zeros((S, D), cd).at[st.reshape(-1)].add(
+            cg.reshape(-1, D))
+
+    out = jax.vmap(scatter_back)(contrib, slot_tok)
+    out = shard(out, ("batch", "seq_sp", "embed"))
+
+    # aux losses (Switch-style load balance + router z-loss)
+    frac_tok = jnp.mean(oh.astype(jnp.float32).sum(2), axis=(0, 1))   # f_e
+    frac_prob = probs.mean(axis=(0, 1))                               # p_e
+    aux = E * jnp.sum(frac_tok * frac_prob) * m.aux_loss
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * m.router_z_loss
+    drop = 1.0 - valid.astype(jnp.float32).mean()
+    return out, {"aux_loss": aux, "z_loss": z, "drop_frac": drop}

@@ -1,0 +1,314 @@
+"""Layer-stack builder: every architecture family as a scanned pattern.
+
+A model is ``periods × pattern`` where the pattern is a short tuple of block
+kinds, e.g. dense = ("attn_ffn",), Jamba = an 8-layer attn/mamba/MoE weave,
+Llama-3.2-Vision = 5 layers with a gated cross-attention block at position 3.
+Per pattern position the parameters are stacked over periods and the forward
+is a single ``lax.scan`` — compile time and HLO size stay flat in depth
+(88-layer granite-34b compiles the same program as a 2-layer smoke model).
+
+Block kinds:
+  attn_ffn | attn_moe | xattn_ffn | mamba | mamba_ffn | mamba_moe
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard_activation as shard
+from . import layers as L
+from . import mamba as M
+from . import moe as MOE
+
+AUX_ZERO = {"aux_loss": jnp.float32(0.0), "z_loss": jnp.float32(0.0),
+            "drop_frac": jnp.float32(0.0)}
+
+
+def pattern_for(cfg) -> tuple[str, ...]:
+    if cfg.block_pattern:
+        return tuple(cfg.block_pattern)
+    if cfg.family == "mamba":
+        return ("mamba",)
+    if cfg.family == "vision":
+        pat = ["attn_ffn"] * cfg.xattn_period
+        pat[cfg.xattn_pos] = "xattn_ffn"
+        return tuple(pat)
+    if cfg.family == "moe":
+        if cfg.moe_every <= 1:
+            return ("attn_moe",)
+        pat = ["attn_ffn"] * cfg.moe_every
+        pat[-1] = "attn_moe"
+        return tuple(pat)
+    return ("attn_ffn",)   # dense / encoder
+
+
+def n_periods(cfg) -> int:
+    pat = pattern_for(cfg)
+    assert cfg.n_layers % len(pat) == 0, (cfg.n_layers, pat)
+    return cfg.n_layers // len(pat)
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg, kind):
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = L.rmsnorm_init(cfg.d_model)
+    if kind.startswith("attn") or kind.startswith("xattn"):
+        p["attn"], a["attn"] = L.attn_init(ks[0], cfg)
+        if kind.startswith("xattn"):
+            p["xgate"] = jnp.zeros((), jnp.float32)
+            a["xgate"] = ()
+    else:
+        p["mamba"], a["mamba"] = M.mamba_init(ks[0], cfg)
+    if kind.endswith("_ffn"):
+        p["ln2"], a["ln2"] = L.rmsnorm_init(cfg.d_model)
+        p["ffn"], a["ffn"] = L.ffn_init(ks[1], cfg)
+    elif kind.endswith("_moe"):
+        p["ln2"], a["ln2"] = L.rmsnorm_init(cfg.d_model)
+        p["moe"], a["moe"] = MOE.moe_init(ks[1], cfg)
+    return p, a
+
+
+def _block_apply(p, cfg, kind, x, positions, img):
+    aux = dict(AUX_ZERO)
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind.startswith("xattn"):
+        mix = L.attn_apply(p["attn"], cfg, h, positions, kv_src=img,
+                           causal=False)
+        mix = jnp.tanh(p["xgate"]).astype(mix.dtype) * mix
+    elif kind.startswith("attn"):
+        mix = L.attn_apply(p["attn"], cfg, h, positions)
+    else:
+        mix = M.mamba_apply(p["mamba"], cfg, h)
+    x = x + mix
+    if kind.endswith("_ffn"):
+        x = x + L.ffn_apply(p["ffn"], cfg,
+                            L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    elif kind.endswith("_moe"):
+        y, aux_m = MOE.moe_apply(p["moe"], cfg,
+                                 L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+        x = x + y
+        aux.update(aux_m)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack init / forward (train + scoring)
+# ---------------------------------------------------------------------------
+
+def stack_init(key, cfg):
+    pat = pattern_for(cfg)
+    P = n_periods(cfg)
+    params, axes = {}, {}
+    for i, kind in enumerate(pat):
+        keys = jax.random.split(jax.random.fold_in(key, i), P)
+        p_stacked = jax.vmap(lambda k: _block_init(k, cfg, kind)[0])(keys)
+        _, a_single = _block_init(keys[0], cfg, kind)
+        params[f"pos{i}"] = p_stacked
+        axes[f"pos{i}"] = jax.tree.map(
+            lambda t: ("layers",) + tuple(t), a_single,
+            is_leaf=lambda t: isinstance(t, tuple) and all(
+                isinstance(e, (str, type(None))) for e in t))
+    return params, axes
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)   # "full": save nothing
+
+
+def stack_apply(params, cfg, x, positions, img=None):
+    """Full-sequence forward. x: (B, S, D) -> (x, aux-sums)."""
+    pat = pattern_for(cfg)
+
+    def body(carry, per_params):
+        x, aux = carry
+        x = shard(x, ("batch", "seq_sp", "embed"))
+        for i, kind in enumerate(pat):
+            x, aux_i = _block_apply(per_params[f"pos{i}"], cfg, kind, x,
+                                    positions, img)
+            aux = jax.tree.map(jnp.add, aux, aux_i)
+        return (x, aux), None
+
+    body = _remat(cfg, body)
+    (x, aux), _ = jax.lax.scan(body, (x, dict(AUX_ZERO)), params)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch, max_len, dtype=None):
+    """Abstract cache structure; stacked over periods per pattern position."""
+    pat = pattern_for(cfg)
+    P = n_periods(cfg)
+
+    def stk(tree):
+        return jax.tree.map(
+            lambda t: jnp.zeros((P,) + t.shape, t.dtype) + (
+                -1 if t.dtype == jnp.int32 else 0), tree)
+
+    cache = {}
+    for i, kind in enumerate(pat):
+        if kind.startswith("xattn"):
+            c = {"k": jnp.zeros((batch, cfg.n_img_tokens, cfg.n_kv_heads,
+                                 cfg.d_head), dtype or cfg.compute_dtype),
+                 "v": jnp.zeros((batch, cfg.n_img_tokens, cfg.n_kv_heads,
+                                 cfg.d_head), dtype or cfg.compute_dtype)}
+        elif kind.startswith("attn"):
+            c = L.init_attn_cache(cfg, batch, max_len, dtype)
+        else:
+            c = M.init_mamba_cache(cfg, batch)
+        cache[f"pos{i}"] = stk(c)
+    return cache
+
+
+def precompute_cross_cache(params, cfg, cache, img):
+    """Fill the xattn positions of ``cache`` from stub image embeddings."""
+    pat = pattern_for(cfg)
+    cd = cfg.compute_dtype
+    K, dh = cfg.n_kv_heads, cfg.d_head
+    for i, kind in enumerate(pat):
+        if not kind.startswith("xattn"):
+            continue
+        blk = params[f"pos{i}"]["attn"]
+
+        def kv(wk, wv):
+            k = (img.astype(cd) @ wk.astype(cd)).reshape(
+                img.shape[0], -1, K, dh)
+            v = (img.astype(cd) @ wv.astype(cd)).reshape(
+                img.shape[0], -1, K, dh)
+            return k, v
+
+        ks, vs = jax.vmap(kv)(blk["wk"]["w"], blk["wv"]["w"])
+        cache = dict(cache)
+        cache[f"pos{i}"] = {"k": ks, "v": vs}
+    return cache
+
+
+def stack_prefill(params, cfg, x, positions, img=None, max_len=None):
+    """Forward that also materializes the decode cache.
+
+    Returns (hidden, cache).  Attention layers keep their (possibly window-
+    truncated) K/V in a cache with room for ``max_len`` positions; mamba
+    layers keep the final recurrent + conv state.
+    """
+    pat = pattern_for(cfg)
+    B, S, D = x.shape
+    max_len = max(max_len or 0, S)
+    W = cfg.sliding_window if (cfg.sliding_window and
+                               cfg.sliding_window < max_len) else 0
+
+    def grow(k):
+        if k.shape[1] == max_len:
+            return k
+        pad = jnp.zeros((B, max_len - k.shape[1]) + k.shape[2:], k.dtype)
+        return jnp.concatenate([k, pad], axis=1)
+
+    def body(x, per_params):
+        x = shard(x, ("batch", "seq_sp", "embed"))
+        caches = {}
+        for i, kind in enumerate(pat):
+            p = per_params[f"pos{i}"]
+            h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+            if kind.startswith("xattn"):
+                mix = L.attn_apply(p["attn"], cfg, h, positions, kv_src=img,
+                                   causal=False)
+                mix = jnp.tanh(p["xgate"]).astype(mix.dtype) * mix
+                cd = cfg.compute_dtype
+                K, dh = cfg.n_kv_heads, cfg.d_head
+                caches[f"pos{i}"] = {
+                    "k": (img.astype(cd) @ p["attn"]["wk"]["w"].astype(cd)
+                          ).reshape(B, -1, K, dh),
+                    "v": (img.astype(cd) @ p["attn"]["wv"]["w"].astype(cd)
+                          ).reshape(B, -1, K, dh)}
+            elif kind.startswith("attn"):
+                mix = L.attn_apply(p["attn"], cfg, h, positions)
+                q, k, v = L._project_qkv(p["attn"], cfg, h, h, positions,
+                                         positions)
+                if W:
+                    if S >= W:
+                        # ring invariant: slot j holds position p, p % W == j
+                        kw = jnp.roll(k[:, -W:], S % W, axis=1)
+                        vw = jnp.roll(v[:, -W:], S % W, axis=1)
+                        sp = _ring_positions(S, W, B)
+                    else:
+                        pad = jnp.zeros((B, W - S) + k.shape[2:], k.dtype)
+                        kw = jnp.concatenate([k, pad], axis=1)
+                        vw = jnp.concatenate([v, pad], axis=1)
+                        sp = jnp.concatenate(
+                            [jnp.broadcast_to(jnp.arange(S), (B, S)),
+                             jnp.full((B, W - S), -1)], axis=1).astype(
+                                 jnp.int32)
+                    caches[f"pos{i}"] = {"k": kw, "v": vw, "slot_pos": sp}
+                else:
+                    caches[f"pos{i}"] = {"k": grow(k), "v": grow(v)}
+            else:
+                mix, st = M.mamba_prefill(p["mamba"], cfg, h)
+                caches[f"pos{i}"] = st
+            x = x + mix
+            if kind.endswith("_ffn"):
+                x = x + L.ffn_apply(p["ffn"], cfg,
+                                    L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+            elif kind.endswith("_moe"):
+                y, _ = MOE.moe_apply(p["moe"], cfg,
+                                     L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+                x = x + y
+        return x, caches
+
+    x, cache = jax.lax.scan(body, x, params)
+    return x, cache
+
+
+def _ring_positions(S, W, B):
+    """Absolute positions of ring slots after prefilling S tokens: slot
+    j holds position p with p % W == j and p in [S-W, S)."""
+    base = jnp.arange(W)
+    start = S - W
+    pos = start + (base - (start % W)) % W
+    return jnp.broadcast_to(pos, (B, W)).astype(jnp.int32)
+
+
+def stack_decode(params, cfg, x, pos, cache):
+    """One-token decode. x: (B, 1, D); pos: (B,). Returns (x, cache)."""
+    pat = pattern_for(cfg)
+
+    def body(x, scanned):
+        per_params, per_cache = scanned
+        new_cache = {}
+        for i, kind in enumerate(pat):
+            p = per_params[f"pos{i}"]
+            c = per_cache[f"pos{i}"]
+            h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+            if kind.startswith("xattn"):
+                mix, nc = L.attn_decode(p["attn"], cfg, h, c, pos,
+                                        kv_src="static")
+                mix = jnp.tanh(p["xgate"]).astype(mix.dtype) * mix
+            elif kind.startswith("attn"):
+                mix, nc = L.attn_decode(p["attn"], cfg, h, c, pos)
+            else:
+                mix, nc = M.mamba_decode(p["mamba"], cfg, h, c)
+            new_cache[f"pos{i}"] = nc
+            x = x + mix
+            if kind.endswith("_ffn"):
+                x = x + L.ffn_apply(p["ffn"], cfg,
+                                    L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+            elif kind.endswith("_moe"):
+                y, _ = MOE.moe_apply(p["moe"], cfg,
+                                     L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+                x = x + y
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params, cache))
+    return x, new_cache

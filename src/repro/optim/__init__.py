@@ -1,0 +1,2 @@
+"""Optimizers + schedules."""
+from . import adamw  # noqa: F401

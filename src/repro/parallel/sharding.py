@@ -1,0 +1,147 @@
+"""Logical-axis sharding rules (MaxText-style) for params and activations.
+
+Model code annotates tensors with *logical* axis names; a ``Rules`` object
+(mesh + two name→mesh-axis dicts) resolves them to ``PartitionSpec``s.  With
+no rules installed (CPU unit tests) every annotation is a no-op, so the same
+model code runs from 1 CPU device to the 512-chip production mesh.
+
+Mesh axes: ``("pod", "data", "model")`` multi-pod or ``("data", "model")``
+single-pod.  DP spans pod×data; TP/EP/SP span model.
+
+Param logical names        → default mapping
+  embed                      "data" when FSDP else None   (d_model dims)
+  ff / heads_q / vocab       "model"                      (TP dims)
+  heads_kv                   "model" when (K·dh) % tp == 0 else None
+  experts                    "model" for EP-MoE layouts
+  mamba_inner                "model"  (Mamba TP: d_inner)
+  layers / none              None
+
+Activation logical names   → default mapping
+  batch                      ("pod", "data")  /  ("data",)
+  seq_sp                     "model" when sequence-parallel is on else None
+  heads_q                    "model"
+  heads_kv                   "model" when K % tp == 0 else None
+  ff / vocab / experts       "model"
+  kv_seq                     "model"  (decode caches with few kv heads)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _current() -> "Rules | None":
+    return getattr(_state, "rules", None)
+
+
+@dataclass
+class Rules:
+    mesh: Mesh
+    param_map: dict
+    act_map: dict
+
+    def spec(self, axes, table) -> P:
+        parts = []
+        for name in axes:
+            if name is None:
+                parts.append(None)
+            else:
+                parts.append(table.get(name))
+        return P(*parts)
+
+    def param_spec(self, axes) -> P:
+        return self.spec(axes, self.param_map)
+
+    def act_spec(self, axes) -> P:
+        return self.spec(axes, self.act_map)
+
+    def param_sharding(self, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.param_spec(axes))
+
+
+def make_rules(mesh: Mesh, *, fsdp: bool = True, seq_parallel: bool = False,
+               kv_heads: int = 1, d_head: int = 128,
+               overrides: dict | None = None) -> Rules:
+    axis_names = mesh.axis_names
+    tp = mesh.shape["model"] if "model" in axis_names else 1
+    dp_axes = tuple(a for a in ("pod", "data") if a in axis_names)
+    kv_w_ok = (kv_heads * d_head) % tp == 0
+    kv_a_ok = kv_heads % tp == 0
+
+    param_map = {
+        "embed": "data" if (fsdp and "data" in axis_names) else None,
+        "ff": "model",
+        "heads_q": "model",
+        "heads_kv": "model" if kv_w_ok else None,
+        "vocab": "model",
+        "experts": "model",
+        "mamba_inner": "model",
+        "none": None,
+    }
+    act_map = {
+        "batch": dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None),
+        "seq_sp": "model" if seq_parallel else None,
+        "heads_q": "model",
+        "heads_kv": "model" if kv_a_ok else None,
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "mamba_inner": "model",
+        # decode caches: shard kv-heads over model when divisible, else fall
+        # back to sharding the cache sequence axis (MQA / long-context)
+        "kv_seq": None if kv_a_ok else "model",
+        "none": None,
+    }
+    if overrides:
+        for k, v in overrides.items():
+            if k.startswith("act:"):
+                act_map[k[4:]] = v
+            else:
+                param_map[k] = v
+    return Rules(mesh=mesh, param_map=param_map, act_map=act_map)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules | None):
+    prev = _current()
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def shard_activation(x, axes):
+    """Annotate an activation with logical axes (no-op without rules)."""
+    r = _current()
+    if r is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"axes {axes} vs rank {x.ndim}")
+    spec = r.act_spec(axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+def partition_params(axes_tree, rules: Rules):
+    """Map an axes pytree (parallel to params) to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: rules.param_sharding(axes),
+        axes_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t))
+
+
+def param_specs(axes_tree, rules: Rules):
+    return jax.tree.map(
+        lambda axes: rules.param_spec(axes),
+        axes_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t))

@@ -1,0 +1,1 @@
+"""Training/serving runtime: step factories, fault tolerance."""

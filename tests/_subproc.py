@@ -1,0 +1,27 @@
+"""Run a JAX snippet in a subprocess with N forced host devices.
+
+The main pytest process must keep the default single CPU device (the
+dry-run is the only place 512 devices are forced), so multi-device
+collective tests re-exec in a child process.
+"""
+
+import os
+import subprocess
+import sys
+
+REPO_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout=600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode}):\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    return proc.stdout

@@ -1,0 +1,93 @@
+"""Unit tests for AE word packing and the functional FIFO."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import events
+from repro.core.fifo import (Fifo, fifo_empty, fifo_full, fifo_peek, fifo_pop,
+                             fifo_push, make_fifo)
+
+
+class TestAerAddress:
+    def test_roundtrip(self):
+        core = jnp.array([0, 3, 512], dtype=jnp.uint32)
+        neuron = jnp.array([0, 65535, 1234], dtype=jnp.uint32)
+        word = events.pack_aer_address(core, neuron)
+        c2, n2 = events.unpack_aer_address(word)
+        np.testing.assert_array_equal(np.array(c2), np.array(core))
+        np.testing.assert_array_equal(np.array(n2), np.array(neuron))
+
+    def test_word_fits_26_bits(self):
+        word = events.pack_aer_address(jnp.uint32(1023), jnp.uint32(65535))
+        assert int(word) < (1 << 26)
+
+
+class TestPayloadEvents:
+    def test_roundtrip_exact_for_bf16_values(self):
+        idx = jnp.arange(16, dtype=jnp.int32)
+        val = jnp.array([0.0, 1.0, -2.5, 0.15625] * 4, dtype=jnp.float32)
+        words = events.pack_events(idx, val)
+        i2, v2 = events.unpack_events(words)
+        np.testing.assert_array_equal(np.array(i2), np.array(idx))
+        np.testing.assert_array_equal(np.array(v2), np.array(val))
+
+    def test_quantisation_error_bound(self):
+        rng = np.random.default_rng(0)
+        val = jnp.array(rng.standard_normal(1024), dtype=jnp.float32)
+        idx = jnp.arange(1024) % events.EVENT_MAX_BLOCK
+        _, v2 = events.unpack_events(events.pack_events(idx, val))
+        rel = np.abs(np.array(v2) - np.array(val)) / (np.abs(np.array(val)) + 1e-30)
+        assert rel.max() <= events.roundtrip_error_bound()
+
+    def test_index_wraps_at_16_bits(self):
+        words = events.pack_events(jnp.int32(65537), jnp.float32(1.0))
+        i2, _ = events.unpack_events(words)
+        assert int(i2) == 1
+
+
+class TestFifo:
+    def test_push_pop_order(self):
+        f = make_fifo(4)
+        for v in [10, 20, 30]:
+            f, ok = fifo_push(f, jnp.uint32(v))
+            assert bool(ok)
+        out = []
+        for _ in range(3):
+            f, v, ok = fifo_pop(f)
+            assert bool(ok)
+            out.append(int(v))
+        assert out == [10, 20, 30]
+        assert bool(fifo_empty(f))
+
+    def test_overflow_reported_and_dropped(self):
+        f = make_fifo(2)
+        f, _ = fifo_push(f, jnp.uint32(1))
+        f, _ = fifo_push(f, jnp.uint32(2))
+        assert bool(fifo_full(f))
+        f, ok = fifo_push(f, jnp.uint32(3))
+        assert not bool(ok)
+        f, v, _ = fifo_pop(f)
+        assert int(v) == 1  # oldest survives, overflow dropped
+
+    def test_pop_empty_reports(self):
+        f = make_fifo(2)
+        f, _, ok = fifo_pop(f)
+        assert not bool(ok)
+
+    def test_wraparound(self):
+        f = make_fifo(2)
+        seq = [1, 2, 3, 4, 5]
+        got = []
+        for v in seq:
+            f, _ = fifo_push(f, jnp.uint32(v))
+            f, out, ok = fifo_pop(f)
+            got.append(int(out))
+        assert got == seq
+
+    def test_peek_nondestructive(self):
+        f = make_fifo(3)
+        f, _ = fifo_push(f, jnp.uint32(42))
+        v, ne = fifo_peek(f)
+        assert int(v) == 42 and bool(ne)
+        assert int(f.count) == 1

@@ -1,0 +1,171 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle across
+shape/dtype sweeps + hypothesis property tests on the compression invariants.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.aer_decode import aer_decode_pallas
+from repro.kernels.aer_encode import aer_encode_pallas
+from repro.kernels.lif_step import lif_step_pallas
+
+
+def rand(shape, dtype, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+ENC_SHAPES = [
+    (4, 256, 32), (8, 1024, 128), (16, 512, 64), (4, 2048, 256),
+    (2, 128, 128),   # budget == block
+    (12, 384, 48),   # non-128-aligned block (interpret; TPU would pad)
+]
+
+
+class TestAerEncode:
+    @pytest.mark.parametrize("nb,block,budget", ENC_SHAPES)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, nb, block, budget, dtype):
+        x = rand((nb, block), dtype, seed=nb * block)
+        tau = ops.tau_from_fraction(x, 0.05)
+        rpb = 4 if nb % 4 == 0 else (2 if nb % 2 == 0 else 1)
+        idx_k, val_k, cnt_k, want_k = aer_encode_pallas(
+            x, tau, budget, rows_per_block=rpb, interpret=True)
+        idx_r, val_r, cnt_r, want_r = ref.aer_encode(x, tau, budget)
+        np.testing.assert_array_equal(np.array(idx_k), np.array(idx_r))
+        np.testing.assert_allclose(np.array(val_k, np.float32),
+                                   np.array(val_r, np.float32),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.array(cnt_k), np.array(cnt_r))
+        np.testing.assert_array_equal(np.array(want_k), np.array(want_r))
+
+    def test_budget_overflow_keeps_first_in_index_order(self):
+        x = jnp.ones((1, 64), jnp.float32)
+        idx, val, cnt, want = ref.aer_encode(x, jnp.array([0.5]), 8)
+        assert int(cnt[0]) == 8 and int(want[0]) == 64
+        np.testing.assert_array_equal(np.array(idx[0]), np.arange(8))
+
+    def test_void_slots_are_minus_one(self):
+        x = jnp.zeros((1, 128), jnp.float32).at[0, 5].set(3.0)
+        idx, val, cnt, _ = ref.aer_encode(x, jnp.array([1.0]), 16)
+        assert int(cnt[0]) == 1
+        assert int(idx[0, 0]) == 5
+        assert (np.array(idx[0, 1:]) == -1).all()
+
+    def test_zero_threshold_selects_everything_up_to_budget(self):
+        x = rand((2, 256), jnp.float32, 3) + 10.0
+        idx, val, cnt, want = ref.aer_encode(x, jnp.zeros(2), 64)
+        assert (np.array(cnt) == 64).all() and (np.array(want) == 256).all()
+
+
+class TestAerDecode:
+    @pytest.mark.parametrize("nb,block,budget", ENC_SHAPES)
+    def test_roundtrip_reconstructs_selected(self, nb, block, budget):
+        x = rand((nb, block), jnp.float32, seed=7)
+        tau = ops.tau_from_fraction(x, min(0.9 * budget / block, 0.05))
+        evb = ops.aer_compress(x, tau, budget, interpret=True)
+        dense = ops.aer_decompress(evb, block, interpret=True)
+        dense_r = ref.aer_decode(evb.idx, evb.val, block)
+        np.testing.assert_allclose(np.array(dense), np.array(dense_r),
+                                   rtol=1e-6, atol=1e-6)
+        # every emitted event is reconstructed exactly at its address
+        idx = np.array(evb.idx)
+        val = np.array(evb.val)
+        d = np.array(dense)
+        for r in range(nb):
+            for e in range(budget):
+                if idx[r, e] >= 0:
+                    assert d[r, idx[r, e]] == pytest.approx(val[r, e], abs=1e-6)
+
+    def test_duplicate_addresses_accumulate(self):
+        idx = jnp.array([[3, 3, -1, -1]], jnp.int32)
+        val = jnp.array([[1.5, 2.0, 9.0, 9.0]], jnp.float32)
+        dense = aer_decode_pallas(idx, val, 8, rows_per_block=1, interpret=True)
+        assert float(dense[0, 3]) == pytest.approx(3.5)
+        assert float(jnp.sum(jnp.abs(dense))) == pytest.approx(3.5)
+
+
+class TestLif:
+    @pytest.mark.parametrize("rows,lanes", [(8, 128), (32, 256), (8, 384),
+                                            (64, 128)])
+    @pytest.mark.parametrize("decay,v_th", [(0.9, 1.0), (0.5, 0.3)])
+    def test_matches_oracle(self, rows, lanes, decay, v_th):
+        v = rand((rows, lanes), jnp.float32, 1)
+        i = rand((rows, lanes), jnp.float32, 2)
+        vk, sk = lif_step_pallas(v, i, decay=decay, v_th=v_th, v_reset=0.0,
+                                 block_rows=8, interpret=True)
+        vr, sr = ref.lif_step(v, i, decay, v_th, 0.0)
+        np.testing.assert_allclose(np.array(vk), np.array(vr), atol=1e-6)
+        np.testing.assert_array_equal(np.array(sk), np.array(sr))
+
+    def test_spike_resets_membrane(self):
+        v = jnp.full((8, 128), 2.0, jnp.float32)
+        i = jnp.zeros((8, 128), jnp.float32)
+        vk, sk = ops.lif_step(v, i, decay=1.0, v_th=1.0, v_reset=-0.2)
+        assert (np.array(sk) == 1.0).all()
+        assert np.allclose(np.array(vk), -0.2)
+
+
+class TestErrorFeedback:
+    def test_feedback_conserves_mass(self):
+        """compressed + residual == input (+ prior residual), exactly."""
+        x = rand((1, 4096), jnp.float32, 11).reshape(-1)
+        res0 = jnp.zeros_like(x)
+        evb, res1, n = ops.compress_with_feedback(x, res0, frac=0.03)
+        dec = ops.unpad_from_blocks(
+            ops.aer_decompress(evb, ops.DEFAULT_BLOCK), n, x.shape)
+        np.testing.assert_allclose(np.array(dec + res1), np.array(x),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_residual_drains_over_steps(self):
+        """A one-shot signal fully transmits over repeated steps: feed x
+        once, then zeros; the error-feedback residual drains to nothing."""
+        x = rand((1, 2048), jnp.float32, 5).reshape(-1)
+        res = jnp.zeros_like(x)
+        total = jnp.zeros_like(x)
+        inp = x
+        for _ in range(60):
+            # ~20% of entries ship per step -> residual decays as 0.8^k
+            evb, res, n = ops.compress_with_feedback(inp, res, frac=0.2,
+                                                     budget=256)
+            total = total + ops.unpad_from_blocks(
+                ops.aer_decompress(evb, ops.DEFAULT_BLOCK), n, x.shape)
+            inp = jnp.zeros_like(x)
+        np.testing.assert_allclose(np.array(total), np.array(x), atol=1e-3)
+        assert float(jnp.max(jnp.abs(res))) < 1e-3
+
+
+@settings(max_examples=25, deadline=None)
+@given(nb=st.sampled_from([1, 2, 4]), block=st.sampled_from([128, 256, 512]),
+       budget=st.sampled_from([16, 64, 128]), frac=st.floats(0.01, 0.5),
+       seed=st.integers(0, 2**16))
+def test_property_encode_invariants(nb, block, budget, frac, seed):
+    """Invariants: counts bounded by budget; emitted indices strictly
+    increasing per block; every emitted value is over threshold."""
+    x = rand((nb, block), jnp.float32, seed)
+    tau = ops.tau_from_fraction(x, frac)
+    idx, val, cnt, want = ref.aer_encode(x, tau, budget)
+    idx, val, cnt, want = map(np.array, (idx, val, cnt, want))
+    assert (cnt <= budget).all() and (cnt <= want).all()
+    for r in range(nb):
+        v = idx[r, :cnt[r]]
+        assert (np.diff(v) > 0).all()          # strictly increasing addresses
+        assert (v >= 0).all()
+        assert (np.abs(val[r, :cnt[r]]) >= np.array(tau)[r] - 1e-6).all()
+        assert (idx[r, cnt[r]:] == -1).all()   # void slots after count
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), frac=st.floats(0.01, 0.2))
+def test_property_pallas_equals_ref(seed, frac):
+    x = rand((4, 512), jnp.float32, seed)
+    tau = ops.tau_from_fraction(x, frac)
+    k = aer_encode_pallas(x, tau, 64, rows_per_block=4, interpret=True)
+    r = ref.aer_encode(x, tau, 64)
+    for a, b in zip(k, r):
+        np.testing.assert_allclose(np.array(a, np.float32),
+                                   np.array(b, np.float32), atol=1e-6)

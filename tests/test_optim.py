@@ -1,0 +1,77 @@
+"""AdamW + schedule unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw
+
+
+def tree(val=1.0):
+    return {"a": jnp.full((4,), val, jnp.float32),
+            "b": {"w": jnp.full((2, 3), val, jnp.float32)}}
+
+
+class TestAdamW:
+    def test_first_step_matches_closed_form(self):
+        """With bias correction, step 1 update = lr * g/(|g| + eps) + wd."""
+        params = tree(1.0)
+        grads = tree(0.5)
+        state = adamw.init(params)
+        lr, wd = 0.1, 0.0
+        new, state, gnorm = adamw.update(grads, state, params, lr=lr,
+                                         weight_decay=wd, grad_clip=0.0)
+        # mhat = g, vhat = g^2  ->  delta = g/(|g|+eps) = sign(g)
+        for leaf in jax.tree.leaves(new):
+            np.testing.assert_allclose(np.asarray(leaf), 1.0 - lr,
+                                       rtol=1e-5)
+
+    def test_weight_decay_pulls_to_zero(self):
+        params = tree(1.0)
+        grads = tree(0.0)
+        state = adamw.init(params)
+        new, _, _ = adamw.update(grads, state, params, lr=0.1,
+                                 weight_decay=0.5, grad_clip=0.0)
+        for leaf in jax.tree.leaves(new):
+            assert np.all(np.asarray(leaf) < 1.0)
+
+    def test_grad_clip_bounds_global_norm(self):
+        grads = tree(100.0)
+        clipped, norm = adamw.clip_by_global_norm(grads, 1.0)
+        assert float(norm) > 1.0
+        assert float(adamw.global_norm(clipped)) == pytest.approx(1.0,
+                                                                  rel=1e-5)
+
+    def test_moments_are_fp32_regardless_of_param_dtype(self):
+        params = {"w": jnp.ones((4,), jnp.bfloat16)}
+        state = adamw.init(params)
+        assert state.mu["w"].dtype == jnp.float32
+        new, state, _ = adamw.update({"w": jnp.ones((4,), jnp.bfloat16)},
+                                     state, params, lr=0.1)
+        assert new["w"].dtype == jnp.bfloat16    # params keep their dtype
+        assert state.nu["w"].dtype == jnp.float32
+
+    def test_step_counter_increments(self):
+        params = tree()
+        state = adamw.init(params)
+        _, state, _ = adamw.update(tree(0.1), state, params, lr=0.1)
+        _, state, _ = adamw.update(tree(0.1), state, params, lr=0.1)
+        assert int(state.step) == 2
+
+
+class TestSchedule:
+    def test_warmup_then_cosine(self):
+        lr0 = float(adamw.warmup_cosine(jnp.int32(0), base_lr=1.0,
+                                        warmup_steps=10, total_steps=100))
+        lr5 = float(adamw.warmup_cosine(jnp.int32(5), base_lr=1.0,
+                                        warmup_steps=10, total_steps=100))
+        lr10 = float(adamw.warmup_cosine(jnp.int32(10), base_lr=1.0,
+                                         warmup_steps=10, total_steps=100))
+        lr100 = float(adamw.warmup_cosine(jnp.int32(100), base_lr=1.0,
+                                          warmup_steps=10, total_steps=100))
+        assert lr0 == 0.0
+        assert lr5 == pytest.approx(0.5)
+        assert lr10 == pytest.approx(1.0)
+        assert lr100 == pytest.approx(0.1)   # final_frac
+        assert lr0 <= lr5 <= lr10

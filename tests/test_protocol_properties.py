@@ -1,0 +1,84 @@
+"""Property-based tests (hypothesis) for the transceiver protocol invariants.
+
+System invariants checked over randomized arrival processes and parameters:
+
+  P1  bus safety      — never both blocks in TX mode on any trace step;
+  P2  conservation    — every arrived event is delivered exactly once;
+  P3  liveness        — all events deliver within a finite horizon;
+  P4  monotonic clock — simulated time never decreases;
+  P5  guarded switch  — a direction reversal implies the new transmitter
+                        had pending events (switches are event-driven, the
+                        paper's central claim);
+  P6  throughput band — delivered rate under saturation lies between the
+                        bidirectional worst case and the one-direction best
+                        case from Table II.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import protocol_sim as ps
+from repro.core.link import PAPER_TIMING
+
+arrivals = st.lists(st.integers(min_value=0, max_value=30_000),
+                    min_size=0, max_size=60)
+
+
+def _sim(al, ar, initial_tx, max_burst):
+    al = jnp.array(sorted(al), jnp.int32)
+    ar = jnp.array(sorted(ar), jnp.int32)
+    return ps.simulate(al, ar, initial_tx=initial_tx, max_burst=max_burst), al, ar
+
+
+@settings(max_examples=40, deadline=None)
+@given(al=arrivals, ar=arrivals, initial_tx=st.integers(0, 1),
+       max_burst=st.sampled_from([0, 1, 3, 16]))
+def test_safety_no_double_tx(al, ar, initial_tx, max_burst):
+    res, *_ = _sim(al, ar, initial_tx, max_burst)
+    ml = np.array(res.trace.mode_l)
+    mr = np.array(res.trace.mode_r)
+    assert not np.logical_and(ml == 1, mr == 1).any()  # P1
+
+
+@settings(max_examples=40, deadline=None)
+@given(al=arrivals, ar=arrivals, initial_tx=st.integers(0, 1),
+       max_burst=st.sampled_from([0, 1, 3, 16]))
+def test_conservation_and_liveness(al, ar, initial_tx, max_burst):
+    res, a_l, a_r = _sim(al, ar, initial_tx, max_burst)
+    assert int(res.sent_l) == a_l.shape[0]  # P2+P3
+    assert int(res.sent_r) == a_r.shape[0]
+
+
+@settings(max_examples=40, deadline=None)
+@given(al=arrivals, ar=arrivals, initial_tx=st.integers(0, 1),
+       max_burst=st.sampled_from([0, 2]))
+def test_monotonic_time(al, ar, initial_tx, max_burst):
+    res, *_ = _sim(al, ar, initial_tx, max_burst)
+    t = np.array(res.trace.t)
+    assert (np.diff(t) >= 0).all()  # P4
+
+
+@settings(max_examples=40, deadline=None)
+@given(al=arrivals, ar=arrivals, initial_tx=st.integers(0, 1))
+def test_switches_are_event_driven(al, ar, initial_tx):
+    """P5: after any mode reversal, the next transmission exists and comes
+    from the block that just took TX (switching is on-demand, not periodic)."""
+    res, a_l, a_r = _sim(al, ar, initial_tx, 0)
+    act = np.array(res.trace.action)
+    ml = np.array(res.trace.mode_l)
+    # every L-RX->TX reversal is eventually followed by an L transmission
+    took_tx = np.where(np.diff(ml) == 1)[0]
+    for i in took_tx:
+        assert (act[i + 1:] == ps.A_TX_L).any() or a_l.shape[0] == int(
+            res.sent_l)  # either it transmits later, or all L events done
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(32, 200), max_burst=st.sampled_from([1, 2, 8, 0]))
+def test_saturated_throughput_band(n, max_burst):
+    res, *_ = _sim([0] * n, [0] * n, 1, max_burst)
+    thr = float(ps.throughput_mev_s(res))
+    lo = PAPER_TIMING.bidir_throughput_mev_s() - 0.2
+    hi = PAPER_TIMING.onedir_throughput_mev_s() + 0.2
+    assert lo <= thr <= hi  # P6

@@ -1,0 +1,86 @@
+"""Logical-axis rules: resolution, divisibility fallbacks, param specs."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (make_rules, param_specs, partition_params,
+                                     shard_activation, use_rules)
+
+
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+class TestRules:
+    def test_param_map_defaults(self):
+        r = make_rules(mesh11(), kv_heads=8, d_head=128)
+        assert r.param_map["ff"] == "model"
+        assert r.param_map["embed"] == "data"       # FSDP on
+        assert r.param_map["heads_kv"] == "model"   # 8*128 % 1 == 0
+
+    def test_no_fsdp(self):
+        r = make_rules(mesh11(), fsdp=False, kv_heads=8, d_head=128)
+        assert r.param_map["embed"] is None
+
+    def test_kv_fallback_to_seq_sharding(self):
+        # tp=16 with 8 kv heads: activations replicate heads, shard cache seq
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        r = make_rules(mesh, kv_heads=8, d_head=128)
+        tp = mesh.shape["model"]
+        if 8 % tp == 0:
+            assert r.act_map["kv_seq"] is None
+        r2 = make_rules(mesh, kv_heads=3, d_head=100)  # never divisible
+        # with tp=1 everything divides; simulate via direct dict check
+        assert "kv_seq" in r2.act_map
+
+    def test_seq_parallel_toggle(self):
+        r = make_rules(mesh11(), seq_parallel=True, kv_heads=8, d_head=128)
+        assert r.act_map["seq_sp"] == "model"
+        r2 = make_rules(mesh11(), seq_parallel=False, kv_heads=8, d_head=128)
+        assert r2.act_map["seq_sp"] is None
+
+    def test_partition_params_maps_axes_tree(self):
+        r = make_rules(mesh11(), kv_heads=8, d_head=128)
+        axes = {"w": ("embed", "ff"), "b": ("none",), "g": ()}
+        specs = param_specs(axes, r)
+        assert specs["w"] == P("data", "model")
+        assert specs["b"] == P(None)
+        assert specs["g"] == P()
+
+    def test_shard_activation_noop_without_rules(self):
+        x = jnp.ones((4, 8))
+        assert shard_activation(x, ("batch", None)) is x
+
+    def test_shard_activation_rank_mismatch_raises(self):
+        r = make_rules(mesh11(), kv_heads=8, d_head=128)
+        with use_rules(r):
+            with pytest.raises(ValueError):
+                shard_activation(jnp.ones((4, 8)), ("batch",))
+
+    def test_shard_activation_applies_constraint_under_jit(self):
+        r = make_rules(mesh11(), kv_heads=8, d_head=128)
+
+        @jax.jit
+        def f(x):
+            with use_rules(r):
+                return shard_activation(x, ("batch", None)) * 2
+
+        out = f(jnp.ones((4, 8)))
+        assert out.shape == (4, 8)
+
+
+class TestVocabPadding:
+    def test_padded_vocab(self):
+        from repro.models.layers import padded_vocab
+        assert padded_vocab(49155) % 128 == 0
+        assert padded_vocab(49152) == 49152
+        assert padded_vocab(504) == 512
+
+    def test_padded_logits_never_win(self):
+        from repro.models.layers import mask_padded_vocab
+        logits = jnp.zeros((2, 3, 512))
+        masked = mask_padded_vocab(logits, 504)
+        am = jnp.argmax(masked, -1)
+        assert (am < 504).all()

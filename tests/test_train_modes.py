@@ -1,0 +1,66 @@
+"""Integration: manual-DP training with each gradient-reduction schedule
+(the paper technique) matches / tracks the dense psum baseline (subprocess,
+4 forced host devices)."""
+
+import pytest
+
+from tests._subproc import run_with_devices
+
+CODE = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import RunConfig, get_smoke_config
+from repro.data import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import build_model
+from repro.parallel.sharding import make_rules
+from repro.runtime.train_loop import init_state, make_train_step
+
+STEPS = 12
+
+def train(mode):
+    cfg = get_smoke_config("granite_3_2b")
+    run_cfg = RunConfig(learning_rate=1e-3, warmup_steps=2,
+                        total_steps=STEPS, dp_reduce=mode, aer_frac=0.1,
+                        aer_budget=256, fsdp=False)
+    model = build_model(cfg)
+    mesh = make_host_mesh(data=4, model=1)
+    rules = make_rules(mesh, fsdp=False, kv_heads=cfg.n_kv_heads,
+                       d_head=cfg.d_head)
+    data = SyntheticLM(cfg.vocab, 16, 8, seed=7)
+    state = init_state(model, jax.random.PRNGKey(0), run_cfg)
+    step = make_train_step(model, run_cfg, rules)
+    losses = []
+    for s in range(STEPS):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    return np.array(losses), state
+
+l_psum, s_psum = train("psum")
+l_ring, s_ring = train("ring")
+l_bidi, s_bidi = train("bidir_ring")
+l_aer, s_aer = train("aer_topk")
+
+# same math, different reduction ORDER: float-noise compounds
+# through optimizer steps -> tolerance is loose but far from the AER band
+assert np.allclose(l_psum, l_ring, atol=8e-3), (l_psum - l_ring)
+assert np.allclose(l_psum, l_bidi, atol=8e-3), (l_psum - l_bidi)
+# AER: lossy but convergent — tracks the psum band (at 12 steps the
+# error-feedback ramp makes per-step decrease noisy; the longer-run
+# decrease is covered by examples/sparse_allreduce_demo.py at 40 steps)
+assert abs(l_aer[-1] - l_psum[-1]) < 0.35, (l_aer[-1], l_psum[-1])
+assert np.isfinite(l_aer).all()
+# params of exact schedules agree up to compounded reduction-order noise
+# (AdamW's rsqrt normalization amplifies ulp-level gradient differences;
+# bitwise equality is a property of restart replay, not of re-ordered sums)
+pa = jax.tree.leaves(s_psum.params); pb = jax.tree.leaves(s_bidi.params)
+d = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(pa, pb))
+assert d < 5e-2, d
+print("MODES-OK", l_psum[-1], l_aer[-1])
+"""
+
+
+@pytest.mark.slow
+def test_dp_reduce_modes_track_psum():
+    out = run_with_devices(CODE, 4, timeout=1800)
+    assert "MODES-OK" in out

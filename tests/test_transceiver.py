@@ -1,0 +1,120 @@
+"""Unit tests for the SW_Control FSM — Table I rows + the three mode-switch
+guards of paper §II."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core.transceiver import RX, TX, XcvrState, reset_state, step
+
+
+def mk(mode, sw_ack, rx_p=1, burst=0):
+    return XcvrState(mode=jnp.int32(mode), sw_ack=jnp.int32(sw_ack),
+                     rx_p=jnp.int32(rx_p), burst=jnp.int32(burst))
+
+
+class TestReset:
+    def test_tx_block_holds_bus(self):
+        s = reset_state(TX)
+        assert int(s.mode) == TX and int(s.sw_ack) == 1
+
+    def test_rx_block_gets_probe_exemption(self):
+        # "except that this block is initially reset to RX mode for a
+        #  chip-level global reset" — rx_p starts at 1 so it may request
+        # before ever receiving.
+        s = reset_state(RX)
+        assert int(s.mode) == RX and int(s.rx_p) == 1 and int(s.sw_ack) == 0
+
+
+class TestTableI:
+    """Mode resolution for each (sw_ack, sw_req) row of Table I."""
+
+    def test_row_tx_steady(self):
+        # sw_ack=1, sw_req=0 -> TX
+        s, _ = step(mk(TX, 1), sw_req=0, tx_pending=3, rx_strobe=0)
+        assert int(s.mode) == TX
+
+    def test_row_rx_steady(self):
+        # sw_ack=0, sw_req=1 -> RX
+        s, _ = step(mk(RX, 0, rx_p=0), sw_req=1, tx_pending=0, rx_strobe=0)
+        assert int(s.mode) == RX
+
+    def test_row_contended_holds(self):
+        # (1,1): switch pending — current TX holds the bus
+        s, _ = step(mk(TX, 1), sw_req=1, tx_pending=5, rx_strobe=0)
+        assert int(s.mode) == TX
+
+    def test_row_rx_requesting_holds_until_grant(self):
+        # RX side requesting while TX still busy: stays RX
+        s, _ = step(mk(RX, 1), sw_req=1, tx_pending=2, rx_strobe=0)
+        assert int(s.mode) == RX
+
+    def test_grant_edge_switches_requester_to_tx(self):
+        # peer deasserted (sw_req 1->0) while we request -> we take TX
+        s, out = step(mk(RX, 1), sw_req=0, tx_pending=2, rx_strobe=0)
+        assert int(s.mode) == TX and int(out.switched) == 1
+
+    def test_request_edge_switches_granter_to_rx(self):
+        # we granted (ack->0) and peer requests -> we drop to RX
+        s, out = step(mk(TX, 1), sw_req=1, tx_pending=0, rx_strobe=0)
+        assert int(s.mode) == RX and int(out.switched) == 1
+
+
+class TestRequestGuards:
+    """RX→TX request iff: in RX ∧ received ≥1 event in RX ∧ events pending."""
+
+    def test_requests_when_all_guards_met(self):
+        s, _ = step(mk(RX, 0, rx_p=1), sw_req=1, tx_pending=4, rx_strobe=0)
+        assert int(s.sw_ack) == 1
+
+    def test_no_request_without_rx_probe(self):
+        s, _ = step(mk(RX, 0, rx_p=0), sw_req=1, tx_pending=4, rx_strobe=0)
+        assert int(s.sw_ack) == 0
+
+    def test_no_request_without_pending_events(self):
+        s, _ = step(mk(RX, 0, rx_p=1), sw_req=1, tx_pending=0, rx_strobe=0)
+        assert int(s.sw_ack) == 0
+
+    def test_rx_strobe_sets_probe_then_enables_request(self):
+        s, _ = step(mk(RX, 0, rx_p=0), sw_req=1, tx_pending=4, rx_strobe=1)
+        assert int(s.rx_p) == 1 and int(s.sw_ack) == 1
+
+    def test_probe_clears_on_entering_rx(self):
+        # TX that grants away enters RX with a cleared probe
+        s, _ = step(mk(TX, 1, rx_p=1), sw_req=1, tx_pending=0, rx_strobe=0)
+        assert int(s.mode) == RX and int(s.rx_p) == 0
+
+
+class TestGrantGuards:
+    """TX→RX grant iff: in TX ∧ peer requests ∧ nothing left to send."""
+
+    def test_grants_when_drained_and_requested(self):
+        s, _ = step(mk(TX, 1), sw_req=1, tx_pending=0, rx_strobe=0)
+        assert int(s.sw_ack) == 0
+
+    def test_no_grant_while_events_pending(self):
+        s, _ = step(mk(TX, 1), sw_req=1, tx_pending=1, rx_strobe=0)
+        assert int(s.sw_ack) == 1
+
+    def test_no_grant_without_request(self):
+        s, _ = step(mk(TX, 1), sw_req=0, tx_pending=0, rx_strobe=0)
+        assert int(s.sw_ack) == 1  # idle TX holds the bus
+
+    def test_bounded_burst_grants_early(self):
+        # beyond-paper fairness: grant after max_burst even if not drained
+        s, _ = step(mk(TX, 1, burst=2), sw_req=1, tx_pending=9, rx_strobe=0,
+                    max_burst=2)
+        assert int(s.sw_ack) == 0 and int(s.mode) == RX
+
+    def test_bounded_burst_inactive_without_request(self):
+        s, _ = step(mk(TX, 1, burst=5), sw_req=0, tx_pending=9, rx_strobe=0,
+                    max_burst=2)
+        assert int(s.mode) == TX and int(s.sw_ack) == 1
+
+
+class TestEnables:
+    def test_tx_rx_en_complementary(self):
+        for mode in (TX, RX):
+            for req in (0, 1):
+                s, out = step(mk(mode, mode), sw_req=req, tx_pending=1,
+                              rx_strobe=0)
+                assert int(out.tx_en) + int(out.rx_en) == 1
