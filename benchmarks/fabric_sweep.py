@@ -1,0 +1,94 @@
+"""Fabric sweep: N-chip AER fabrics x traffic patterns.
+
+Sweeps ring fabrics of N in {2, 4, 8, 16} chips (plus a 4x4 mesh at
+N = 16) under every ``traffic.PATTERNS`` generator, reporting delivery,
+aggregate + per-link throughput, end-to-end latency percentiles, switch
+counts and energy.  The N = 2 ring IS the paper's measured configuration,
+so its saturated rows must land on the Table II figures — the sweep's
+built-in calibration anchor.
+
+Rows follow the repo convention: ``(name, us_per_call, derived)``.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core import network as net
+from repro.core import traffic as tr
+from repro.core.link import PAPER_TIMING
+from repro.core.router import mesh2d_topology, ring_topology
+
+EVENTS_PER_CHIP = 48
+SWEEP_N = (2, 4, 8, 16)
+
+
+def _run_one(topo, spec, **kw):
+    t0 = time.perf_counter()
+    res = net.simulate_fabric(topo, spec, **kw)
+    jax.block_until_ready(res.log_del)
+    us = (time.perf_counter() - t0) * 1e6
+    return res, us
+
+
+def _derived(res) -> str:
+    st = net.latency_stats(res)
+    thr = float(net.fabric_throughput_mev_s(res))
+    per_link = np.asarray(net.per_link_throughput_mev_s(res))
+    e_nj = float(net.fabric_energy_pj(res, PAPER_TIMING)) * 1e-3
+    return (f"delivered={st['delivered']}/{st['injected']} "
+            f"thr={thr:.1f}MEv/s maxlink={per_link.max():.1f}MEv/s "
+            f"p50={st['p50_ns']:.0f}ns p99={st['p99_ns']:.0f}ns "
+            f"sw={int(np.asarray(res.n_switches).sum())} E={e_nj:.1f}nJ")
+
+
+def sweep_rings():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for n in SWEEP_N:
+        topo = ring_topology(n)
+        for name, gen in sorted(tr.PATTERNS.items()):
+            key, cell_key = jax.random.split(key)
+            spec = gen(cell_key, n, EVENTS_PER_CHIP)
+            # ping-pong saturates; grant after each event as in Fig. 8
+            mb = 1 if name == "ping_pong" else 0
+            res, us = _run_one(topo, spec, max_burst=mb)
+            rows.append((f"fabric_{topo.name}_{name}", us, _derived(res)))
+    return rows
+
+
+def sweep_mesh():
+    rows = []
+    topo = mesh2d_topology(4, 4)
+    spec = tr.poisson(jax.random.PRNGKey(1), topo.n_chips, EVENTS_PER_CHIP)
+    res, us = _run_one(topo, spec)
+    rows.append((f"fabric_{topo.name}_poisson", us, _derived(res)))
+    return rows
+
+
+def sweep_anchor():
+    """N=2 ping-pong must reproduce the paper's 28.6 MEvents/s (Fig. 8)."""
+    topo = ring_topology(2)
+    spec = tr.ping_pong(2, 1024)
+    res, us = _run_one(topo, spec, max_burst=1)
+    thr = float(net.fabric_throughput_mev_s(res))
+    return [("fabric_ring2_anchor_fig8", us,
+             f"measured={thr:.2f}MEv/s paper=28.6 "
+             f"err={abs(thr - 28.6) / 28.6:.2%}")]
+
+
+def run():
+    return sweep_anchor() + sweep_rings() + sweep_mesh()
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -7,10 +7,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def main() -> None:
-    from benchmarks import paper_benches, roofline
+    from benchmarks import fabric_sweep, paper_benches, roofline
     rows = []
     for fn in paper_benches.ALL:
         rows.extend(fn())
+    rows.extend(fabric_sweep.run())
     rows.extend(roofline.run())
     print("name,us_per_call,derived")
     for name, us, derived in rows:

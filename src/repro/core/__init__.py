@@ -1,5 +1,7 @@
 """Core: the paper's contribution — bi-directional AE transceiver protocol,
-its timing/energy contract, and the TPU-scale adaptations (event-sparse
-collectives + half-duplex link scheduling)."""
+its timing/energy contract, the N-chip fabric built from it (routing,
+traffic, network), and the TPU-scale adaptations (event-sparse collectives
++ half-duplex link scheduling)."""
 
-from . import events, fifo, link, protocol_sim, transceiver  # noqa: F401
+from . import (events, fifo, link, network, protocol_sim, router,  # noqa: F401
+               traffic, transceiver)

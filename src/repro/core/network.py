@@ -1,0 +1,386 @@
+"""N-chip AER fabric simulator: the paper's link pair, scaled out.
+
+The paper measures ONE bi-directional transceiver pair on one shared AER
+bus.  This module composes many such pairs into a multi-chip fabric
+(line / ring / 2-D mesh — ``router.Topology``): every link of the fabric
+is one paper-faithful ``protocol_sim.LinkState`` micro-transaction unit,
+and one global ``lax.scan`` step advances **all** links simultaneously via
+``jax.vmap(link_step)`` — the LinkSim unit batches across links.
+
+Event transport
+---------------
+Each link endpoint owns a fixed-capacity queue of
+``(release_time, dest_chip, inject_time)`` entries.  Injected traffic
+(``traffic.TrafficSpec``) is routed to its first-hop queue at setup time
+(numpy, sorted by time).  When a link delivers an event to a chip that is
+not its destination, the event is re-queued on that chip's next-hop link
+(``router.RoutingTable`` gather) with release time equal to its delivery
+time — multi-hop latency accumulates exactly.
+
+An entry only *enters* the physical FIFO at its release time, so service
+order is release-time order (FIFO among equal times): a forward that has
+already arrived is never blocked behind a pre-routed injection that has
+not happened yet.  Slots are one-shot (consumed entries are not reused),
+so ``queue_capacity`` bounds the total events *through* an endpoint, not
+its instantaneous depth; the lossless default (= expanded event count)
+can never drop.
+
+Clocks are link-local, exactly as in ``protocol_sim.simulate``: a link
+whose queues are empty *parks* (its clock holds) and wakes when a forward
+lands.  Cross-link causality is kept by conservative lookahead against
+the fabric-wide lower bound on future event releases (min over links of
+"clock if work is pending, else own next arrival", plus one event cycle
+for the insert bound): idle links never jump past it, and a busy link
+pops an entry only once no future forward can precede it — so queues
+serve in true release order and end-to-end latencies are exact.
+
+The degenerate 2-chip fabric runs the identical ``link_step`` code path
+with the identical pending/next-arrival semantics as
+``protocol_sim.simulate`` and therefore reproduces its event departure
+times, switch counts and ``t_end`` bit-exactly (tested in
+``tests/test_fabric.py``).
+
+Measurements: per-event latency log, per-link/direction transmission
+counts, direction-switch counts, energy roll-up (every hop is one paper
+event: ``e_event_pj``), aggregate + per-link throughput.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .link import LinkTiming, PAPER_TIMING
+from .protocol_sim import BIG_NS, LinkState, link_step, reset_link
+from .router import AddressSpec, MulticastTable, RoutingTable, Topology
+from .traffic import TrafficSpec
+
+__all__ = ["FabricResult", "simulate_fabric", "reset_links",
+           "fabric_throughput_mev_s", "fabric_energy_pj",
+           "per_link_throughput_mev_s", "delivered_latencies",
+           "latency_stats"]
+
+_BIG = BIG_NS  # one sentinel shared with link_step's park/wake contract
+
+
+class FabricState(NamedTuple):
+    link: LinkState         # (L,)-leaved LinkSim batch
+    q_time: jnp.ndarray     # (L, 2, C) release times; BIG_NS = empty/consumed
+    q_dest: jnp.ndarray     # (L, 2, C) destination chip
+    q_inj: jnp.ndarray      # (L, 2, C) original injection time
+    n_ins: jnp.ndarray      # (L, 2) entries ever inserted (next free slot)
+    sent: jnp.ndarray       # (L, 2) transmissions per direction (0: L->R)
+    prev_mode_l: jnp.ndarray  # (L,) for switch counting
+    n_sw: jnp.ndarray       # (L,) mode_l transitions (excl. reset step)
+    log_inj: jnp.ndarray    # (E,) delivery log: injection time
+    log_del: jnp.ndarray    # (E,) delivery log: delivery time
+    log_dest: jnp.ndarray   # (E,) delivery log: destination chip
+    log_n: jnp.ndarray      # scalar: deliveries so far
+    drops: jnp.ndarray      # scalar: forwards lost to a full queue
+
+
+class FabricResult(NamedTuple):
+    delivered: jnp.ndarray   # scalar int32
+    injected: int            # static: expanded events offered
+    log_inj: jnp.ndarray     # (E,) valid up to ``delivered``
+    log_del: jnp.ndarray
+    log_dest: jnp.ndarray
+    sent: jnp.ndarray        # (L, 2) per-link/direction transmissions
+    n_switches: jnp.ndarray  # (L,) direction switches per link
+    t_link: jnp.ndarray      # (L,) final link-local clocks
+    t_end: jnp.ndarray       # scalar: max over links
+    drops: jnp.ndarray       # scalar
+
+
+def reset_links(initial_tx: np.ndarray) -> LinkState:
+    """Batched ``protocol_sim.reset_link``: leaf shape (L,)."""
+    return jax.vmap(reset_link)(jnp.asarray(initial_tx, jnp.int32))
+
+
+def _prefill(topo: Topology, rt: RoutingTable, src, t, dest, capacity: int):
+    """Route every injected event to its first-hop queue (numpy, setup)."""
+    L = topo.n_links
+    first_link = rt.next_link[src, dest]
+    first_side = rt.out_side[src, dest]
+    if np.any(first_link < 0):
+        bad = np.flatnonzero(first_link < 0)[:4]
+        raise ValueError(f"unreachable destinations, e.g. events {bad}: "
+                         f"src={src[bad]} dest={dest[bad]}")
+    grp = first_link * 2 + first_side
+    order = np.lexsort((np.arange(len(t)), t, grp))  # stable time order
+    grp_s, t_s, dest_s, inj_s = grp[order], t[order], dest[order], t[order]
+
+    sizes = np.bincount(grp, minlength=2 * L).astype(np.int32)
+    if sizes.max(initial=0) > capacity:
+        raise ValueError(f"queue capacity {capacity} < initial backlog "
+                         f"{sizes.max()}; raise queue_capacity")
+    # within-queue slot = position since the queue's first event
+    starts = np.zeros(2 * L + 1, np.int64)
+    np.cumsum(sizes, out=starts[1:2 * L + 1])
+    slot = np.arange(len(t)) - starts[grp_s]
+
+    # empty slots hold the BIG_NS sentinel: "never released"
+    q_time = np.full((2 * L, capacity), int(_BIG), np.int32)
+    q_dest = np.zeros((2 * L, capacity), np.int32)
+    q_inj = np.zeros((2 * L, capacity), np.int32)
+    q_time[grp_s, slot] = t_s
+    q_dest[grp_s, slot] = dest_s
+    q_inj[grp_s, slot] = inj_s
+    return (q_time.reshape(L, 2, capacity), q_dest.reshape(L, 2, capacity),
+            q_inj.reshape(L, 2, capacity), sizes.reshape(L, 2))
+
+
+def _expand(spec: TrafficSpec, addr: AddressSpec | None,
+            mcast: MulticastTable | None):
+    """Resolve packed/multicast destinations into unicast chip triples."""
+    src = np.asarray(spec.src, np.int32)
+    t = np.asarray(spec.t, np.int32)
+    dest = np.asarray(spec.dest, np.int32)
+    if addr is None:
+        return src, t, dest
+    is_mc = addr.is_multicast(dest)
+    chip_or_tag, _ = addr.unpack(dest)
+    out_s = [src[~is_mc]]
+    out_t = [t[~is_mc]]
+    out_d = [chip_or_tag[~is_mc]]
+    if np.any(is_mc):
+        if mcast is None:
+            raise ValueError("multicast events but no MulticastTable")
+        ms, mt, md = mcast.expand_stream(src[is_mc], t[is_mc],
+                                         chip_or_tag[is_mc])
+        out_s.append(ms)
+        out_t.append(mt)
+        out_d.append(md)
+    return (np.concatenate(out_s), np.concatenate(out_t),
+            np.concatenate(out_d))
+
+
+def simulate_fabric(topo: Topology,
+                    spec: TrafficSpec,
+                    *,
+                    routing: RoutingTable | None = None,
+                    addr: AddressSpec | None = None,
+                    mcast: MulticastTable | None = None,
+                    timing: LinkTiming = PAPER_TIMING,
+                    max_burst: int = 0,
+                    initial_tx: int | np.ndarray = 1,
+                    max_steps: int | None = None,
+                    queue_capacity: int | None = None) -> FabricResult:
+    """Simulate an N-chip fabric of bi-directional AER links.
+
+    Args:
+      topo:        fabric topology (``router.line/ring/mesh2d_topology``).
+      spec:        injected traffic.  With ``addr`` given, ``spec.dest``
+                   holds packed 26-bit AER words (multicast tags expanded
+                   through ``mcast``); otherwise plain destination chip ids.
+      routing:     prebuilt table (rebuilt from ``topo`` when omitted).
+      timing:      per-link timing contract (shared by all links).
+      max_burst:   0 = paper-faithful grant rule, B > 0 = bounded burst.
+      initial_tx:  scalar or (L,) — which side of each link resets into TX.
+      max_steps:   global micro-transaction count; default scales with the
+                   total hop-transmissions the traffic needs.
+      queue_capacity: per-endpoint slot budget — slots are one-shot, so
+                   this bounds the total events routed *through* an
+                   endpoint, not instantaneous depth.  Defaults to the
+                   expanded event count (lossless).  Smaller values may
+                   drop forwards, counted in ``FabricResult.drops``.
+    """
+    rt = routing if routing is not None else RoutingTable.build(topo)
+    src, t, dest = _expand(spec, addr, mcast)
+    if np.any(src == dest):
+        raise ValueError("self-addressed events (src == dest)")
+    E = len(src)
+    L = topo.n_links
+    if L == 0 or E == 0:
+        raise ValueError("need at least one link and one event")
+
+    C = int(queue_capacity) if queue_capacity is not None else max(E, 1)
+    if max_steps is None:
+        total_tx = int(rt.hops[src, dest].sum())
+        max_steps = 4 * total_tx + 2 * E + 64 * (rt.diameter + 2)
+
+    qt, qd, qi, sizes = _prefill(topo, rt, src, t, dest, C)
+    init_tx = np.broadcast_to(np.asarray(initial_tx, np.int32), (L,))
+
+    links_j = jnp.asarray(topo.links, jnp.int32)          # (L, 2)
+    next_link_j = jnp.asarray(rt.next_link, jnp.int32)    # (N, N)
+    out_side_j = jnp.asarray(rt.out_side, jnp.int32)
+    t_cycle = jnp.int32(timing.t_req2req_ns)              # min delivery gap
+
+    step_v = jax.vmap(
+        lambda s, pl, pr, na: link_step(s, pl, pr, na,
+                                        timing=timing, max_burst=max_burst))
+
+    link0 = reset_links(init_tx)
+    init = FabricState(
+        link=link0,
+        q_time=jnp.asarray(qt), q_dest=jnp.asarray(qd), q_inj=jnp.asarray(qi),
+        n_ins=jnp.asarray(sizes),
+        sent=jnp.zeros((L, 2), jnp.int32),
+        prev_mode_l=link0.xl.mode,
+        n_sw=jnp.zeros((L,), jnp.int32),
+        log_inj=jnp.zeros((E,), jnp.int32),
+        log_del=jnp.zeros((E,), jnp.int32),
+        log_dest=jnp.zeros((E,), jnp.int32),
+        log_n=jnp.zeros((), jnp.int32),
+        drops=jnp.zeros((), jnp.int32),
+    )
+
+    lidx = jnp.arange(L)
+
+    def body(s: FabricState, step_i):
+        t_now = s.link.t  # (L,)
+
+        # --- pending & next-arrival per endpoint queue ------------------
+        # An entry is *in* the FIFO once its release time has passed;
+        # empty/consumed slots hold BIG_NS and never match.  Service order
+        # is release-time order (argmin; ties resolve to the lowest slot,
+        # i.e. FIFO among simultaneous arrivals), which for the sorted
+        # single-hop prefill is exactly simulate()'s searchsorted count.
+        released = s.q_time <= t_now[:, None, None]              # (L,2,C)
+        pend = jnp.sum(released.astype(jnp.int32), axis=2)       # (L,2)
+        nxt = jnp.min(jnp.where(released, _BIG, s.q_time), axis=2)
+        t_next = jnp.min(nxt, axis=1)                            # (L,)
+
+        # --- conservative clock synchronization -------------------------
+        # A link acts no earlier than its clock (work pending) or its own
+        # next arrival: ``na``.  Any *future* forward is released at some
+        # link's next delivery, i.e. no earlier than min(na) + t_cycle.
+        # Two consequences keep every queue in true release order:
+        #   * idle links never jump past min(na), so a parked clock never
+        #     overtakes a forward still in flight;
+        #   * a busy link may pop its earliest released entry only if its
+        #     release precedes every possible future insert (release <=
+        #     min(na) + t_cycle) — otherwise it stalls until the rest of
+        #     the fabric catches up (classic conservative lookahead).
+        # With one link both guards are vacuous (its own bound is always
+        # the loosest), so simulate() semantics are preserved bit-exactly.
+        pend_any = (pend[:, 0] + pend[:, 1]) > 0
+        na = jnp.where(pend_any, t_now, t_next)
+        horizon = jnp.min(na)
+        t_next_eff = jnp.minimum(t_next, jnp.maximum(horizon, t_now))
+        r_min = jnp.min(jnp.where(released, s.q_time, _BIG), axis=2)
+        safe = r_min <= horizon + t_cycle                         # (L,2)
+        pend_safe = jnp.where(safe, pend, 0)
+
+        # --- one micro-transaction on every link, batched ---------------
+        link, out = step_v(s.link, pend_safe[:, 0], pend_safe[:, 1],
+                           t_next_eff)
+
+        did = (out.tx_l + out.tx_r) > 0                          # (L,) bool
+        did32 = did.astype(jnp.int32)
+        send_side = jnp.where(out.tx_l == 1, 0, 1)               # (L,)
+        q_sel = s.q_time[lidx, send_side]                        # (L, C)
+        pop_slot = jnp.argmin(
+            jnp.where(q_sel <= t_now[:, None], q_sel, _BIG), axis=1)
+        ev_dest = s.q_dest[lidx, send_side, pop_slot]
+        ev_inj = s.q_inj[lidx, send_side, pop_slot]
+        # consume the popped slot (one-shot slots; no reuse)
+        popped_t = jnp.where(did, _BIG, q_sel[lidx, pop_slot])
+        q_time = s.q_time.at[lidx, send_side, pop_slot].set(popped_t)
+        sent = s.sent.at[lidx, send_side].add(did32)
+
+        # --- deliver or forward ----------------------------------------
+        rx_chip = jnp.where(out.tx_l == 1, links_j[:, 1], links_j[:, 0])
+        deliver = did & (ev_dest == rx_chip)
+        forward = did & ~deliver
+
+        d32 = deliver.astype(jnp.int32)
+        log_slot = jnp.where(deliver, s.log_n + jnp.cumsum(d32) - d32, E)
+        log_inj = s.log_inj.at[log_slot].set(ev_inj, mode="drop")
+        log_del = s.log_del.at[log_slot].set(link.t, mode="drop")
+        log_dest = s.log_dest.at[log_slot].set(ev_dest, mode="drop")
+        log_n = s.log_n + jnp.sum(d32)
+
+        nl = next_link_j[rx_chip, ev_dest]
+        nside = out_side_j[rx_chip, ev_dest]
+        fq = nl * 2 + nside                                      # (L,)
+        fq_m = jnp.where(forward, fq, 2 * L)   # sentinel for non-forwards
+        # simultaneous forwards into one queue: order by link index
+        before = (fq_m[None, :] == fq_m[:, None]) \
+            & (lidx[None, :] < lidx[:, None]) & forward[None, :]
+        offs = jnp.sum(before.astype(jnp.int32), axis=1)
+        fq_g = jnp.where(forward, fq, 0)
+        n_ins_f = s.n_ins.reshape(-1)
+        slot = n_ins_f[fq_g] + offs            # next free slot
+        cap_ok = slot < C
+        app = forward & cap_ok
+        fq_s = jnp.where(app, fq_g, 2 * L)     # drop non-appends
+        q_time = q_time.reshape(2 * L, C) \
+            .at[fq_s, slot].set(link.t, mode="drop").reshape(L, 2, C)
+        q_dest = s.q_dest.reshape(2 * L, C) \
+            .at[fq_s, slot].set(ev_dest, mode="drop").reshape(L, 2, C)
+        q_inj = s.q_inj.reshape(2 * L, C) \
+            .at[fq_s, slot].set(ev_inj, mode="drop").reshape(L, 2, C)
+        n_ins = n_ins_f.at[fq_s].add(1, mode="drop").reshape(L, 2)
+        drops = s.drops + jnp.sum((forward & ~cap_ok).astype(jnp.int32))
+
+        # --- switch counting (matches SimResult.n_switches: mode_l
+        # transitions between consecutive steps, reset step excluded) ----
+        n_sw = s.n_sw + jnp.where(
+            step_i > 0, (link.xl.mode != s.prev_mode_l).astype(jnp.int32), 0)
+
+        ns = FabricState(
+            link=link, q_time=q_time, q_dest=q_dest, q_inj=q_inj,
+            n_ins=n_ins, sent=sent,
+            prev_mode_l=link.xl.mode, n_sw=n_sw,
+            log_inj=log_inj, log_del=log_del, log_dest=log_dest,
+            log_n=log_n, drops=drops)
+        return ns, None
+
+    final, _ = jax.lax.scan(body, init, jnp.arange(max_steps))
+    return FabricResult(
+        delivered=final.log_n, injected=E,
+        log_inj=final.log_inj, log_del=final.log_del,
+        log_dest=final.log_dest,
+        sent=final.sent, n_switches=final.n_sw,
+        t_link=final.link.t, t_end=jnp.max(final.link.t),
+        drops=final.drops)
+
+
+# -----------------------------------------------------------------------
+# Measurement roll-ups
+# -----------------------------------------------------------------------
+
+def fabric_throughput_mev_s(res: FabricResult) -> jnp.ndarray:
+    """Delivered events per second across the fabric, MEvents/s."""
+    return jnp.where(res.t_end > 0, 1e3 * res.delivered / res.t_end, 0.0)
+
+
+def per_link_throughput_mev_s(res: FabricResult) -> jnp.ndarray:
+    """(L,) per-link transmissions/s (both directions), MEvents/s."""
+    n = jnp.sum(res.sent, axis=1)
+    return jnp.where(res.t_link > 0, 1e3 * n / res.t_link, 0.0)
+
+
+def fabric_energy_pj(res: FabricResult,
+                     timing: LinkTiming = PAPER_TIMING) -> jnp.ndarray:
+    """Total link energy: every hop moves one ``e_event_pj`` event."""
+    return jnp.sum(res.sent) * timing.e_event_pj
+
+
+def delivered_latencies(res: FabricResult) -> np.ndarray:
+    """End-to-end ns latencies of the delivered events (numpy)."""
+    n = int(res.delivered)
+    inj = np.asarray(res.log_inj)[:n]
+    dlv = np.asarray(res.log_del)[:n]
+    return (dlv - inj).astype(np.int64)
+
+
+def latency_stats(res: FabricResult) -> dict:
+    """p50/p90/p99/max end-to-end latency plus delivery counters."""
+    lat = delivered_latencies(res)
+    if lat.size == 0:
+        return {"delivered": 0, "injected": res.injected,
+                "p50_ns": 0.0, "p90_ns": 0.0, "p99_ns": 0.0, "max_ns": 0}
+    return {
+        "delivered": int(res.delivered),
+        "injected": res.injected,
+        "p50_ns": float(np.percentile(lat, 50)),
+        "p90_ns": float(np.percentile(lat, 90)),
+        "p99_ns": float(np.percentile(lat, 99)),
+        "max_ns": int(lat.max()),
+    }

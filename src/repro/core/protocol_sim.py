@@ -23,6 +23,13 @@ evaluation of both blocks followed by at most one bus action —
   IDLE       nothing pending anywhere: clock jumps to the next arrival.
 
 The simulation is exact in integer nanoseconds and fully jittable.
+
+The micro-transaction itself lives in ``link_step`` / ``LinkState`` — a
+self-contained, ``jax.vmap``-able unit.  ``simulate`` wraps exactly one
+such unit with static sorted-arrival pending counts; ``network.py`` maps
+the same unit across every link of an N-chip fabric with queue-fed pending
+counts, so the degenerate 2-chip fabric reproduces ``simulate`` bit-exactly
+by construction.
 """
 
 from __future__ import annotations
@@ -39,18 +46,146 @@ from .transceiver import RX, TX, XcvrState, reset_state, step as fsm_step
 A_IDLE, A_HANDSHAKE, A_TX_L, A_TX_R = 0, 1, 2, 3
 
 _BIG = jnp.int32(2**30)
+BIG_NS = _BIG  # exported: "no further arrival" sentinel for link_step
 
 
-class SimState(NamedTuple):
-    t: jnp.ndarray          # int32 ns
+class LinkState(NamedTuple):
+    """Carry of one bi-directional link: both FSMs plus the bus bookkeeping.
+
+    This is the reusable LinkSim unit.  All leaves are scalar int32 (or
+    scalar-leaved ``XcvrState``), so a fabric of L links is simply a
+    ``LinkState`` with ``(L,)``-shaped leaves driven through
+    ``jax.vmap(link_step)``.
+    """
+    t: jnp.ndarray          # int32 ns — link-local clock
     xl: XcvrState
     xr: XcvrState
-    sent_l: jnp.ndarray     # events shipped L->R
-    sent_r: jnp.ndarray     # events shipped R->L
-    last_dir: jnp.ndarray   # direction of previous transmission (TX=left...)
+    last_dir: jnp.ndarray   # direction of previous transmission (1 = L->R)
     bus_busy: jnp.ndarray   # 1 if previous step transmitted (stream alive)
     prev_tx_l: jnp.ndarray  # did L transmit last step (rx_strobe for R)
     prev_tx_r: jnp.ndarray
+
+
+class LinkStepOut(NamedTuple):
+    action: jnp.ndarray   # A_IDLE / A_HANDSHAKE / A_TX_L / A_TX_R
+    tx_l: jnp.ndarray     # int32: 1 iff L shipped an event this step
+    tx_r: jnp.ndarray     # int32: 1 iff R shipped an event this step
+
+
+def reset_link(initial_tx=1) -> LinkState:
+    """Chip-level global reset of one link pair (PRst/SRst in Fig. 3).
+
+    ``initial_tx`` may be a Python int or a traced int32 scalar, so a
+    fabric resets L links with ``jax.vmap(reset_link)`` — one source of
+    truth for the reset semantics.
+    """
+    m = jnp.asarray(initial_tx, jnp.int32)
+    return LinkState(
+        t=jnp.zeros((), jnp.int32),
+        xl=reset_state(m),
+        xr=reset_state(1 - m),
+        last_dir=m,
+        bus_busy=jnp.zeros((), jnp.int32),
+        prev_tx_l=jnp.zeros((), jnp.int32),
+        prev_tx_r=jnp.zeros((), jnp.int32),
+    )
+
+
+def link_step(s: LinkState,
+              pend_l: jnp.ndarray,
+              pend_r: jnp.ndarray,
+              t_next_arr: jnp.ndarray,
+              *,
+              timing: LinkTiming = PAPER_TIMING,
+              max_burst: int = 0):
+    """One micro-transaction of one link: FSM settling + at most one bus act.
+
+    Args:
+      s:          current ``LinkState``.
+      pend_l/r:   events currently pending behind each block (``s.t``-gated;
+                  the caller owns arrival bookkeeping).
+      t_next_arr: earliest future arrival on either side, or ``BIG_NS`` when
+                  none is scheduled — an idle link parks its clock instead
+                  of jumping.
+      timing:     link timing contract (static; closed over under vmap).
+      max_burst:  0 = paper-faithful grant rule; B > 0 = bounded-burst.
+
+    Returns ``(new_state, LinkStepOut)``.
+    """
+    t_cycle = jnp.int32(timing.t_req2req_ns)
+    t_rev = jnp.int32(timing.t_reverse_penalty_ns)
+    t_idle_sw = jnp.int32(timing.t_idle_switch_ns)
+
+    # --- FSM evaluation with wire settling ------------------------------
+    # The SW_req/SW_ack wires propagate in O(gate delay), far inside the
+    # 31 ns event cycle, so within one micro-transaction the pair of FSMs
+    # settles to a fixed point.  Two iterations suffice (one edge can
+    # trigger at most one response edge); receive strobes are edges and
+    # feed only the first iteration.
+    xl, _ = fsm_step(s.xl, sw_req=s.xr.sw_ack, tx_pending=pend_l,
+                     rx_strobe=s.prev_tx_r, max_burst=max_burst)
+    xr, _ = fsm_step(s.xr, sw_req=s.xl.sw_ack, tx_pending=pend_r,
+                     rx_strobe=s.prev_tx_l, max_burst=max_burst)
+    xl2, _ = fsm_step(xl, sw_req=xr.sw_ack, tx_pending=pend_l,
+                      rx_strobe=0, max_burst=max_burst)
+    xr2, _ = fsm_step(xr, sw_req=xl.sw_ack, tx_pending=pend_r,
+                      rx_strobe=0, max_burst=max_burst)
+    xl, xr = xl2, xr2
+
+    tx_l = (xl.mode == TX) & (xr.mode == RX) & (pend_l > 0)
+    tx_r = (xr.mode == TX) & (xl.mode == RX) & (pend_r > 0)
+    # exactly one side can transmit; prefer the (unique) TX-mode holder
+    do_tx = tx_l | tx_r
+    dir_now = jnp.where(tx_l, jnp.int32(1), jnp.int32(0))
+
+    reversal = (dir_now != s.last_dir)
+    cost = t_cycle \
+        + jnp.where(reversal & (s.bus_busy == 1), t_rev, 0) \
+        + jnp.where(reversal & (s.bus_busy == 0), t_idle_sw, 0)
+
+    # handshake still settling? (any ack/mode changed or a grant pending)
+    settling = (xl.sw_ack != s.xl.sw_ack) | (xr.sw_ack != s.xr.sw_ack) \
+        | (xl.mode != s.xl.mode) | (xr.mode != s.xr.mode)
+
+    # idle: nothing pending and nothing to settle -> jump the clock to the
+    # next scheduled arrival; with none scheduled (t_next_arr == BIG_NS)
+    # the clock parks, so a fabric link can be woken by a later forward.
+    idle = (~do_tx) & (~settling)
+    new_t = jnp.where(do_tx, s.t + cost,
+             jnp.where(idle & (t_next_arr < _BIG), t_next_arr, s.t))
+
+    # burst accounting for the fairness extension
+    xl = xl._replace(burst=jnp.where(tx_l, xl.burst + 1, xl.burst))
+    xr = xr._replace(burst=jnp.where(tx_r, xr.burst + 1, xr.burst))
+
+    action = jnp.where(tx_l, jnp.int32(A_TX_L),
+              jnp.where(tx_r, jnp.int32(A_TX_R),
+               jnp.where(settling, jnp.int32(A_HANDSHAKE),
+                         jnp.int32(A_IDLE))))
+
+    # bus_busy = "a transmission stream is alive": it survives the
+    # zero-time handshake micro-steps and clears only on a true idle,
+    # so a reversal inside a busy stream costs t_reverse_penalty (the
+    # overlapped switch) and not the full idle-switch latency.
+    bus_busy = jnp.where(do_tx, jnp.int32(1),
+                         jnp.where(idle, jnp.int32(0), s.bus_busy))
+    ns = LinkState(
+        t=new_t, xl=xl, xr=xr,
+        last_dir=jnp.where(do_tx, dir_now, s.last_dir),
+        bus_busy=bus_busy,
+        prev_tx_l=(do_tx & tx_l).astype(jnp.int32),
+        prev_tx_r=(do_tx & tx_r).astype(jnp.int32),
+    )
+    out = LinkStepOut(action=action,
+                      tx_l=(do_tx & tx_l).astype(jnp.int32),
+                      tx_r=(do_tx & tx_r).astype(jnp.int32))
+    return ns, out
+
+
+class SimState(NamedTuple):
+    link: LinkState
+    sent_l: jnp.ndarray     # events shipped L->R
+    sent_r: jnp.ndarray     # events shipped R->L
 
 
 class SimTrace(NamedTuple):
@@ -106,92 +241,25 @@ def simulate(arr_l: jnp.ndarray,
     if max_steps is None:
         max_steps = 3 * (n_l + n_r) + 16
 
-    t_cycle = jnp.int32(timing.t_req2req_ns)
-    t_rev = jnp.int32(timing.t_reverse_penalty_ns)
-    t_idle_sw = jnp.int32(timing.t_idle_switch_ns)
-
     init = SimState(
-        t=jnp.zeros((), jnp.int32),
-        xl=reset_state(1 if initial_tx else 0),
-        xr=reset_state(0 if initial_tx else 1),
+        link=reset_link(initial_tx),
         sent_l=jnp.zeros((), jnp.int32),
         sent_r=jnp.zeros((), jnp.int32),
-        last_dir=jnp.asarray(1 if initial_tx else 0, jnp.int32),
-        bus_busy=jnp.zeros((), jnp.int32),
-        prev_tx_l=jnp.zeros((), jnp.int32),
-        prev_tx_r=jnp.zeros((), jnp.int32),
     )
 
     def body(s: SimState, _):
-        pend_l = _pending(arr_l, s.t, s.sent_l)
-        pend_r = _pending(arr_r, s.t, s.sent_r)
-
-        # --- FSM evaluation with wire settling ------------------------------
-        # The SW_req/SW_ack wires propagate in O(gate delay), far inside the
-        # 31 ns event cycle, so within one micro-transaction the pair of FSMs
-        # settles to a fixed point.  Two iterations suffice (one edge can
-        # trigger at most one response edge); receive strobes are edges and
-        # feed only the first iteration.
-        xl, _ = fsm_step(s.xl, sw_req=s.xr.sw_ack, tx_pending=pend_l,
-                         rx_strobe=s.prev_tx_r, max_burst=max_burst)
-        xr, _ = fsm_step(s.xr, sw_req=s.xl.sw_ack, tx_pending=pend_r,
-                         rx_strobe=s.prev_tx_l, max_burst=max_burst)
-        xl2, _ = fsm_step(xl, sw_req=xr.sw_ack, tx_pending=pend_l,
-                          rx_strobe=0, max_burst=max_burst)
-        xr2, _ = fsm_step(xr, sw_req=xl.sw_ack, tx_pending=pend_r,
-                          rx_strobe=0, max_burst=max_burst)
-        xl, xr = xl2, xr2
-
-        tx_l = (xl.mode == TX) & (xr.mode == RX) & (pend_l > 0)
-        tx_r = (xr.mode == TX) & (xl.mode == RX) & (pend_r > 0)
-        # exactly one side can transmit; prefer the (unique) TX-mode holder
-        do_tx = tx_l | tx_r
-        dir_now = jnp.where(tx_l, jnp.int32(1), jnp.int32(0))
-
-        reversal = (dir_now != s.last_dir)
-        cost = t_cycle \
-            + jnp.where(reversal & (s.bus_busy == 1), t_rev, 0) \
-            + jnp.where(reversal & (s.bus_busy == 0), t_idle_sw, 0)
-
-        # handshake still settling? (any ack/mode changed or a grant pending)
-        settling = (xl.sw_ack != s.xl.sw_ack) | (xr.sw_ack != s.xr.sw_ack) \
-            | (xl.mode != s.xl.mode) | (xr.mode != s.xr.mode)
-
-        # idle: nothing pending now and nothing to settle -> jump the clock
-        idle = (~do_tx) & (~settling)
-        t_next_arr = jnp.minimum(_next_arrival(arr_l, s.t),
-                                 _next_arrival(arr_r, s.t))
-        done = (s.sent_l >= n_l) & (s.sent_r >= n_r)
-
-        new_t = jnp.where(do_tx, s.t + cost,
-                 jnp.where(idle & ~done, jnp.minimum(t_next_arr, _BIG), s.t))
-
-        sent_l = s.sent_l + (do_tx & tx_l).astype(jnp.int32)
-        sent_r = s.sent_r + (do_tx & tx_r).astype(jnp.int32)
-
-        # burst accounting for the fairness extension
-        xl = xl._replace(burst=jnp.where(tx_l, xl.burst + 1, xl.burst))
-        xr = xr._replace(burst=jnp.where(tx_r, xr.burst + 1, xr.burst))
-
-        action = jnp.where(tx_l, jnp.int32(A_TX_L),
-                  jnp.where(tx_r, jnp.int32(A_TX_R),
-                   jnp.where(settling, jnp.int32(A_HANDSHAKE),
-                             jnp.int32(A_IDLE))))
-
-        # bus_busy = "a transmission stream is alive": it survives the
-        # zero-time handshake micro-steps and clears only on a true idle,
-        # so a reversal inside a busy stream costs t_reverse_penalty (the
-        # overlapped switch) and not the full idle-switch latency.
-        bus_busy = jnp.where(do_tx, jnp.int32(1),
-                             jnp.where(idle, jnp.int32(0), s.bus_busy))
-        ns = SimState(
-            t=new_t, xl=xl, xr=xr, sent_l=sent_l, sent_r=sent_r,
-            last_dir=jnp.where(do_tx, dir_now, s.last_dir),
-            bus_busy=bus_busy,
-            prev_tx_l=(do_tx & tx_l).astype(jnp.int32),
-            prev_tx_r=(do_tx & tx_r).astype(jnp.int32),
-        )
-        rec = (new_t, action, xl.mode, xr.mode, xl.sw_ack, xr.sw_ack)
+        t = s.link.t
+        pend_l = _pending(arr_l, t, s.sent_l)
+        pend_r = _pending(arr_r, t, s.sent_r)
+        t_next_arr = jnp.minimum(_next_arrival(arr_l, t),
+                                 _next_arrival(arr_r, t))
+        link, out = link_step(s.link, pend_l, pend_r, t_next_arr,
+                              timing=timing, max_burst=max_burst)
+        ns = SimState(link=link,
+                      sent_l=s.sent_l + out.tx_l,
+                      sent_r=s.sent_r + out.tx_r)
+        rec = (link.t, out.action, link.xl.mode, link.xr.mode,
+               link.xl.sw_ack, link.xr.sw_ack)
         return ns, rec
 
     final, recs = jax.lax.scan(body, init, None, length=max_steps)
@@ -199,7 +267,7 @@ def simulate(arr_l: jnp.ndarray,
     n_switches = jnp.sum(
         (trace.mode_l[1:] != trace.mode_l[:-1]).astype(jnp.int32))
     return SimResult(trace=trace, sent_l=final.sent_l, sent_r=final.sent_r,
-                     t_end=final.t, n_switches=n_switches)
+                     t_end=final.link.t, n_switches=n_switches)
 
 
 # -----------------------------------------------------------------------

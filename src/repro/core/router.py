@@ -1,0 +1,247 @@
+"""Hierarchical AER addressing + routing for multi-chip transceiver fabrics.
+
+The paper validates one bi-directional link; its stated purpose is
+large-scale multi-chip systems.  This module supplies the addressing layer
+that scales the link into a fabric, following the hierarchy used by
+DYNAPs-style boards (Moradi et al. 2017) and the tag-expansion multicast of
+Su et al. 2024:
+
+* ``AddressSpec`` — carves the paper's 26-bit parallel AER word into
+  ``[mcast flag | chip id | core/neuron tag]`` fields.  Unicast events carry
+  an explicit destination chip; multicast events carry a *tag* that each
+  expansion point resolves through a ``MulticastTable``.
+* ``Topology`` — chips + bi-directional links (each link is one instance of
+  the paper's transceiver pair sharing one AER bus).  Builders for line,
+  ring and 2-D mesh fabrics.
+* ``RoutingTable`` — deterministic BFS shortest-path next-hop tables
+  (``next_link`` / ``out_side`` / ``hops``), precomputed in numpy at build
+  time so the in-scan forwarding step is a pure table gather.
+
+Everything here is *setup-time* code (plain numpy, no tracing); the hot
+per-micro-transaction path lives in ``network.py``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = [
+    "AddressSpec", "Topology", "RoutingTable", "MulticastTable",
+    "line_topology", "ring_topology", "mesh2d_topology",
+]
+
+
+# -----------------------------------------------------------------------
+# Hierarchical addressing over the 26-bit AER word
+# -----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AddressSpec:
+    """Bit layout of one AER word: ``[mcast | chip | core]`` (MSB first).
+
+    The paper's bus is ``word_bits`` = 26 wires.  One bit flags multicast;
+    ``chip_bits`` name the destination chip (or the multicast tag when the
+    flag is set); the rest is the on-chip core/neuron address that the
+    fabric transports opaquely.
+    """
+    word_bits: int = 26
+    chip_bits: int = 8
+
+    @property
+    def core_bits(self) -> int:
+        return self.word_bits - self.chip_bits - 1
+
+    @property
+    def max_chips(self) -> int:
+        return 1 << self.chip_bits
+
+    @property
+    def _mcast_bit(self) -> int:
+        return 1 << (self.word_bits - 1)
+
+    def pack(self, chip: np.ndarray, core: np.ndarray = 0) -> np.ndarray:
+        chip = np.asarray(chip, np.int64)
+        core = np.asarray(core, np.int64)
+        if np.any(chip >= self.max_chips) or np.any(chip < 0):
+            raise ValueError(f"chip id out of range for {self.chip_bits} bits")
+        if np.any(core >= (1 << self.core_bits)) or np.any(core < 0):
+            raise ValueError(f"core tag out of range for {self.core_bits} bits")
+        return ((chip << self.core_bits) | core).astype(np.int32)
+
+    def pack_multicast(self, tag: np.ndarray, core: np.ndarray = 0):
+        return (self.pack(tag, core) | self._mcast_bit).astype(np.int32)
+
+    def is_multicast(self, word: np.ndarray) -> np.ndarray:
+        return (np.asarray(word, np.int64) & self._mcast_bit) != 0
+
+    def unpack(self, word: np.ndarray):
+        """Return ``(chip_or_tag, core)`` — check ``is_multicast`` first."""
+        w = np.asarray(word, np.int64) & ~self._mcast_bit
+        return ((w >> self.core_bits).astype(np.int32),
+                (w & ((1 << self.core_bits) - 1)).astype(np.int32))
+
+
+# -----------------------------------------------------------------------
+# Topologies
+# -----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Topology:
+    """``n_chips`` chips joined by bi-directional AER links.
+
+    ``links[l] = (a, b)`` — link ``l`` connects chip ``a`` (the link's L
+    side, side 0) to chip ``b`` (the R side, side 1).  Each link is one
+    shared parallel bus with a transceiver block on both ends, exactly the
+    paper's Fig. 1 pair.
+    """
+    n_chips: int
+    links: np.ndarray  # (L, 2) int32
+    name: str = "custom"
+
+    def __post_init__(self):
+        links = np.asarray(self.links, np.int32).reshape(-1, 2)
+        object.__setattr__(self, "links", links)
+        if len(links) and (links.min() < 0 or links.max() >= self.n_chips):
+            raise ValueError("link endpoint out of range")
+        if np.any(links[:, 0] == links[:, 1]):
+            raise ValueError("self-loop link")
+
+    @property
+    def n_links(self) -> int:
+        return len(self.links)
+
+
+def line_topology(n_chips: int) -> Topology:
+    links = [(i, i + 1) for i in range(n_chips - 1)]
+    return Topology(n_chips, np.asarray(links, np.int32), name=f"line{n_chips}")
+
+
+def ring_topology(n_chips: int) -> Topology:
+    """Ring of n chips.  ``n == 2`` degenerates to a single link (the
+    paper's measured configuration) rather than a doubled bus."""
+    if n_chips < 2:
+        raise ValueError("ring needs >= 2 chips")
+    if n_chips == 2:
+        return Topology(2, np.asarray([(0, 1)], np.int32), name="ring2")
+    links = [(i, (i + 1) % n_chips) for i in range(n_chips)]
+    return Topology(n_chips, np.asarray(links, np.int32),
+                    name=f"ring{n_chips}")
+
+
+def mesh2d_topology(rows: int, cols: int) -> Topology:
+    """2-D mesh (the four-border chip floorplan of the paper's prototype
+    scaled out): chip (r, c) has id ``r * cols + c``."""
+    links = []
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            if c + 1 < cols:
+                links.append((i, i + 1))
+            if r + 1 < rows:
+                links.append((i, i + cols))
+    return Topology(rows * cols, np.asarray(links, np.int32),
+                    name=f"mesh{rows}x{cols}")
+
+
+# -----------------------------------------------------------------------
+# Deterministic shortest-path routing
+# -----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RoutingTable:
+    """Next-hop tables: at chip ``c`` an event for chip ``d`` departs on
+    link ``next_link[c, d]`` from that link's side ``out_side[c, d]``
+    (0 = the link's L endpoint, 1 = R).  ``hops[c, d]`` is the path length.
+    Diagonals and unreachable pairs hold -1.
+    """
+    next_link: np.ndarray  # (N, N) int32
+    out_side: np.ndarray   # (N, N) int32
+    hops: np.ndarray       # (N, N) int32
+
+    @staticmethod
+    def build(topo: Topology) -> "RoutingTable":
+        """BFS from every destination, ties broken by lowest (chip, link)
+        so the tables are reproducible across runs."""
+        n, links = topo.n_chips, topo.links
+        # adjacency: chip -> sorted [(neighbor, link, my_side)]
+        adj: list[list[tuple[int, int, int]]] = [[] for _ in range(n)]
+        for l, (a, b) in enumerate(links):
+            adj[a].append((b, l, 0))
+            adj[b].append((a, l, 1))
+        for lst in adj:
+            lst.sort()
+
+        next_link = np.full((n, n), -1, np.int32)
+        out_side = np.full((n, n), -1, np.int32)
+        hops = np.full((n, n), -1, np.int32)
+        for dst in range(n):
+            hops[dst, dst] = 0
+            frontier = [dst]
+            while frontier:
+                nxt = []
+                for u in frontier:
+                    for v, l, side_of_u in adj[u]:
+                        if hops[v, dst] == -1:
+                            hops[v, dst] = hops[u, dst] + 1
+                            # v forwards toward dst over link l; v sits on
+                            # the opposite side from u.
+                            next_link[v, dst] = l
+                            out_side[v, dst] = 1 - side_of_u
+                            nxt.append(v)
+                frontier = sorted(nxt)
+        return RoutingTable(next_link=next_link, out_side=out_side, hops=hops)
+
+    @property
+    def diameter(self) -> int:
+        reach = self.hops[self.hops >= 0]
+        return int(reach.max()) if reach.size else 0
+
+
+# -----------------------------------------------------------------------
+# Multicast (Su et al.-style tag expansion)
+# -----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MulticastTable:
+    """Tag → member-chip sets.  ``members[tag, chip]`` is True when the
+    chip subscribes to the tag.  Expansion replicates a tagged event into
+    one unicast copy per member (the source never receives its own copy),
+    which is how the Su et al. scheme resolves tags at expansion nodes.
+    """
+    members: np.ndarray  # (n_tags, n_chips) bool
+
+    def __post_init__(self):
+        object.__setattr__(self, "members",
+                           np.asarray(self.members, bool).reshape(
+                               len(self.members), -1))
+
+    @property
+    def n_tags(self) -> int:
+        return self.members.shape[0]
+
+    def expand(self, tag: int, src: int | None = None) -> np.ndarray:
+        """Member chips of ``tag`` (excluding ``src`` when given)."""
+        chips = np.flatnonzero(self.members[tag])
+        if src is not None:
+            chips = chips[chips != src]
+        return chips.astype(np.int32)
+
+    def expand_stream(self, src, t, tag):
+        """Vector expansion of a tagged event stream into unicast triples.
+
+        Returns ``(src', t', dest')`` where each input event is replicated
+        once per member chip of its tag, source excluded.
+        """
+        src = np.asarray(src, np.int32)
+        t = np.asarray(t, np.int32)
+        tag = np.asarray(tag, np.int32)
+        out_s, out_t, out_d = [], [], []
+        for s_, t_, g_ in zip(src, t, tag):
+            for d in self.expand(int(g_), int(s_)):
+                out_s.append(s_)
+                out_t.append(t_)
+                out_d.append(d)
+        return (np.asarray(out_s, np.int32), np.asarray(out_t, np.int32),
+                np.asarray(out_d, np.int32))

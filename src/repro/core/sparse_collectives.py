@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops as K
+from ..parallel.compat import axis_size
 from . import halfduplex as hd
 
 
@@ -49,7 +50,7 @@ def aer_allreduce(x, state: AerState, axis_name, *, frac=0.02,
     Returns (dense mean-reduced tensor — identical on all axis members,
     new AerState, wire_words_sent scalar).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     y = x + state.residual
     tiles, size = K.pad_to_blocks(y, block)
     tau = K.tau_from_fraction(tiles, frac)
@@ -75,7 +76,7 @@ def aer_allreduce(x, state: AerState, axis_name, *, frac=0.02,
 
 def dense_allreduce(x, axis_name, *, schedule="psum"):
     """Dense mean baselines: psum | ring | bidir_ring."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if schedule == "psum":
         return jax.lax.psum(x, axis_name) / n
     return hd.ring_allreduce(

@@ -1,0 +1,155 @@
+"""JAX-native traffic generators for the multi-chip AER fabric.
+
+Each generator returns a :class:`TrafficSpec` — flat ``(src, t, dest)``
+int32 arrays describing the event *arrival process* every chip's cores
+offer to the fabric.  Times are integer nanoseconds, nondecreasing per
+source chip; destinations are chip ids (never the source itself).
+
+The generators are built from ``jax.random`` primitives with static output
+shapes, so a whole sweep of workloads can be sampled under ``jit``/``vmap``
+before being handed to ``network.simulate_fabric`` (which consumes them at
+setup time).
+
+Patterns (the scenario axis of the benchmark sweep):
+
+  poisson    independent exponential inter-arrival gaps per chip, uniform
+             random destinations — the background-activity regime.
+  bursty     Poisson burst *starts*, each burst a back-to-back train to a
+             single destination — cortical-packet / population-code bursts.
+  ping_pong  saturated pairwise exchange at t = 0 — the paper's Fig. 8
+             worst case (every event reverses its bus), fabric-sized.
+  hot_spot   poisson arrivals whose destinations concentrate on one chip —
+             the congestion/convergecast regime.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TrafficSpec", "poisson", "bursty", "ping_pong", "hot_spot",
+           "PATTERNS"]
+
+
+class TrafficSpec(NamedTuple):
+    """Flat event stream: event i enters the fabric at chip ``src[i]`` at
+    time ``t[i]`` ns, addressed to chip ``dest[i]``."""
+    src: jnp.ndarray   # (E,) int32
+    t: jnp.ndarray     # (E,) int32, nondecreasing per src
+    dest: jnp.ndarray  # (E,) int32
+
+    @property
+    def n_events(self) -> int:
+        return int(self.src.shape[0])
+
+
+def _flatten(times: jnp.ndarray, dests: jnp.ndarray) -> TrafficSpec:
+    """(n_chips, E) per-chip arrays -> flat spec (chip-major order)."""
+    n_chips, n_ev = times.shape
+    src = jnp.repeat(jnp.arange(n_chips, dtype=jnp.int32), n_ev)
+    return TrafficSpec(src=src,
+                       t=times.reshape(-1).astype(jnp.int32),
+                       dest=dests.reshape(-1).astype(jnp.int32))
+
+
+def _uniform_other_chip(key, shape, n_chips: int, src_col: jnp.ndarray):
+    """Uniform destination chip != source."""
+    d = jax.random.randint(key, shape, 0, n_chips - 1, dtype=jnp.int32)
+    return d + (d >= src_col).astype(jnp.int32)
+
+
+def _src_col(n_chips: int, n_ev: int) -> jnp.ndarray:
+    return jnp.broadcast_to(
+        jnp.arange(n_chips, dtype=jnp.int32)[:, None], (n_chips, n_ev))
+
+
+def poisson(key, n_chips: int, events_per_chip: int,
+            mean_gap_ns: float = 200.0) -> TrafficSpec:
+    """Independent Poisson processes: exponential gaps, uniform dests."""
+    kt, kd = jax.random.split(key)
+    gaps = jax.random.exponential(kt, (n_chips, events_per_chip)) * mean_gap_ns
+    times = jnp.cumsum(gaps.astype(jnp.int32), axis=1)
+    dests = _uniform_other_chip(kd, (n_chips, events_per_chip), n_chips,
+                                _src_col(n_chips, events_per_chip))
+    return _flatten(times, dests)
+
+
+def bursty(key, n_chips: int, bursts_per_chip: int, burst_len: int = 8,
+           mean_gap_ns: float = 2000.0) -> TrafficSpec:
+    """Poisson burst starts; each burst is ``burst_len`` back-to-back
+    events (same timestamp — the FIFO serialises them) to one dest."""
+    kt, kd = jax.random.split(key)
+    gaps = jax.random.exponential(
+        kt, (n_chips, bursts_per_chip)) * mean_gap_ns
+    starts = jnp.cumsum(gaps.astype(jnp.int32), axis=1)
+    burst_dest = _uniform_other_chip(kd, (n_chips, bursts_per_chip), n_chips,
+                                     _src_col(n_chips, bursts_per_chip))
+    times = jnp.repeat(starts, burst_len, axis=1)
+    dests = jnp.repeat(burst_dest, burst_len, axis=1)
+    return _flatten(times, dests)
+
+
+def ping_pong(n_chips: int, events_per_chip: int) -> TrafficSpec:
+    """Saturated pairwise exchange: chips (2i, 2i+1) flood each other from
+    t = 0.  With one link per pair this is exactly the paper's Fig. 8
+    alternating-direction measurement on every pair at once.  An odd
+    trailing chip stays silent."""
+    n_active = (n_chips // 2) * 2
+    src = jnp.arange(n_chips, dtype=jnp.int32)
+    partner = jnp.where(src % 2 == 0, src + 1, src - 1)
+    partner = jnp.where(src < n_active, partner, src)  # silent odd chip
+    times = jnp.zeros((n_chips, events_per_chip), jnp.int32)
+    dests = jnp.broadcast_to(partner[:, None], (n_chips, events_per_chip))
+    spec = _flatten(times, dests)
+    keep = spec.src < n_active
+    # static shapes: an odd chip would self-address; drop its rows.
+    if n_active < n_chips:
+        idx = jnp.nonzero(keep, size=n_active * events_per_chip)[0]
+        spec = TrafficSpec(src=spec.src[idx], t=spec.t[idx],
+                           dest=spec.dest[idx])
+    return spec
+
+
+def hot_spot(key, n_chips: int, events_per_chip: int,
+             mean_gap_ns: float = 200.0, hot_chip: int = 0,
+             hot_frac: float = 0.75) -> TrafficSpec:
+    """Poisson arrivals converging on one chip with probability
+    ``hot_frac`` (uniform otherwise) — the congestion regime."""
+    kt, kd, kh = jax.random.split(key, 3)
+    gaps = jax.random.exponential(kt, (n_chips, events_per_chip)) * mean_gap_ns
+    times = jnp.cumsum(gaps.astype(jnp.int32), axis=1)
+    col = _src_col(n_chips, events_per_chip)
+    uni = _uniform_other_chip(kd, (n_chips, events_per_chip), n_chips, col)
+    hot = jax.random.uniform(kh, (n_chips, events_per_chip)) < hot_frac
+    dests = jnp.where(hot & (col != hot_chip), jnp.int32(hot_chip), uni)
+    return _flatten(times, dests)
+
+
+def _poisson_default(key, n_chips, events_per_chip):
+    return poisson(key, n_chips, events_per_chip)
+
+
+def _bursty_default(key, n_chips, events_per_chip):
+    burst_len = 8
+    bursts = max(1, events_per_chip // burst_len)
+    return bursty(key, n_chips, bursts, burst_len=burst_len)
+
+
+def _ping_pong_default(key, n_chips, events_per_chip):
+    del key
+    return ping_pong(n_chips, events_per_chip)
+
+
+def _hot_spot_default(key, n_chips, events_per_chip):
+    return hot_spot(key, n_chips, events_per_chip)
+
+
+#: name -> generator(key, n_chips, events_per_chip) for sweeps/tests.
+PATTERNS = {
+    "poisson": _poisson_default,
+    "bursty": _bursty_default,
+    "ping_pong": _ping_pong_default,
+    "hot_spot": _hot_spot_default,
+}

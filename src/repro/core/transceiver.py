@@ -54,8 +54,9 @@ class XcvrState(NamedTuple):
     burst: jnp.ndarray   # int32: consecutive events sent in current TX tenure
 
 
-def reset_state(initial_mode: int) -> XcvrState:
-    """Chip-level global reset (PRst/SRst in Fig. 3).
+def reset_state(initial_mode) -> XcvrState:
+    """Chip-level global reset (PRst/SRst in Fig. 3).  ``initial_mode``
+    may be a Python int or traced int32 scalar (vmap-friendly).
 
     Exactly one block of a linked pair must be reset into TX mode.  The RX
     block gets ``rx_p = 1`` (the paper's reset exemption) so it can claim the

@@ -1,0 +1,75 @@
+"""JAX version compatibility for the sharding APIs this repo uses.
+
+The codebase targets the modern surface (``jax.shard_map`` with
+``check_vma``/``axis_names``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.set_mesh``).  Older installs (e.g. jax 0.4.x) spell these
+``jax.experimental.shard_map.shard_map`` with ``check_rep``/``auto``,
+``jax.make_mesh`` without axis types, and mesh context managers.  Route
+through this module instead of calling jax directly and both work.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from functools import partial
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "set_mesh", "axis_size",
+           "AXIS_TYPE_AUTO"]
+
+#: ``jax.sharding.AxisType.Auto`` where it exists (newer jax), else None —
+#: older jax has exactly one (auto) axis behaviour, so None means "default".
+AXIS_TYPE_AUTO = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=None,
+              axis_names=None):
+    """``jax.shard_map`` with graceful fallback to the experimental API.
+
+    Args follow the modern spelling: ``check_vma`` (replication/varying
+    checking) and ``axis_names`` (the axes that become MANUAL; the rest of
+    the mesh stays automatic).  On old jax these map to ``check_rep`` and
+    ``auto`` (the complement set).
+    """
+    if f is None:
+        return partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=check_vma,
+                       axis_names=axis_names)
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if hasattr(jax, "shard_map"):
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if axis_names is not None:
+            kw["axis_names"] = frozenset(axis_names)
+        return jax.shard_map(f, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, **kw)
+
+
+def make_mesh(shape, axes, axis_types=None):
+    """``jax.make_mesh`` accepting (and dropping, pre-AxisType) the
+    ``axis_types`` keyword."""
+    if axis_types is not None and AXIS_TYPE_AUTO is not None:
+        return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return jax.make_mesh(shape, axes)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size``; old jax spells it ``psum(1, axis)`` (still a
+    static int at trace time)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` context; old jax activates the mesh context
+    manager (enough for abstract lowering / dry runs)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return contextlib.nullcontext(mesh) if mesh is None else mesh

@@ -28,6 +28,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import sparse_collectives as sc
 from ..optim import adamw
+from ..parallel.compat import shard_map
 from ..parallel.sharding import (Rules, partition_params, shard_activation,
                                  use_rules)
 
@@ -143,9 +144,9 @@ def make_train_step(model, run_cfg, rules: Rules | None = None):
                     jax.tree.map(lambda _: batch_spec, batch))
         out_specs = (jax.tree.map(lambda _: P(), state),
                      {k: P() for k in METRIC_KEYS})
-        fn = jax.shard_map(manual, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False,
-                           axis_names=frozenset(dp_axes))
+        fn = shard_map(manual, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False,
+                       axis_names=frozenset(dp_axes))
         return fn(state, batch)
 
     return jax.jit(stepped)

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.configs.base import MambaConfig, MoeConfig, ModelConfig
 from repro.core import protocol_sim as ps

@@ -1,0 +1,309 @@
+"""Fabric-level tests: the N-chip simulator must degenerate to the paper's
+measured two-block link bit-exactly, conserve events on multi-hop
+topologies under every traffic generator, and route/address correctly."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import network as net
+from repro.core import protocol_sim as ps
+from repro.core import traffic as tr
+from repro.core.router import (AddressSpec, MulticastTable, RoutingTable,
+                               Topology, line_topology, mesh2d_topology,
+                               ring_topology)
+
+
+def _two_chip_spec(arr_l, arr_r):
+    """arr_l/arr_r arrival arrays -> flat spec on the 2-chip topology."""
+    nl, nr = len(arr_l), len(arr_r)
+    return tr.TrafficSpec(
+        src=jnp.concatenate([jnp.zeros(nl, jnp.int32),
+                             jnp.ones(nr, jnp.int32)]),
+        t=jnp.concatenate([jnp.asarray(arr_l, jnp.int32),
+                           jnp.asarray(arr_r, jnp.int32)]),
+        dest=jnp.concatenate([jnp.ones(nl, jnp.int32),
+                              jnp.zeros(nr, jnp.int32)]))
+
+
+class TestTwoChipEquivalence:
+    """The refactor's safety net: a degenerate 2-chip fabric reproduces
+    ``protocol_sim.simulate`` departures, switch counts and t_end
+    bit-exactly."""
+
+    @pytest.mark.parametrize("seed,initial_tx,max_burst", [
+        (0, 1, 0), (1, 0, 0), (2, 1, 1), (3, 0, 8),
+    ])
+    def test_bit_exact(self, seed, initial_tx, max_burst):
+        rng = np.random.default_rng(seed)
+        arr_l = np.sort(rng.integers(0, 40_000, 70)).astype(np.int32)
+        arr_r = np.sort(rng.integers(0, 40_000, 50)).astype(np.int32)
+        ref = ps.simulate(jnp.array(arr_l), jnp.array(arr_r),
+                          initial_tx=initial_tx, max_burst=max_burst)
+        res = net.simulate_fabric(line_topology(2),
+                                  _two_chip_spec(arr_l, arr_r),
+                                  initial_tx=initial_tx, max_burst=max_burst)
+        assert int(res.delivered) == res.injected == 120
+        assert int(res.t_end) == int(ref.t_end)
+        assert np.asarray(res.sent).tolist() == [
+            [int(ref.sent_l), int(ref.sent_r)]]
+        assert int(res.n_switches[0]) == int(ref.n_switches)
+        # per-direction departure (== delivery) time multisets
+        act = np.asarray(ref.trace.action)
+        t_tr = np.asarray(ref.trace.t)
+        n = int(res.delivered)
+        dlv = np.asarray(res.log_del)[:n]
+        dst = np.asarray(res.log_dest)[:n]
+        np.testing.assert_array_equal(np.sort(t_tr[act == ps.A_TX_L]),
+                                      np.sort(dlv[dst == 1]))
+        np.testing.assert_array_equal(np.sort(t_tr[act == ps.A_TX_R]),
+                                      np.sort(dlv[dst == 0]))
+
+    def test_saturated_onedir_rate_survives(self):
+        """Fig. 7 condition through the fabric path: 32.3 MEvents/s."""
+        n = 512
+        res = net.simulate_fabric(
+            line_topology(2),
+            tr.TrafficSpec(src=jnp.zeros(n, jnp.int32),
+                           t=jnp.zeros(n, jnp.int32),
+                           dest=jnp.ones(n, jnp.int32)),
+            initial_tx=0)
+        assert int(res.delivered) == n
+        assert int(res.t_end) == 10 + 31 * n  # idle switch + n cycles
+        thr = float(net.fabric_throughput_mev_s(res))
+        assert thr == pytest.approx(32.3, abs=0.2)
+
+
+class TestConservation:
+    """Events injected == events delivered, multi-hop, all generators."""
+
+    @pytest.mark.parametrize("pattern", sorted(tr.PATTERNS))
+    def test_ring4_all_generators(self, pattern):
+        spec = tr.PATTERNS[pattern](jax.random.PRNGKey(11), 4, 32)
+        res = net.simulate_fabric(ring_topology(4), spec)
+        assert int(res.drops) == 0
+        assert int(res.delivered) == res.injected == spec.n_events
+        # every delivery reached its addressed chip
+        n = int(res.delivered)
+        lat = net.delivered_latencies(res)
+        assert (lat >= 0).all()
+        assert len(lat) == n
+
+    @pytest.mark.parametrize("pattern", sorted(tr.PATTERNS))
+    def test_ring4_bounded_burst(self, pattern):
+        spec = tr.PATTERNS[pattern](jax.random.PRNGKey(5), 4, 24)
+        res = net.simulate_fabric(ring_topology(4), spec, max_burst=4)
+        assert int(res.delivered) == res.injected
+
+    @pytest.mark.parametrize("topo_fn", [
+        lambda: line_topology(4),
+        lambda: ring_topology(8),
+        lambda: mesh2d_topology(2, 3),
+    ])
+    def test_other_topologies_poisson(self, topo_fn):
+        topo = topo_fn()
+        spec = tr.poisson(jax.random.PRNGKey(3), topo.n_chips, 24)
+        res = net.simulate_fabric(topo, spec)
+        assert int(res.delivered) == res.injected
+        assert int(res.drops) == 0
+
+    def test_hop_energy_rollup(self):
+        """Energy counts every hop: a 4-ring Poisson run costs
+        sum(hops) * 11 pJ."""
+        topo = ring_topology(4)
+        rt = RoutingTable.build(topo)
+        spec = tr.poisson(jax.random.PRNGKey(9), 4, 16)
+        res = net.simulate_fabric(topo, spec, routing=rt)
+        src = np.asarray(spec.src)
+        dest = np.asarray(spec.dest)
+        expected_tx = rt.hops[src, dest].sum()
+        assert int(np.asarray(res.sent).sum()) == expected_tx
+        assert float(net.fabric_energy_pj(res)) == pytest.approx(
+            11.0 * expected_tx)
+
+    def test_multihop_latency_not_blocked_by_future_injections(self):
+        """A forward already in flight must not wait behind a pre-routed
+        injection that has not happened yet (conservative clock sync)."""
+        spec = tr.TrafficSpec(src=jnp.array([0, 1], jnp.int32),
+                              t=jnp.array([0, 100_000], jnp.int32),
+                              dest=jnp.array([2, 2], jnp.int32))
+        res = net.simulate_fabric(line_topology(3), spec)
+        assert int(res.delivered) == 2
+        n = int(res.delivered)
+        inj = np.asarray(res.log_inj)[:n]
+        lat = net.delivered_latencies(res)
+        # two hops of 31 ns for the t=0 event, one for the t=100000 one
+        assert lat[np.argmin(inj)] == 62
+        assert lat[np.argmax(inj)] == 31
+
+    def test_per_flow_fifo_under_contention(self):
+        """Busy links never pop an entry a still-in-flight forward should
+        precede: deliveries of each flow stay in injection order even when
+        a relay link's wall-clock runs ahead (ping-pong + stream mix)."""
+        n = 48
+        base = jnp.arange(n, dtype=jnp.int32) * 40
+        spec = tr.TrafficSpec(
+            src=jnp.concatenate([jnp.zeros(n, jnp.int32),   # 0->2 stream
+                                 jnp.ones(n, jnp.int32),    # 1->0 ping
+                                 jnp.zeros(n, jnp.int32)]),  # 0->1 pong
+            t=jnp.concatenate([base, base, base + 7]),
+            dest=jnp.concatenate([jnp.full((n,), 2, jnp.int32),
+                                  jnp.zeros(n, jnp.int32),
+                                  jnp.ones(n, jnp.int32)]))
+        res = net.simulate_fabric(line_topology(3), spec, max_burst=1)
+        m = int(res.delivered)
+        assert m == res.injected
+        inj = np.asarray(res.log_inj)[:m]
+        dst = np.asarray(res.log_dest)[:m]
+        for d in (0, 1, 2):  # one flow per destination here
+            assert (np.diff(inj[dst == d]) >= 0).all()
+
+    def test_parked_link_wakes_on_forward(self):
+        """A link with no injected traffic must still relay forwards."""
+        # line 0-1-2: all traffic 0 -> 2; link (1,2) has no injections.
+        n = 40
+        spec = tr.TrafficSpec(src=jnp.zeros(n, jnp.int32),
+                              t=jnp.arange(n, dtype=jnp.int32) * 100,
+                              dest=jnp.full((n,), 2, jnp.int32))
+        res = net.simulate_fabric(line_topology(3), spec)
+        assert int(res.delivered) == n
+        # each event crossed two links
+        assert int(np.asarray(res.sent).sum()) == 2 * n
+        # two-hop latency is at least two event cycles
+        assert net.delivered_latencies(res).min() >= 2 * 31
+
+
+class TestRoutingAndAddressing:
+    def test_bfs_table_ring(self):
+        rt = RoutingTable.build(ring_topology(4))
+        # opposite corners are 2 hops, neighbours 1
+        assert rt.hops[0, 2] == 2 and rt.hops[0, 1] == 1
+        assert rt.diameter == 2
+        assert (np.diag(rt.hops) == 0).all()
+        assert (rt.hops == rt.hops.T).all()
+
+    def test_bfs_next_hop_advances(self):
+        """Following next_link/out_side always reduces hops by one."""
+        topo = mesh2d_topology(3, 3)
+        rt = RoutingTable.build(topo)
+        for c in range(topo.n_chips):
+            for d in range(topo.n_chips):
+                if c == d:
+                    continue
+                l = rt.next_link[c, d]
+                side = rt.out_side[c, d]
+                assert topo.links[l][side] == c  # we sit on the out side
+                nxt = topo.links[l][1 - side]
+                assert rt.hops[nxt, d] == rt.hops[c, d] - 1
+
+    def test_address_pack_roundtrip(self):
+        addr = AddressSpec()
+        chips = np.array([0, 3, 255], np.int32)
+        cores = np.array([0, 12345, (1 << addr.core_bits) - 1], np.int32)
+        w = addr.pack(chips, cores)
+        assert (w < (1 << (addr.word_bits - 1))).all()  # fits, no mcast bit
+        c2, k2 = addr.unpack(w)
+        np.testing.assert_array_equal(c2, chips)
+        np.testing.assert_array_equal(k2, cores)
+        assert not addr.is_multicast(w).any()
+        assert addr.is_multicast(addr.pack_multicast(np.int32(7))).all()
+
+    def test_address_range_checks(self):
+        addr = AddressSpec(chip_bits=4)
+        with pytest.raises(ValueError):
+            addr.pack(16, 0)
+        with pytest.raises(ValueError):
+            addr.pack(0, 1 << addr.core_bits)
+
+    def test_multicast_expansion_conserved(self):
+        """Tag expansion delivers one copy per member (source excluded)."""
+        addr = AddressSpec()
+        mc = MulticastTable(np.array([[True, True, True, True, False,
+                                       False, False, False]]))
+        n = 12
+        spec = tr.TrafficSpec(
+            src=jnp.zeros(n, jnp.int32),
+            t=jnp.arange(n, dtype=jnp.int32) * 400,
+            dest=jnp.asarray(addr.pack_multicast(np.zeros(n, np.int32))))
+        res = net.simulate_fabric(ring_topology(8), spec, addr=addr,
+                                  mcast=mc)
+        # tag 0 = chips 0..3, src 0 excluded -> 3 copies per event
+        assert res.injected == 3 * n
+        assert int(res.delivered) == 3 * n
+        dst = np.asarray(res.log_dest)[:int(res.delivered)]
+        assert sorted(set(dst.tolist())) == [1, 2, 3]
+
+    def test_self_addressed_rejected(self):
+        spec = tr.TrafficSpec(src=jnp.zeros(1, jnp.int32),
+                              t=jnp.zeros(1, jnp.int32),
+                              dest=jnp.zeros(1, jnp.int32))
+        with pytest.raises(ValueError, match="self-addressed"):
+            net.simulate_fabric(line_topology(2), spec)
+
+
+class TestTrafficGenerators:
+    @pytest.mark.parametrize("pattern", sorted(tr.PATTERNS))
+    def test_well_formed(self, pattern):
+        n_chips, epc = 6, 20
+        spec = tr.PATTERNS[pattern](jax.random.PRNGKey(2), n_chips, epc)
+        src = np.asarray(spec.src)
+        t = np.asarray(spec.t)
+        dest = np.asarray(spec.dest)
+        assert (dest != src).all()
+        assert (0 <= dest).all() and (dest < n_chips).all()
+        assert (t >= 0).all()
+        for c in np.unique(src):  # nondecreasing per source
+            tc = t[src == c]
+            assert (np.diff(tc) >= 0).all()
+
+    def test_ping_pong_pairs(self):
+        spec = tr.ping_pong(4, 8)
+        src = np.asarray(spec.src)
+        dest = np.asarray(spec.dest)
+        assert (dest == (src ^ 1)).all()
+        assert (np.asarray(spec.t) == 0).all()
+
+    def test_ping_pong_odd_chip_silent(self):
+        spec = tr.ping_pong(5, 4)
+        assert spec.n_events == 4 * 4
+        assert (np.asarray(spec.src) < 4).all()
+
+    def test_hot_spot_concentrates(self):
+        spec = tr.hot_spot(jax.random.PRNGKey(0), 8, 200, hot_chip=3,
+                           hot_frac=0.8)
+        dest = np.asarray(spec.dest)
+        src = np.asarray(spec.src)
+        frac = np.mean(dest[src != 3] == 3)
+        assert frac > 0.6  # concentrated, allowing sampling noise
+
+    def test_poisson_mean_gap(self):
+        spec = tr.poisson(jax.random.PRNGKey(4), 2, 2000, mean_gap_ns=100.0)
+        t = np.asarray(spec.t)[np.asarray(spec.src) == 0]
+        gaps = np.diff(t)
+        assert abs(gaps.mean() - 100.0) < 15.0
+
+
+class TestCapacityLimits:
+    def test_undersized_queue_raises_on_backlog(self):
+        spec = tr.ping_pong(2, 64)
+        with pytest.raises(ValueError, match="queue capacity"):
+            net.simulate_fabric(ring_topology(2), spec, queue_capacity=8)
+
+    def test_forward_drops_counted(self):
+        """A relay queue overwhelmed by converging forwards drops (and
+        says so) instead of corrupting state: delivered + drops accounts
+        for every injected event."""
+        # chips 0 and 1 flood chip 3 through relay chip 2: the (2,3)
+        # queue sees 2x its drain rate and overflows a one-source-sized
+        # capacity.
+        topo = Topology(4, np.array([(0, 2), (1, 2), (2, 3)], np.int32))
+        n = 64
+        spec = tr.TrafficSpec(
+            src=jnp.concatenate([jnp.zeros(n, jnp.int32),
+                                 jnp.ones(n, jnp.int32)]),
+            t=jnp.zeros(2 * n, jnp.int32),
+            dest=jnp.full((2 * n,), 3, jnp.int32))
+        res = net.simulate_fabric(topo, spec, queue_capacity=n)
+        assert int(res.drops) > 0
+        assert int(res.delivered) + int(res.drops) == 2 * n

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.aer_decode import aer_decode_pallas

@@ -1,0 +1,91 @@
+"""Unit coverage for the measurement helpers against hand-computed
+Table II / pin-saving values (paper §IV)."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import protocol_sim as ps
+from repro.core.halfduplex import wire_bytes_per_direction
+from repro.core.link import PAPER_TIMING, LinkTiming
+
+
+def _result(sent_l, sent_r, t_end, n_switches=0):
+    """Hand-built SimResult (trace unused by the helpers)."""
+    return ps.SimResult(trace=None,
+                        sent_l=jnp.int32(sent_l), sent_r=jnp.int32(sent_r),
+                        t_end=jnp.int32(t_end),
+                        n_switches=jnp.int32(n_switches))
+
+
+class TestThroughput:
+    def test_hand_computed_rate(self):
+        # 100 events in 3100 ns = 100 / 3.1 us = 32.258... MEvents/s,
+        # the paper's Fig. 7 steady-state 1/31 ns rate.
+        res = _result(100, 0, 100 * 31)
+        assert float(ps.throughput_mev_s(res)) == pytest.approx(1e3 / 31,
+                                                                rel=1e-6)
+
+    def test_bidirectional_sum(self):
+        # both directions count: 60 + 40 events in 3.5 us
+        res = _result(60, 40, 3500)
+        assert float(ps.throughput_mev_s(res)) == pytest.approx(100 / 3.5,
+                                                                rel=1e-6)
+
+    def test_t_end_zero_guard(self):
+        """No elapsed time -> 0 MEvents/s, not a NaN/inf division."""
+        res = _result(5, 5, 0)
+        thr = float(ps.throughput_mev_s(res))
+        assert thr == 0.0
+
+    def test_table_ii_rates_from_timing(self):
+        assert PAPER_TIMING.onedir_throughput_mev_s() == pytest.approx(
+            1e3 / 31)  # 32.26 MEvents/s
+        assert PAPER_TIMING.bidir_throughput_mev_s() == pytest.approx(
+            1e3 / 35)  # 28.57 MEvents/s
+
+
+class TestEnergy:
+    def test_hand_computed(self):
+        # Table II: 11 pJ per delivered event
+        res = _result(30, 12, 10_000)
+        assert float(ps.energy_pj(res)) == pytest.approx(11.0 * 42)
+
+    def test_custom_timing(self):
+        res = _result(10, 0, 1_000)
+        t = LinkTiming(e_event_pj=7.5)
+        assert float(ps.energy_pj(res, timing=t)) == pytest.approx(75.0)
+
+    def test_energy_nj_matches_pj(self):
+        assert PAPER_TIMING.energy_nj(1000) == pytest.approx(11.0)
+
+
+class TestWireBytes:
+    """halfduplex.wire_bytes_per_direction — the pin-saving argument in
+    byte units: ring all-reduce ships 2(n-1)/n of the payload; the
+    bi-directional schedule halves the per-direction share."""
+
+    def test_unidirectional_hand_value(self):
+        # n=4, payload 1024 B: 2*(3/4)*1024 = 1536 B on one direction
+        assert wire_bytes_per_direction(1024, 4, False) == pytest.approx(
+            1536.0)
+
+    def test_bidirectional_halves(self):
+        assert wire_bytes_per_direction(1024, 4, True) == pytest.approx(768.0)
+        for n in (2, 3, 8, 16):
+            uni = wire_bytes_per_direction(4096, n, False)
+            assert wire_bytes_per_direction(4096, n, True) == pytest.approx(
+                uni / 2)
+
+    def test_two_devices(self):
+        # n=2: each device ships exactly the payload once (2*(1/2)*B)
+        assert wire_bytes_per_direction(512, 2, False) == pytest.approx(512.0)
+
+
+class TestPinSavings:
+    def test_paper_quoted_100_ios(self):
+        # 4 borders x (26-bit shared bus - 1 extra SW wire) = 100
+        assert PAPER_TIMING.io_pins_saved(n_links=4) == 100
+
+    def test_scales_with_links(self):
+        assert PAPER_TIMING.io_pins_saved(n_links=1) == 25
+        assert LinkTiming(word_bits=13).io_pins_saved(n_links=4) == 48

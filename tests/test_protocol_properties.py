@@ -16,7 +16,7 @@ System invariants checked over randomized arrival processes and parameters:
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import protocol_sim as ps
 from repro.core.link import PAPER_TIMING
