@@ -1,0 +1,97 @@
+"""CI bench-smoke: engines agree bit-exactly and the hot path stays fast.
+
+Runs one small fabric through every engine: ring-4 under all traffic
+patterns on the ``reference`` slot-scan engine vs. the ``ring`` hot
+path, plus one Poisson cell on the ``pallas`` fused-kernel engine
+(interpret mode off-TPU) — asserting the ``FabricResult``s identical
+field-for-field.  Then it times the ring engine end-to-end (compile +
+run, the number a user feels) and fails if it regressed more than
+``MAX_REGRESSION``x against the checked-in baseline in
+``baselines/fabric_smoke.json``.
+
+The 5x headroom absorbs CI machine variance; a genuine complexity
+regression (e.g. the per-step queue read going back to O(C)) overshoots
+it immediately.  Refresh the baseline with ``--update-baseline`` after
+an intentional perf change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core import network as net
+from repro.core import traffic as tr
+from repro.core.router import ring_topology
+
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "fabric_smoke.json")
+MAX_REGRESSION = 5.0
+N_CHIPS = 4
+EVENTS_PER_CHIP = 16
+
+_assert_bit_exact = net.assert_results_equal  # one shared field list
+
+
+def run_smoke() -> dict:
+    topo = ring_topology(N_CHIPS)
+    t_ring = 0.0
+    for i, (name, gen) in enumerate(sorted(tr.PATTERNS.items())):
+        spec = gen(jax.random.PRNGKey(i), N_CHIPS, EVENTS_PER_CHIP)
+        mb = 1 if name == "ping_pong" else 0
+        ref = net.simulate_fabric(topo, spec, engine="reference",
+                                  max_burst=mb)
+        t0 = time.perf_counter()
+        ring = net.simulate_fabric(topo, spec, engine="ring", max_burst=mb)
+        jax.block_until_ready(ring.log_del)
+        t_ring += time.perf_counter() - t0
+        _assert_bit_exact(ref, ring, f"ring{N_CHIPS}/{name}")
+        if name == "poisson":  # one cell through the fused-kernel engine
+            pal = net.simulate_fabric(topo, spec, engine="pallas",
+                                      max_burst=mb)
+            _assert_bit_exact(ref, pal, f"ring{N_CHIPS}/{name}/pallas")
+    return {"ring_us": t_ring * 1e6,
+            "cells": len(tr.PATTERNS),
+            "n_chips": N_CHIPS,
+            "events_per_chip": EVENTS_PER_CHIP}
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--update-baseline", action="store_true",
+                   help="overwrite the checked-in wall-clock baseline")
+    args = p.parse_args(argv)
+
+    result = run_smoke()
+    print(f"engines bit-exact on {result['cells']} ring{N_CHIPS} cells; "
+          f"ring engine {result['ring_us'] / 1e3:.0f} ms total "
+          f"(compile + run)")
+
+    if args.update_baseline:
+        os.makedirs(os.path.dirname(BASELINE), exist_ok=True)
+        with open(BASELINE, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"baseline updated: {BASELINE}")
+        return 0
+
+    with open(BASELINE) as f:
+        base = json.load(f)
+    ratio = result["ring_us"] / base["ring_us"]
+    print(f"wall-clock vs baseline: {ratio:.2f}x "
+          f"(limit {MAX_REGRESSION:.1f}x)")
+    if ratio > MAX_REGRESSION:
+        print(f"FAIL: ring engine regressed {ratio:.2f}x over the "
+              f"checked-in baseline ({base['ring_us'] / 1e3:.0f} ms)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

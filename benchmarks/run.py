@@ -1,4 +1,9 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV;
+# ``--json PATH`` additionally writes the fabric sweep as machine-readable
+# JSON (name, us_per_call, derived, engine tag, parsed metrics) — the
+# ``BENCH_fabric.json`` artifact CI tracks PR-over-PR.
+import argparse
+import json
 import os
 import sys
 
@@ -6,16 +11,44 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from benchmarks import fabric_sweep, paper_benches, roofline
+    from repro.core.network import ENGINES
+    p = argparse.ArgumentParser()
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="write the fabric sweep cells as JSON (e.g. "
+                        "BENCH_fabric.json)")
+    p.add_argument("--only", choices=("fabric",), default=None,
+                   help="run only the named bench family")
+    p.add_argument("--engine", default=fabric_sweep.DEFAULT_ENGINE,
+                   choices=sorted(ENGINES),
+                   help="fabric event-transport engine")
+    p.add_argument("--slow", action="store_true",
+                   help="include the slow-lane fabric rows (N=32/64, 8x8)")
+    args = p.parse_args(argv)
+
     rows = []
-    for fn in paper_benches.ALL:
-        rows.extend(fn())
-    rows.extend(fabric_sweep.run())
-    rows.extend(roofline.run())
+    if args.only is None:
+        for fn in paper_benches.ALL:
+            rows.extend(fn())
+    fabric_cells = fabric_sweep.run_structured(engine=args.engine,
+                                               slow=args.slow)
+    rows.extend((c["name"], c["us_per_call"], c["derived"])
+                for c in fabric_cells)
+    if args.only is None:
+        rows.extend(roofline.run())
+
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "fabric_sweep", "engine": args.engine,
+                       "slow_lane": args.slow, "cells": fabric_cells},
+                      f, indent=2)
+        print(f"# wrote {len(fabric_cells)} fabric cells to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == '__main__':

@@ -4,8 +4,8 @@ The paper measures ONE bi-directional transceiver pair on one shared AER
 bus.  This module composes many such pairs into a multi-chip fabric
 (line / ring / 2-D mesh — ``router.Topology``): every link of the fabric
 is one paper-faithful ``protocol_sim.LinkState`` micro-transaction unit,
-and one global ``lax.scan`` step advances **all** links simultaneously via
-``jax.vmap(link_step)`` — the LinkSim unit batches across links.
+and one global step advances **all** links simultaneously via
+``protocol_sim.link_step_batch`` — the LinkSim unit batches across links.
 
 Event transport
 ---------------
@@ -34,6 +34,47 @@ for the insert bound): idle links never jump past it, and a busy link
 pops an entry only once no future forward can precede it — so queues
 serve in true release order and end-to-end latencies are exact.
 
+Engines
+-------
+``simulate_fabric`` ships three interchangeable, bit-exact event-transport
+engines (select with ``engine=``):
+
+``"ring"`` (default)
+    The O(1)-per-step hot path.  Each endpoint queue is decomposed into
+    release-time-sorted streams — the static prefill (sorted at setup)
+    plus one FIFO stream per in-edge of the chip (a link's delivery clock
+    is monotone, so forwards from one link arrive in release order; this
+    replaces the tail-insert + local-sift design with something strictly
+    stronger: no sift is ever needed).  The per-step pending /
+    next-arrival / pop computation then reads only the stream *heads* —
+    O(deg) ≈ O(1) slots per endpoint instead of scanning all ``C`` — and
+    pops compare ``(release, insertion_key)`` so service order matches
+    the flat-slot argmin of the reference engine exactly.  The
+    micro-transaction scan runs as chunked ``lax.scan`` inside
+    ``lax.while_loop`` and exits within one chunk of
+    ``delivered + drops == injected`` instead of padding to
+    ``max_steps``, and the whole simulation is compiled once per shape
+    signature through a jit cache with buffer donation (stream widths
+    are bucketed to powers of two so sweep cells share compilations).
+
+``"reference"``
+    The flat one-shot slot-array engine (PR 1): every step re-scans all
+    ``L x 2 x C`` slots.  O(max_steps · L · C) — kept verbatim as the
+    semantics oracle; every other engine must reproduce its
+    ``FabricResult`` bit-exactly.
+
+``"pallas"``
+    The reference slot layout with the per-step O(C) queue scan
+    (released-count / min-release / next-arrival / argmin-pop) and the
+    pop-consume + forward-append scatter fused into the Pallas kernels
+    of ``kernels/fabric_queue.py`` (scatter-as-matmul, MXU-shaped; runs
+    in interpret mode off-TPU).
+
+When the step bound binds before delivery completes, the chunked ring
+engine may run up to ``chunk_size - 1`` extra micro-transactions past
+``max_steps``; completed simulations are unaffected (post-completion
+steps are no-ops).
+
 The degenerate 2-chip fabric runs the identical ``link_step`` code path
 with the identical pending/next-arrival semantics as
 ``protocol_sim.simulate`` and therefore reproduces its event departure
@@ -47,6 +88,7 @@ event: ``e_event_pj``), aggregate + per-link throughput.
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -54,32 +96,39 @@ import jax.numpy as jnp
 import numpy as np
 
 from .link import LinkTiming, PAPER_TIMING
-from .protocol_sim import BIG_NS, LinkState, link_step, reset_link
+from .protocol_sim import BIG_NS, LinkState, link_step_batch, reset_link
 from .router import AddressSpec, MulticastTable, RoutingTable, Topology
 from .traffic import TrafficSpec
 
 __all__ = ["FabricResult", "simulate_fabric", "reset_links",
            "fabric_throughput_mev_s", "fabric_energy_pj",
            "per_link_throughput_mev_s", "delivered_latencies",
-           "latency_stats"]
+           "latency_stats", "ENGINES", "DEFAULT_CHUNK_SIZE",
+           "RESULT_FIELDS", "assert_results_equal"]
 
 _BIG = BIG_NS  # one sentinel shared with link_step's park/wake contract
 
+#: Event-transport engines accepted by ``simulate_fabric(engine=...)``.
+ENGINES = ("ring", "reference", "pallas")
 
-class FabricState(NamedTuple):
-    link: LinkState         # (L,)-leaved LinkSim batch
-    q_time: jnp.ndarray     # (L, 2, C) release times; BIG_NS = empty/consumed
-    q_dest: jnp.ndarray     # (L, 2, C) destination chip
-    q_inj: jnp.ndarray      # (L, 2, C) original injection time
-    n_ins: jnp.ndarray      # (L, 2) entries ever inserted (next free slot)
-    sent: jnp.ndarray       # (L, 2) transmissions per direction (0: L->R)
-    prev_mode_l: jnp.ndarray  # (L,) for switch counting
-    n_sw: jnp.ndarray       # (L,) mode_l transitions (excl. reset step)
-    log_inj: jnp.ndarray    # (E,) delivery log: injection time
-    log_del: jnp.ndarray    # (E,) delivery log: delivery time
-    log_dest: jnp.ndarray   # (E,) delivery log: destination chip
-    log_n: jnp.ndarray      # scalar: deliveries so far
-    drops: jnp.ndarray      # scalar: forwards lost to a full queue
+#: Micro-transactions per ``lax.scan`` chunk of the ring engine.
+DEFAULT_CHUNK_SIZE = 128
+
+# Ring-engine shape buckets.  Every array dimension that would otherwise
+# vary cell-to-cell in a sweep (links, events, chip count, queue widths,
+# chip degree) is padded up to a floored power of two, and the logical
+# event/capacity counts travel as *dynamic* scalars — so one XLA
+# compilation serves every (topology, pattern) cell that fits the bucket,
+# and the jit cache turns a 19-cell sweep into ~2 compiles.  Padding is
+# semantically inert: dummy links have empty queues (they park forever
+# and never constrain the conservative horizon), dummy queue slots hold
+# the BIG_NS sentinel, and results are trimmed to the real sizes.
+_RING_L_FLOOR = 32        # links
+_RING_N_FLOOR = 64        # chips (routing-table side)
+_RING_D_FLOOR = 4         # chip degree (forward streams per endpoint)
+_RING_E_FLOOR = 2048      # expanded events (delivery-log length)
+_RING_PREFILL_FLOOR = 2048  # prefill queue width
+_RING_STREAM_FLOOR = 512  # forward-stream width
 
 
 class FabricResult(NamedTuple):
@@ -95,20 +144,60 @@ class FabricResult(NamedTuple):
     drops: jnp.ndarray       # scalar
 
 
+#: FabricResult fields the engines must agree on bit-for-bit (log arrays
+#: compared up to ``delivered`` — beyond it is scratch space).
+RESULT_FIELDS = ("delivered", "log_inj", "log_del", "log_dest", "sent",
+                 "n_switches", "t_link", "t_end", "drops")
+
+
+def assert_results_equal(a: FabricResult, b: FabricResult, ctx: str = ""):
+    """The engines' bit-exactness contract, shared by tests and the CI
+    bench smoke so the checked field list cannot drift apart."""
+    assert a.injected == b.injected, ctx
+    n = int(a.delivered)
+    for f in RESULT_FIELDS:
+        x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        if f.startswith("log"):
+            x, y = x[:n], y[:n]
+        if not np.array_equal(x, y):
+            raise AssertionError(f"{ctx}: engines disagree on field {f}: "
+                                 f"{x!r} != {y!r}")
+
+
 def reset_links(initial_tx: np.ndarray) -> LinkState:
     """Batched ``protocol_sim.reset_link``: leaf shape (L,)."""
     return jax.vmap(reset_link)(jnp.asarray(initial_tx, jnp.int32))
 
 
-def _prefill(topo: Topology, rt: RoutingTable, src, t, dest, capacity: int):
-    """Route every injected event to its first-hop queue (numpy, setup)."""
-    L = topo.n_links
+# -----------------------------------------------------------------------
+# Setup-time helpers (plain numpy)
+# -----------------------------------------------------------------------
+
+def _pow2ceil(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def _check_reachable(rt: RoutingTable, src: np.ndarray, dest: np.ndarray):
     first_link = rt.next_link[src, dest]
-    first_side = rt.out_side[src, dest]
     if np.any(first_link < 0):
         bad = np.flatnonzero(first_link < 0)[:4]
         raise ValueError(f"unreachable destinations, e.g. events {bad}: "
                          f"src={src[bad]} dest={dest[bad]}")
+
+
+def _prefill(topo: Topology, rt: RoutingTable, src, t, dest,
+             capacity: int, width: int | str | None = None):
+    """Route every injected event to its first-hop queue (numpy, setup).
+
+    ``capacity`` is the logical per-endpoint budget (raises on overflow);
+    ``width`` is the allocated column count of the returned arrays —
+    ``None`` = ``capacity`` (the reference slot layout), ``"auto"`` = the
+    max initial backlog bucketed to a power of two plus one
+    always-empty pad column (the ring engine's prefill-only layout).
+    """
+    L = topo.n_links
+    first_link = rt.next_link[src, dest]   # validated by simulate_fabric
+    first_side = rt.out_side[src, dest]
     grp = first_link * 2 + first_side
     order = np.lexsort((np.arange(len(t)), t, grp))  # stable time order
     grp_s, t_s, dest_s, inj_s = grp[order], t[order], dest[order], t[order]
@@ -117,20 +206,25 @@ def _prefill(topo: Topology, rt: RoutingTable, src, t, dest, capacity: int):
     if sizes.max(initial=0) > capacity:
         raise ValueError(f"queue capacity {capacity} < initial backlog "
                          f"{sizes.max()}; raise queue_capacity")
+    if width == "auto":
+        width = _pow2ceil(max(int(sizes.max(initial=1)),
+                              _RING_PREFILL_FLOOR)) + 1
+    elif width is None:
+        width = capacity
     # within-queue slot = position since the queue's first event
     starts = np.zeros(2 * L + 1, np.int64)
     np.cumsum(sizes, out=starts[1:2 * L + 1])
     slot = np.arange(len(t)) - starts[grp_s]
 
     # empty slots hold the BIG_NS sentinel: "never released"
-    q_time = np.full((2 * L, capacity), int(_BIG), np.int32)
-    q_dest = np.zeros((2 * L, capacity), np.int32)
-    q_inj = np.zeros((2 * L, capacity), np.int32)
+    q_time = np.full((2 * L, width), int(_BIG), np.int32)
+    q_dest = np.zeros((2 * L, width), np.int32)
+    q_inj = np.zeros((2 * L, width), np.int32)
     q_time[grp_s, slot] = t_s
     q_dest[grp_s, slot] = dest_s
     q_inj[grp_s, slot] = inj_s
-    return (q_time.reshape(L, 2, capacity), q_dest.reshape(L, 2, capacity),
-            q_inj.reshape(L, 2, capacity), sizes.reshape(L, 2))
+    return (q_time.reshape(L, 2, width), q_dest.reshape(L, 2, width),
+            q_inj.reshape(L, 2, width), sizes.reshape(L, 2))
 
 
 def _expand(spec: TrafficSpec, addr: AddressSpec | None,
@@ -158,6 +252,516 @@ def _expand(spec: TrafficSpec, addr: AddressSpec | None,
             np.concatenate(out_d))
 
 
+def _in_edge_ranks(topo: Topology):
+    """Per-chip enumeration of delivering links.
+
+    ``rank[l, side]`` is the index of link ``l`` among the links incident
+    to chip ``topo.links[l, side]`` (id order) — the forward-stream slot
+    an event delivered over ``l`` into that chip appends to.  Returns
+    ``(rank (L, 2) int32, D)`` with ``D`` the maximum chip degree.
+    """
+    L = topo.n_links
+    rank = np.zeros((L, 2), np.int32)
+    deg = np.zeros(topo.n_chips, np.int32)
+    for l, (a, b) in enumerate(topo.links):
+        rank[l, 0] = deg[a]
+        deg[a] += 1
+        rank[l, 1] = deg[b]
+        deg[b] += 1
+    return rank, max(int(deg.max(initial=1)), 1)
+
+
+def _stream_quota(rt: RoutingTable, links: np.ndarray, in_rank: np.ndarray,
+                  src: np.ndarray, dest: np.ndarray, L: int, D: int):
+    """Static per-(queue, in-edge) forward-count upper bound.
+
+    Routing is deterministic, so every event's full path is known at
+    setup; walking all paths counts how many forwards each stream can
+    ever receive (drops only shorten paths, so the no-drop count is an
+    upper bound).  O(E · diameter) in numpy, off the hot path.
+    """
+    counts = np.zeros((2 * L, D), np.int64)
+    c = src.astype(np.int64).copy()
+    prev_l = np.full(len(src), -1, np.int64)
+    prev_rx_side = np.zeros(len(src), np.int64)
+    active = c != dest
+    while active.any():
+        l = np.where(active, rt.next_link[c, dest], 0)
+        s = np.where(active, rt.out_side[c, dest], 0)
+        m = active & (prev_l >= 0)
+        if m.any():
+            d = in_rank[prev_l[m], prev_rx_side[m]]
+            np.add.at(counts, (l[m] * 2 + s[m], d), 1)
+        prev_l = np.where(active, l, prev_l)
+        prev_rx_side = np.where(active, 1 - s, prev_rx_side)
+        c = np.where(active, links[l, 1 - s], c)
+        active = c != dest
+    return counts
+
+
+def _pad_to(a: np.ndarray, shape: tuple, fill) -> np.ndarray:
+    """Embed ``a`` in a ``fill``-initialized array of ``shape``."""
+    out = np.full(shape, fill, a.dtype)
+    out[tuple(slice(n) for n in a.shape)] = a
+    return out
+
+
+def _overflow_guard(t_max: int, total_tx: int, timing: LinkTiming):
+    """Refuse traffic that could push a clock past the ``BIG_NS`` sentinel.
+
+    Empty queue slots hold ``BIG_NS`` ("never released"); once any
+    link-local clock reaches it, empty slots would look released and the
+    queue state would corrupt silently.  The clock only advances by
+    jumping to an arrival (<= ``t_max``) or by paying one transmission
+    cost, so ``t_max + total_tx * worst_cost`` bounds every clock (and
+    ``horizon + t_cycle`` stays below int32 overflow a fortiori).
+    """
+    worst_cost = timing.t_req2req_ns + max(timing.t_reverse_penalty_ns,
+                                           timing.t_idle_switch_ns)
+    bound = int(t_max) + int(total_tx) * int(worst_cost)
+    if bound >= int(_BIG):
+        raise ValueError(
+            f"clock overflow risk: worst-case end time {bound} ns reaches "
+            f"the BIG_NS sentinel ({int(_BIG)} ns). Long-running "
+            f"simulations must keep max(t) + total_hops * "
+            f"{worst_cost} ns below it; rebase injection times or split "
+            f"the simulation.")
+
+
+def _jit_cached(fn, donate_argnums=()):
+    """jit with buffer donation where the backend supports it (donation
+    on CPU is a no-op warning in current JAX, so skip it there)."""
+    if donate_argnums and jax.default_backend() != "cpu":
+        return jax.jit(fn, donate_argnums=donate_argnums)
+    return jax.jit(fn)
+
+
+# -----------------------------------------------------------------------
+# Per-step pieces shared verbatim by every engine body (the bit-exactness
+# contract lives here: one implementation of delivery logging and of the
+# simultaneous-forwards insertion ordering)
+# -----------------------------------------------------------------------
+
+def _log_deliveries(log_inj, log_del, log_dest, log_n,
+                    deliver, ev_inj, t_del, ev_dest, n_slots: int):
+    """Append this step's deliveries to the packed log (order: link id)."""
+    d32 = deliver.astype(jnp.int32)
+    slot = jnp.where(deliver, log_n + jnp.cumsum(d32) - d32, n_slots)
+    return (log_inj.at[slot].set(ev_inj, mode="drop"),
+            log_del.at[slot].set(t_del, mode="drop"),
+            log_dest.at[slot].set(ev_dest, mode="drop"),
+            log_n + jnp.sum(d32))
+
+
+def _forward_slots(forward, fq, lidx, n_ins_flat, cap, n_queues: int):
+    """Insertion slots for this step's forwards.
+
+    Simultaneous forwards into one queue are ordered by link index; the
+    returned ``key`` is the queue's insertion index (the reference slot
+    id and pop tie-break key).  Returns ``(fq_g, key, app, n_dropped)``
+    where ``app`` masks forwards that fit under ``cap``.
+    """
+    fq_m = jnp.where(forward, fq, n_queues)   # sentinel for non-forwards
+    before = (fq_m[None, :] == fq_m[:, None]) \
+        & (lidx[None, :] < lidx[:, None]) & forward[None, :]
+    offs = jnp.sum(before.astype(jnp.int32), axis=1)
+    fq_g = jnp.where(forward, fq, 0)
+    key = n_ins_flat[fq_g] + offs             # next free slot
+    cap_ok = key < cap
+    app = forward & cap_ok
+    return fq_g, key, app, jnp.sum((forward & ~cap_ok).astype(jnp.int32))
+
+
+# -----------------------------------------------------------------------
+# Slot engines ("reference" and "pallas"): flat one-shot (Q, C) arrays
+# -----------------------------------------------------------------------
+
+class _SlotState(NamedTuple):
+    link: LinkState         # (L,)-leaved LinkSim batch
+    q_time: jnp.ndarray     # (Q, C) release times; BIG_NS = empty/consumed
+    q_dest: jnp.ndarray     # (Q, C) destination chip
+    q_inj: jnp.ndarray      # (Q, C) original injection time
+    n_ins: jnp.ndarray      # (L, 2) entries ever inserted (next free slot)
+    sent: jnp.ndarray       # (L, 2) transmissions per direction (0: L->R)
+    prev_mode_l: jnp.ndarray  # (L,) for switch counting
+    n_sw: jnp.ndarray       # (L,) mode_l transitions (excl. reset step)
+    log_inj: jnp.ndarray    # (E,) delivery log: injection time
+    log_del: jnp.ndarray    # (E,) delivery log: delivery time
+    log_dest: jnp.ndarray   # (E,) delivery log: destination chip
+    log_n: jnp.ndarray      # scalar: deliveries so far
+    drops: jnp.ndarray      # scalar: forwards lost to a full queue
+
+
+@functools.lru_cache(maxsize=None)
+def _slot_engine(L: int, E: int, C: int, max_steps: int,
+                 timing: LinkTiming, max_burst: int, use_kernels: bool):
+    """Compile-once slot-scan simulation for one static shape signature."""
+    from ..kernels import ops as kops
+    from ..kernels import ref as kref
+    if use_kernels:
+        scan_fn = kops.fabric_queue_scan
+        update_fn = kops.fabric_queue_update
+    else:
+        scan_fn = kref.fabric_queue_scan
+        update_fn = kref.fabric_queue_update
+
+    Q = 2 * L
+    t_cycle = jnp.int32(timing.t_req2req_ns)
+    lidx = jnp.arange(L)
+
+    def run(q_time, q_dest, q_inj, sizes, init_tx,
+            links_j, next_link_j, out_side_j):
+        link0 = reset_links(init_tx)
+        init = _SlotState(
+            link=link0,
+            q_time=q_time, q_dest=q_dest, q_inj=q_inj,
+            n_ins=sizes,
+            sent=jnp.zeros((L, 2), jnp.int32),
+            prev_mode_l=link0.xl.mode,
+            n_sw=jnp.zeros((L,), jnp.int32),
+            log_inj=jnp.zeros((E,), jnp.int32),
+            log_del=jnp.zeros((E,), jnp.int32),
+            log_dest=jnp.zeros((E,), jnp.int32),
+            log_n=jnp.zeros((), jnp.int32),
+            drops=jnp.zeros((), jnp.int32),
+        )
+
+        def body(s: _SlotState, step_i):
+            t_now = s.link.t  # (L,)
+
+            # --- pending & next-arrival per endpoint queue --------------
+            # An entry is *in* the FIFO once its release time has passed;
+            # empty/consumed slots hold BIG_NS and never match.  Service
+            # order is release-time order (argmin; ties resolve to the
+            # lowest slot, i.e. FIFO among simultaneous arrivals), which
+            # for the sorted single-hop prefill is exactly simulate()'s
+            # searchsorted count.
+            t_q = jnp.repeat(t_now, 2)                           # (Q,)
+            pend_q, r_min_q, nxt_q, amin_q = scan_fn(s.q_time, t_q)
+            pend = pend_q.reshape(L, 2)
+            r_min = r_min_q.reshape(L, 2)
+            t_next = jnp.min(nxt_q.reshape(L, 2), axis=1)        # (L,)
+
+            # --- conservative clock synchronization ---------------------
+            # A link acts no earlier than its clock (work pending) or its
+            # own next arrival: ``na``.  Any *future* forward is released
+            # at some link's next delivery, i.e. no earlier than
+            # min(na) + t_cycle.  Two consequences keep every queue in
+            # true release order:
+            #   * idle links never jump past min(na), so a parked clock
+            #     never overtakes a forward still in flight;
+            #   * a busy link may pop its earliest released entry only if
+            #     its release precedes every possible future insert
+            #     (release <= min(na) + t_cycle) — otherwise it stalls
+            #     until the rest of the fabric catches up (classic
+            #     conservative lookahead).
+            # With one link both guards are vacuous (its own bound is
+            # always the loosest), so simulate() semantics are preserved
+            # bit-exactly.
+            pend_any = (pend[:, 0] + pend[:, 1]) > 0
+            na = jnp.where(pend_any, t_now, t_next)
+            horizon = jnp.min(na)
+            t_next_eff = jnp.minimum(t_next, jnp.maximum(horizon, t_now))
+            safe = r_min <= horizon + t_cycle                    # (L,2)
+            pend_safe = jnp.where(safe, pend, 0)
+
+            # --- one micro-transaction on every link, batched -----------
+            link, out = link_step_batch(s.link, pend_safe[:, 0],
+                                        pend_safe[:, 1], t_next_eff,
+                                        timing=timing, max_burst=max_burst)
+
+            did = (out.tx_l + out.tx_r) > 0                      # (L,) bool
+            did32 = did.astype(jnp.int32)
+            send_side = jnp.where(out.tx_l == 1, 0, 1)           # (L,)
+            qid = lidx * 2 + send_side                           # (L,)
+            pop_slot = amin_q[qid]
+            ev_dest = s.q_dest[qid, pop_slot]
+            ev_inj = s.q_inj[qid, pop_slot]
+            # consume the popped slot (one-shot slots; no reuse)
+            pop_q = jnp.where(did, qid, Q)
+            sent = s.sent.at[lidx, send_side].add(did32)
+
+            # --- deliver or forward -------------------------------------
+            rx_chip = jnp.where(out.tx_l == 1, links_j[:, 1], links_j[:, 0])
+            deliver = did & (ev_dest == rx_chip)
+            forward = did & ~deliver
+
+            log_inj, log_del, log_dest, log_n = _log_deliveries(
+                s.log_inj, s.log_del, s.log_dest, s.log_n,
+                deliver, ev_inj, link.t, ev_dest, E)
+
+            nl = next_link_j[rx_chip, ev_dest]
+            nside = out_side_j[rx_chip, ev_dest]
+            n_ins_f = s.n_ins.reshape(-1)
+            fq_g, slot, app, n_drop = _forward_slots(
+                forward, nl * 2 + nside, lidx, n_ins_f, C, Q)
+            fq_s = jnp.where(app, fq_g, Q)         # drop non-appends
+            q_time, q_dest, q_inj = update_fn(
+                s.q_time, s.q_dest, s.q_inj, pop_q, pop_slot,
+                fq_s, slot, link.t, ev_dest, ev_inj)
+            n_ins = n_ins_f.at[fq_s].add(1, mode="drop").reshape(L, 2)
+            drops = s.drops + n_drop
+
+            # --- switch counting (matches SimResult.n_switches: mode_l
+            # transitions between consecutive steps, reset excluded) -----
+            n_sw = s.n_sw + jnp.where(
+                step_i > 0,
+                (link.xl.mode != s.prev_mode_l).astype(jnp.int32), 0)
+
+            ns = _SlotState(
+                link=link, q_time=q_time, q_dest=q_dest, q_inj=q_inj,
+                n_ins=n_ins, sent=sent,
+                prev_mode_l=link.xl.mode, n_sw=n_sw,
+                log_inj=log_inj, log_del=log_del, log_dest=log_dest,
+                log_n=log_n, drops=drops)
+            return ns, None
+
+        final, _ = jax.lax.scan(body, init, jnp.arange(max_steps))
+        return (final.log_n, final.log_inj, final.log_del, final.log_dest,
+                final.sent, final.n_sw, final.link.t,
+                jnp.max(final.link.t), final.drops)
+
+    return _jit_cached(run, donate_argnums=(0, 1, 2))
+
+
+# -----------------------------------------------------------------------
+# Ring engine: release-time-sorted per-endpoint streams, O(1) per step
+# -----------------------------------------------------------------------
+
+class _RingState(NamedTuple):
+    link: LinkState           # (L,)-leaved LinkSim batch
+    h0: jnp.ndarray           # (L, 2) prefill head (also the pop tie key)
+    fh: jnp.ndarray           # (L, 2, D) forward-stream heads
+    ftl: jnp.ndarray          # (L, 2, D) forward-stream tails
+    fq_time: jnp.ndarray      # (L, 2, D, Cf) stream release times
+    fq_dest: jnp.ndarray      # (L, 2, D, Cf) destination chip
+    fq_inj: jnp.ndarray       # (L, 2, D, Cf) original injection time
+    fq_key: jnp.ndarray       # (L, 2, D, Cf) reference-slot tie key
+    n_ins: jnp.ndarray        # (L, 2) entries ever inserted (capacity/key)
+    sent: jnp.ndarray         # (L, 2)
+    prev_mode_l: jnp.ndarray  # (L,)
+    n_sw: jnp.ndarray         # (L,)
+    log_inj: jnp.ndarray      # (E,)
+    log_del: jnp.ndarray      # (E,)
+    log_dest: jnp.ndarray     # (E,)
+    log_n: jnp.ndarray        # scalar
+    drops: jnp.ndarray        # scalar
+
+
+@functools.lru_cache(maxsize=None)
+def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int,
+                 chunk: int, timing: LinkTiming):
+    """Compile-once ring simulation for one static shape signature.
+
+    All dimensions are the *bucketed* ones (``_RING_*_FLOOR`` pow2
+    padding): ``L`` links, ``E`` delivery-log slots, ``C0``/``Cf``
+    prefill/stream widths (each with one always-``BIG_NS`` pad column so
+    head/tail gathers never need bounds checks), ``D`` streams per
+    endpoint.  The logical capacity, event count and burst bound arrive
+    as dynamic scalars (``cap``, ``real_e``, ``max_burst`` — the FSM's
+    burst guard is pure arithmetic), so every fabric that fits the
+    buckets shares ONE compilation regardless of traffic, capacity or
+    fairness setting.
+    """
+    Q = 2 * L
+    t_cycle = jnp.int32(timing.t_req2req_ns)
+    lidx = jnp.arange(L)
+    no_key = jnp.int32(2 ** 31 - 1)  # tie-break sentinel (keys are < cap)
+
+    def run(q0_time, q0_dest, q0_inj, sizes, init_tx,
+            links_j, next_link_j, out_side_j, in_rank_j,
+            cap, real_e, max_burst, max_steps):
+        link0 = reset_links(init_tx)
+        init = _RingState(
+            link=link0,
+            h0=jnp.zeros((L, 2), jnp.int32),
+            fh=jnp.zeros((L, 2, D), jnp.int32),
+            ftl=jnp.zeros((L, 2, D), jnp.int32),
+            fq_time=jnp.full((L, 2, D, Cf), _BIG, jnp.int32),
+            fq_dest=jnp.zeros((L, 2, D, Cf), jnp.int32),
+            fq_inj=jnp.zeros((L, 2, D, Cf), jnp.int32),
+            fq_key=jnp.zeros((L, 2, D, Cf), jnp.int32),
+            n_ins=sizes,
+            sent=jnp.zeros((L, 2), jnp.int32),
+            prev_mode_l=link0.xl.mode,
+            n_sw=jnp.zeros((L,), jnp.int32),
+            log_inj=jnp.zeros((E,), jnp.int32),
+            log_del=jnp.zeros((E,), jnp.int32),
+            log_dest=jnp.zeros((E,), jnp.int32),
+            log_n=jnp.zeros((), jnp.int32),
+            drops=jnp.zeros((), jnp.int32),
+        )
+
+        def body(s: _RingState, step_i):
+            t_now = s.link.t  # (L,)
+
+            # --- O(1) queue reads: stream heads only --------------------
+            # Every stream is sorted by (release, insertion key): the
+            # prefill by construction, each forward stream because its
+            # source link's delivery clock is monotone.  So per endpoint,
+            # "any released entry", the earliest released release and the
+            # earliest future arrival are all properties of the 1 + D
+            # heads — no O(C) slot scan.
+            p_t = jnp.take_along_axis(
+                q0_time, s.h0[:, :, None], axis=2)[..., 0]       # (L, 2)
+            f_t = jnp.take_along_axis(
+                s.fq_time, s.fh[..., None], axis=3)[..., 0]      # (L, 2, D)
+            p_rel = p_t <= t_now[:, None]
+            f_rel = f_t <= t_now[:, None, None]
+            pend_side = p_rel | jnp.any(f_rel, axis=2)           # (L, 2)
+            r_min = jnp.minimum(
+                jnp.where(p_rel, p_t, _BIG),
+                jnp.min(jnp.where(f_rel, f_t, _BIG), axis=2))
+            nxt = jnp.minimum(
+                jnp.where(p_rel, _BIG, p_t),
+                jnp.min(jnp.where(f_rel, _BIG, f_t), axis=2))
+            t_next = jnp.min(nxt, axis=1)                        # (L,)
+
+            # --- conservative clock synchronization ---------------------
+            # Identical contract to the reference engine (see
+            # _slot_engine); head releases are exact stand-ins: with any
+            # work pending the effective next-arrival collapses to the
+            # clock, and with none pending every head is the stream
+            # minimum.  The FSM only tests pending > 0, so the 0/1
+            # pending indicator transmits identically.
+            pend_any = pend_side[:, 0] | pend_side[:, 1]
+            na = jnp.where(pend_any, t_now, t_next)
+            horizon = jnp.min(na)
+            t_next_eff = jnp.minimum(t_next, jnp.maximum(horizon, t_now))
+            safe = r_min <= horizon + t_cycle                    # (L, 2)
+            pend_safe = (pend_side & safe).astype(jnp.int32)
+
+            # --- one micro-transaction on every link, batched -----------
+            link, out = link_step_batch(s.link, pend_safe[:, 0],
+                                        pend_safe[:, 1], t_next_eff,
+                                        timing=timing, max_burst=max_burst)
+
+            did = (out.tx_l + out.tx_r) > 0                      # (L,) bool
+            did32 = did.astype(jnp.int32)
+            send_side = jnp.where(out.tx_l == 1, 0, 1)           # (L,)
+
+            # --- pop the earliest (release, key) head on the send side --
+            h_sel = s.h0[lidx, send_side]                        # (L,)
+            fh_sel = s.fh[lidx, send_side]                       # (L, D)
+            fk_sel = jnp.take_along_axis(
+                s.fq_key[lidx, send_side],
+                fh_sel[..., None], axis=2)[..., 0]               # (L, D)
+            cand_t = jnp.concatenate(
+                [p_t[lidx, send_side][:, None],
+                 f_t[lidx, send_side]], axis=1)                  # (L, 1+D)
+            cand_k = jnp.concatenate(
+                [h_sel[:, None], fk_sel], axis=1)
+            # (release, insertion_key) lexicographic minimum in two int32
+            # stages (keys are unique reference slot ids per queue, so the
+            # key argmin over release ties is exact and matches the
+            # reference argmin's lowest-slot rule).
+            rel = cand_t <= t_now[:, None]
+            t_best = jnp.min(jnp.where(rel, cand_t, _BIG), axis=1)
+            tie = rel & (cand_t == t_best[:, None])
+            best = jnp.argmin(jnp.where(tie, cand_k, no_key),
+                              axis=1).astype(jnp.int32)          # (L,)
+            from_pre = best == 0
+            d_best = jnp.maximum(best - 1, 0)
+            slot_f = fh_sel[lidx, d_best]
+            ev_dest = jnp.where(
+                from_pre,
+                jnp.take_along_axis(
+                    q0_dest, s.h0[:, :, None],
+                    axis=2)[..., 0][lidx, send_side],
+                s.fq_dest[lidx, send_side, d_best, slot_f])
+            ev_inj = jnp.where(
+                from_pre,
+                jnp.take_along_axis(
+                    q0_inj, s.h0[:, :, None],
+                    axis=2)[..., 0][lidx, send_side],
+                s.fq_inj[lidx, send_side, d_best, slot_f])
+            h0 = s.h0.at[lidx, send_side].add(
+                (did & from_pre).astype(jnp.int32))
+            fh = s.fh.at[lidx, send_side, d_best].add(
+                (did & ~from_pre).astype(jnp.int32))
+            sent = s.sent.at[lidx, send_side].add(did32)
+
+            # --- deliver or forward -------------------------------------
+            rx_side = jnp.where(out.tx_l == 1, 1, 0)
+            rx_chip = links_j[lidx, rx_side]
+            deliver = did & (ev_dest == rx_chip)
+            forward = did & ~deliver
+
+            log_inj, log_del, log_dest, log_n = _log_deliveries(
+                s.log_inj, s.log_del, s.log_dest, s.log_n,
+                deliver, ev_inj, link.t, ev_dest, E)
+
+            # --- forward append: tail of the delivering link's stream ---
+            nl = next_link_j[rx_chip, ev_dest]
+            nside = out_side_j[rx_chip, ev_dest]
+            n_ins_f = s.n_ins.reshape(-1)
+            # ``key`` is the reference slot id: the pop tie-break key
+            fq_g, key, app, n_drop = _forward_slots(
+                forward, nl * 2 + nside, lidx, n_ins_f, cap, Q)
+            d_ins = in_rank_j[lidx, rx_side]                     # (L,)
+            stream = fq_g * D + d_ins          # flat stream id
+            stream_s = jnp.where(app, stream, Q * D)
+            tail = s.ftl.reshape(-1)[stream]                     # (L,)
+            fq_time = s.fq_time.reshape(Q * D, Cf) \
+                .at[stream_s, tail].set(link.t, mode="drop") \
+                .reshape(L, 2, D, Cf)
+            fq_dest = s.fq_dest.reshape(Q * D, Cf) \
+                .at[stream_s, tail].set(ev_dest, mode="drop") \
+                .reshape(L, 2, D, Cf)
+            fq_inj = s.fq_inj.reshape(Q * D, Cf) \
+                .at[stream_s, tail].set(ev_inj, mode="drop") \
+                .reshape(L, 2, D, Cf)
+            fq_key = s.fq_key.reshape(Q * D, Cf) \
+                .at[stream_s, tail].set(key, mode="drop") \
+                .reshape(L, 2, D, Cf)
+            ftl = s.ftl.reshape(-1).at[stream_s].add(
+                1, mode="drop").reshape(L, 2, D)
+            n_ins = n_ins_f.at[jnp.where(app, fq_g, Q)].add(
+                1, mode="drop").reshape(L, 2)
+            drops = s.drops + n_drop
+
+            # --- switch counting (reset step excluded) ------------------
+            n_sw = s.n_sw + jnp.where(
+                step_i > 0,
+                (link.xl.mode != s.prev_mode_l).astype(jnp.int32), 0)
+
+            ns = _RingState(
+                link=link, h0=h0, fh=fh, ftl=ftl,
+                fq_time=fq_time, fq_dest=fq_dest, fq_inj=fq_inj,
+                fq_key=fq_key, n_ins=n_ins, sent=sent,
+                prev_mode_l=link.xl.mode, n_sw=n_sw,
+                log_inj=log_inj, log_del=log_del, log_dest=log_dest,
+                log_n=log_n, drops=drops)
+            return ns, None
+
+        # --- chunked scan inside while_loop: exit within one chunk of
+        # delivered + drops == injected.  Post-completion steps are
+        # no-ops (no pending, parked clocks, settled FSMs), so stopping
+        # at a chunk boundary is bit-exact vs. the padded reference scan.
+        def chunk_body(carry):
+            st, base = carry
+            st2, _ = jax.lax.scan(
+                body, st, base + jnp.arange(chunk, dtype=jnp.int32))
+            return st2, base + jnp.int32(chunk)
+
+        def cond(carry):
+            st, base = carry
+            return (st.log_n + st.drops < real_e) & (base < max_steps)
+
+        final, _ = jax.lax.while_loop(cond, chunk_body,
+                                      (init, jnp.int32(0)))
+        return (final.log_n, final.log_inj, final.log_del, final.log_dest,
+                final.sent, final.n_sw, final.link.t, final.drops)
+
+    # no donation: the prefill arrays are read-only gather sources here
+    # (no same-shaped output exists to alias them into)
+    return _jit_cached(run)
+
+
+# -----------------------------------------------------------------------
+# Public entry point
+# -----------------------------------------------------------------------
+
 def simulate_fabric(topo: Topology,
                     spec: TrafficSpec,
                     *,
@@ -168,7 +772,9 @@ def simulate_fabric(topo: Topology,
                     max_burst: int = 0,
                     initial_tx: int | np.ndarray = 1,
                     max_steps: int | None = None,
-                    queue_capacity: int | None = None) -> FabricResult:
+                    queue_capacity: int | None = None,
+                    engine: str = "auto",
+                    chunk_size: int = DEFAULT_CHUNK_SIZE) -> FabricResult:
     """Simulate an N-chip fabric of bi-directional AER links.
 
     Args:
@@ -187,6 +793,13 @@ def simulate_fabric(topo: Topology,
                    endpoint, not instantaneous depth.  Defaults to the
                    expanded event count (lossless).  Smaller values may
                    drop forwards, counted in ``FabricResult.drops``.
+      engine:      ``"ring"`` (O(1)-per-step streams, early exit, the
+                   default via ``"auto"``), ``"reference"`` (PR 1 flat
+                   slot scan, the semantics oracle) or ``"pallas"``
+                   (slot scan through the fused ``kernels/fabric_queue``
+                   kernels).  All three are bit-exact.
+      chunk_size:  ring engine only — micro-transactions per ``lax.scan``
+                   chunk between early-exit checks.
     """
     rt = routing if routing is not None else RoutingTable.build(topo)
     src, t, dest = _expand(spec, addr, mcast)
@@ -196,149 +809,74 @@ def simulate_fabric(topo: Topology,
     L = topo.n_links
     if L == 0 or E == 0:
         raise ValueError("need at least one link and one event")
+    eng = "ring" if engine == "auto" else engine
+    if eng not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected one of "
+                         f"{ENGINES} (or 'auto')")
+    if chunk_size < 1:
+        # a 0-step chunk would make the early-exit while_loop spin forever
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    # validate before any route walking (_stream_quota follows paths)
+    _check_reachable(rt, src, dest)
 
     C = int(queue_capacity) if queue_capacity is not None else max(E, 1)
+    total_tx = int(rt.hops[src, dest].sum())
     if max_steps is None:
-        total_tx = int(rt.hops[src, dest].sum())
         max_steps = 4 * total_tx + 2 * E + 64 * (rt.diameter + 2)
+    _overflow_guard(int(t.max(initial=0)), total_tx, timing)
 
-    qt, qd, qi, sizes = _prefill(topo, rt, src, t, dest, C)
     init_tx = np.broadcast_to(np.asarray(initial_tx, np.int32), (L,))
 
-    links_j = jnp.asarray(topo.links, jnp.int32)          # (L, 2)
-    next_link_j = jnp.asarray(rt.next_link, jnp.int32)    # (N, N)
-    out_side_j = jnp.asarray(rt.out_side, jnp.int32)
-    t_cycle = jnp.int32(timing.t_req2req_ns)              # min delivery gap
-
-    step_v = jax.vmap(
-        lambda s, pl, pr, na: link_step(s, pl, pr, na,
-                                        timing=timing, max_burst=max_burst))
-
-    link0 = reset_links(init_tx)
-    init = FabricState(
-        link=link0,
-        q_time=jnp.asarray(qt), q_dest=jnp.asarray(qd), q_inj=jnp.asarray(qi),
-        n_ins=jnp.asarray(sizes),
-        sent=jnp.zeros((L, 2), jnp.int32),
-        prev_mode_l=link0.xl.mode,
-        n_sw=jnp.zeros((L,), jnp.int32),
-        log_inj=jnp.zeros((E,), jnp.int32),
-        log_del=jnp.zeros((E,), jnp.int32),
-        log_dest=jnp.zeros((E,), jnp.int32),
-        log_n=jnp.zeros((), jnp.int32),
-        drops=jnp.zeros((), jnp.int32),
-    )
-
-    lidx = jnp.arange(L)
-
-    def body(s: FabricState, step_i):
-        t_now = s.link.t  # (L,)
-
-        # --- pending & next-arrival per endpoint queue ------------------
-        # An entry is *in* the FIFO once its release time has passed;
-        # empty/consumed slots hold BIG_NS and never match.  Service order
-        # is release-time order (argmin; ties resolve to the lowest slot,
-        # i.e. FIFO among simultaneous arrivals), which for the sorted
-        # single-hop prefill is exactly simulate()'s searchsorted count.
-        released = s.q_time <= t_now[:, None, None]              # (L,2,C)
-        pend = jnp.sum(released.astype(jnp.int32), axis=2)       # (L,2)
-        nxt = jnp.min(jnp.where(released, _BIG, s.q_time), axis=2)
-        t_next = jnp.min(nxt, axis=1)                            # (L,)
-
-        # --- conservative clock synchronization -------------------------
-        # A link acts no earlier than its clock (work pending) or its own
-        # next arrival: ``na``.  Any *future* forward is released at some
-        # link's next delivery, i.e. no earlier than min(na) + t_cycle.
-        # Two consequences keep every queue in true release order:
-        #   * idle links never jump past min(na), so a parked clock never
-        #     overtakes a forward still in flight;
-        #   * a busy link may pop its earliest released entry only if its
-        #     release precedes every possible future insert (release <=
-        #     min(na) + t_cycle) — otherwise it stalls until the rest of
-        #     the fabric catches up (classic conservative lookahead).
-        # With one link both guards are vacuous (its own bound is always
-        # the loosest), so simulate() semantics are preserved bit-exactly.
-        pend_any = (pend[:, 0] + pend[:, 1]) > 0
-        na = jnp.where(pend_any, t_now, t_next)
-        horizon = jnp.min(na)
-        t_next_eff = jnp.minimum(t_next, jnp.maximum(horizon, t_now))
-        r_min = jnp.min(jnp.where(released, s.q_time, _BIG), axis=2)
-        safe = r_min <= horizon + t_cycle                         # (L,2)
-        pend_safe = jnp.where(safe, pend, 0)
-
-        # --- one micro-transaction on every link, batched ---------------
-        link, out = step_v(s.link, pend_safe[:, 0], pend_safe[:, 1],
-                           t_next_eff)
-
-        did = (out.tx_l + out.tx_r) > 0                          # (L,) bool
-        did32 = did.astype(jnp.int32)
-        send_side = jnp.where(out.tx_l == 1, 0, 1)               # (L,)
-        q_sel = s.q_time[lidx, send_side]                        # (L, C)
-        pop_slot = jnp.argmin(
-            jnp.where(q_sel <= t_now[:, None], q_sel, _BIG), axis=1)
-        ev_dest = s.q_dest[lidx, send_side, pop_slot]
-        ev_inj = s.q_inj[lidx, send_side, pop_slot]
-        # consume the popped slot (one-shot slots; no reuse)
-        popped_t = jnp.where(did, _BIG, q_sel[lidx, pop_slot])
-        q_time = s.q_time.at[lidx, send_side, pop_slot].set(popped_t)
-        sent = s.sent.at[lidx, send_side].add(did32)
-
-        # --- deliver or forward ----------------------------------------
-        rx_chip = jnp.where(out.tx_l == 1, links_j[:, 1], links_j[:, 0])
-        deliver = did & (ev_dest == rx_chip)
-        forward = did & ~deliver
-
-        d32 = deliver.astype(jnp.int32)
-        log_slot = jnp.where(deliver, s.log_n + jnp.cumsum(d32) - d32, E)
-        log_inj = s.log_inj.at[log_slot].set(ev_inj, mode="drop")
-        log_del = s.log_del.at[log_slot].set(link.t, mode="drop")
-        log_dest = s.log_dest.at[log_slot].set(ev_dest, mode="drop")
-        log_n = s.log_n + jnp.sum(d32)
-
-        nl = next_link_j[rx_chip, ev_dest]
-        nside = out_side_j[rx_chip, ev_dest]
-        fq = nl * 2 + nside                                      # (L,)
-        fq_m = jnp.where(forward, fq, 2 * L)   # sentinel for non-forwards
-        # simultaneous forwards into one queue: order by link index
-        before = (fq_m[None, :] == fq_m[:, None]) \
-            & (lidx[None, :] < lidx[:, None]) & forward[None, :]
-        offs = jnp.sum(before.astype(jnp.int32), axis=1)
-        fq_g = jnp.where(forward, fq, 0)
-        n_ins_f = s.n_ins.reshape(-1)
-        slot = n_ins_f[fq_g] + offs            # next free slot
-        cap_ok = slot < C
-        app = forward & cap_ok
-        fq_s = jnp.where(app, fq_g, 2 * L)     # drop non-appends
-        q_time = q_time.reshape(2 * L, C) \
-            .at[fq_s, slot].set(link.t, mode="drop").reshape(L, 2, C)
-        q_dest = s.q_dest.reshape(2 * L, C) \
-            .at[fq_s, slot].set(ev_dest, mode="drop").reshape(L, 2, C)
-        q_inj = s.q_inj.reshape(2 * L, C) \
-            .at[fq_s, slot].set(ev_inj, mode="drop").reshape(L, 2, C)
-        n_ins = n_ins_f.at[fq_s].add(1, mode="drop").reshape(L, 2)
-        drops = s.drops + jnp.sum((forward & ~cap_ok).astype(jnp.int32))
-
-        # --- switch counting (matches SimResult.n_switches: mode_l
-        # transitions between consecutive steps, reset step excluded) ----
-        n_sw = s.n_sw + jnp.where(
-            step_i > 0, (link.xl.mode != s.prev_mode_l).astype(jnp.int32), 0)
-
-        ns = FabricState(
-            link=link, q_time=q_time, q_dest=q_dest, q_inj=q_inj,
-            n_ins=n_ins, sent=sent,
-            prev_mode_l=link.xl.mode, n_sw=n_sw,
-            log_inj=log_inj, log_del=log_del, log_dest=log_dest,
-            log_n=log_n, drops=drops)
-        return ns, None
-
-    final, _ = jax.lax.scan(body, init, jnp.arange(max_steps))
+    if eng == "ring":
+        in_rank, D = _in_edge_ranks(topo)
+        quota = _stream_quota(rt, topo.links, in_rank, src, dest, L, D)
+        qt, qd, qi, sizes = _prefill(topo, rt, src, t, dest, C, width="auto")
+        # Bucketed shapes (+1 = always-BIG_NS pad column for head/tail
+        # gathers); logical E / C stay dynamic so cells share compiles.
+        C0 = qt.shape[2]
+        Cf = _pow2ceil(max(int(quota.max(initial=1)),
+                           _RING_STREAM_FLOOR)) + 1
+        Lp = _pow2ceil(max(L, _RING_L_FLOOR))
+        Np = _pow2ceil(max(topo.n_chips, _RING_N_FLOOR))
+        Dp = _pow2ceil(max(D, _RING_D_FLOOR))
+        Ep = _pow2ceil(max(E, _RING_E_FLOOR))
+        fn = _ring_engine(Lp, Ep, C0, Dp, Cf, int(chunk_size), timing)
+        out = fn(jnp.asarray(_pad_to(qt, (Lp, 2, C0), int(_BIG))),
+                 jnp.asarray(_pad_to(qd, (Lp, 2, C0), 0)),
+                 jnp.asarray(_pad_to(qi, (Lp, 2, C0), 0)),
+                 jnp.asarray(_pad_to(sizes, (Lp, 2), 0)),
+                 jnp.asarray(_pad_to(init_tx, (Lp,), 1)),
+                 jnp.asarray(_pad_to(topo.links, (Lp, 2), 0), jnp.int32),
+                 jnp.asarray(_pad_to(rt.next_link, (Np, Np), 0), jnp.int32),
+                 jnp.asarray(_pad_to(rt.out_side, (Np, Np), 0), jnp.int32),
+                 jnp.asarray(_pad_to(in_rank, (Lp, 2), 0), jnp.int32),
+                 jnp.int32(C), jnp.int32(E), jnp.int32(max_burst),
+                 jnp.int32(max_steps))
+        (log_n, log_inj, log_del, log_dest, sent, n_sw, t_link,
+         drops) = out
+        # trim the shape-bucket padding back to the real fabric
+        log_inj, log_del, log_dest = (log_inj[:E], log_del[:E],
+                                      log_dest[:E])
+        sent, n_sw, t_link = sent[:L], n_sw[:L], t_link[:L]
+        t_end = jnp.max(t_link)
+    else:
+        qt, qd, qi, sizes = _prefill(topo, rt, src, t, dest, C)
+        fn = _slot_engine(L, E, C, int(max_steps), timing, int(max_burst),
+                          eng == "pallas")
+        out = fn(jnp.asarray(qt).reshape(2 * L, C),
+                 jnp.asarray(qd).reshape(2 * L, C),
+                 jnp.asarray(qi).reshape(2 * L, C),
+                 jnp.asarray(sizes), jnp.asarray(init_tx),
+                 jnp.asarray(topo.links, jnp.int32),
+                 jnp.asarray(rt.next_link, jnp.int32),
+                 jnp.asarray(rt.out_side, jnp.int32))
+        (log_n, log_inj, log_del, log_dest, sent, n_sw, t_link, t_end,
+         drops) = out
     return FabricResult(
-        delivered=final.log_n, injected=E,
-        log_inj=final.log_inj, log_del=final.log_del,
-        log_dest=final.log_dest,
-        sent=final.sent, n_switches=final.n_sw,
-        t_link=final.link.t, t_end=jnp.max(final.link.t),
-        drops=final.drops)
+        delivered=log_n, injected=E,
+        log_inj=log_inj, log_del=log_del, log_dest=log_dest,
+        sent=sent, n_switches=n_sw,
+        t_link=t_link, t_end=t_end, drops=drops)
 
 
 # -----------------------------------------------------------------------

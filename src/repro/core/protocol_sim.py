@@ -182,6 +182,32 @@ def link_step(s: LinkState,
     return ns, out
 
 
+def link_step_batch(state: LinkState,
+                    pend_l: jnp.ndarray,
+                    pend_r: jnp.ndarray,
+                    t_next_arr: jnp.ndarray,
+                    *,
+                    timing: LinkTiming = PAPER_TIMING,
+                    max_burst: int = 0):
+    """One micro-transaction on a whole batch of links at once.
+
+    ``state`` is a ``LinkState`` with ``(L,)``-shaped leaves (see
+    ``network.reset_links``); ``pend_l`` / ``pend_r`` / ``t_next_arr`` are
+    ``(L,)`` int32.  This is the chunk-steppable LinkSim unit the fabric
+    engines drive: a chunk of ``k`` fabric micro-transactions is ``k``
+    calls of this function inside one ``lax.scan``, so callers can wrap it
+    in ``lax.while_loop`` and stop as soon as their own termination
+    condition (e.g. "all events delivered") holds instead of padding to a
+    worst-case step count.
+
+    Returns ``(new_state, LinkStepOut)`` with ``(L,)``-shaped leaves.
+    """
+    step = jax.vmap(
+        lambda s, pl, pr, na: link_step(s, pl, pr, na,
+                                        timing=timing, max_burst=max_burst))
+    return step(state, pend_l, pend_r, t_next_arr)
+
+
 class SimState(NamedTuple):
     link: LinkState
     sent_l: jnp.ndarray     # events shipped L->R

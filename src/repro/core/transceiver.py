@@ -109,10 +109,12 @@ def step(state: XcvrState,
     want_request = (mode == RX) & (tx_p == 1) & (rx_p == 1)
 
     # --- grant guard (Switch Controller pFETs: SW_reqB + TX_P), plus the
-    # bounded-burst fairness extension.
-    drained = tx_p == 0
-    if max_burst > 0:
-        drained = drained | (state.burst >= max_burst)
+    # bounded-burst fairness extension.  ``max_burst`` may be a Python int
+    # or a traced int32 scalar (the fabric engines pass it dynamically so
+    # every burst setting shares one compilation); B == 0 disables the
+    # extension either way.
+    mb = jnp.asarray(max_burst, jnp.int32)
+    drained = (tx_p == 0) | ((mb > 0) & (state.burst >= mb))
     want_grant = (mode == TX) & (sw_req == 1) & drained
 
     sw_ack = jnp.where(mode == TX,

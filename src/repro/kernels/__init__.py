@@ -5,6 +5,7 @@ paper-native SNN chip-array example, and the fused Mamba selective scan
 ref.py for the pure-jnp oracles."""
 
 from .ops import (EventBlocks, aer_compress, aer_decompress,  # noqa: F401
-                  compress_with_feedback, lif_step, pad_to_blocks,
+                  compress_with_feedback, fabric_queue_scan,
+                  fabric_queue_update, lif_step, pad_to_blocks,
                   tau_from_fraction, unpad_from_blocks)
 from .selective_scan import selective_scan_pallas  # noqa: F401

@@ -1,0 +1,175 @@
+"""Pallas TPU kernels: the fabric event-queue step (network.py hot path).
+
+The fabric simulator's slot layout keeps, per endpoint queue, ``C``
+one-shot slots of int32 release times (``BIG_NS`` = empty/consumed).
+Each micro-transaction needs four reductions over every queue —
+
+  pend   how many slots have been released (release <= clock),
+  r_min  the earliest released release time (conservative-pop guard),
+  nxt    the earliest *future* release (idle-link wake-up target),
+  amin   the slot to pop: first index of the released minimum
+         (``jnp.argmin`` semantics — lowest slot wins ties, i.e. FIFO
+         among simultaneous arrivals),
+
+— followed by a sparse update: consume at most one popped slot per link
+(set it back to ``BIG_NS``) and append at most one forwarded event per
+link at its queue's insertion slot.  Off-kernel this is several separate
+O(Q·C) passes per step; here each becomes ONE pass.
+
+TPU adaptation notes (mirroring ``aer_encode.py``):
+
+* The scan kernel materializes the released mask once per VMEM tile and
+  feeds all four reductions from it.  argmin is recast as
+  ``min(where(val == row_min, iota, C))`` — the first-minimum-index
+  trick — so no argmin lowering is needed and the tie rule matches
+  ``jnp.argmin`` exactly.
+* The update kernel recasts both scatters as ONE-HOT MATMULS (VMEM has
+  no scatter): with ``A[r, l] = [pop_q[l] == r]`` and
+  ``S[l, c] = [pop_slot[l] == c]``, the pop mask is ``A @ S`` and the
+  append values are ``(B * value) @ S_app`` — (rows × links × C)
+  contractions that run on the MXU.  All arithmetic stays int32 so
+  release times up to the ``BIG_NS`` sentinel (2**30) survive exactly
+  (an f32 accumulator's 24-bit mantissa would corrupt them).
+* Out-of-range ids (the caller's "no pop / no append on this link"
+  sentinel ``Q``; dropped forwards) simply match no row — the one-hot
+  formulation gives masked scatter for free.
+
+Validated bit-exactly against ``ref.fabric_queue_scan`` /
+``ref.fabric_queue_update`` in interpret mode (CPU container); the
+grid/BlockSpec layout is the TPU deployment configuration.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.protocol_sim import BIG_NS
+
+# plain Python int: a jnp scalar would be a captured constant inside the
+# kernel, which pallas_call rejects
+_BIG = int(BIG_NS)
+
+
+def _scan_kernel(q_ref, t_ref, pend_ref, rmin_ref, nxt_ref, amin_ref):
+    q = q_ref[...]                       # (rows, C) int32 release times
+    t = t_ref[...]                       # (rows,) int32 queue clocks
+    rows, ncols = q.shape
+
+    released = q <= t[:, None]
+    val = jnp.where(released, q, _BIG)
+    row_min = jnp.min(val, axis=1)
+
+    pend_ref[...] = jnp.sum(released.astype(jnp.int32), axis=1)
+    rmin_ref[...] = row_min
+    nxt_ref[...] = jnp.min(jnp.where(released, _BIG, q), axis=1)
+    # first-minimum-index == jnp.argmin (all-BIG rows resolve to slot 0)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (rows, ncols), 1)
+    amin_ref[...] = jnp.min(
+        jnp.where(val == row_min[:, None], iota_c, ncols), axis=1)
+
+
+def fabric_queue_step_pallas(q_time: jnp.ndarray, t_q: jnp.ndarray, *,
+                             rows_per_block: int = 8,
+                             interpret: bool = True):
+    """Fused queue-step reductions.
+
+    Args:
+      q_time: (Q, C) int32 release times, ``BIG_NS`` = empty slot.
+      t_q:    (Q,) int32 per-queue clock.
+
+    Returns ``(pend, r_min, nxt, amin)``, each (Q,) int32.
+    """
+    nq, _ = q_time.shape
+    assert nq % rows_per_block == 0, (nq, rows_per_block)
+    grid = (nq // rows_per_block,)
+
+    out_shape = [jax.ShapeDtypeStruct((nq,), jnp.int32) for _ in range(4)]
+    row_spec = pl.BlockSpec((rows_per_block,), lambda i: (i,))
+    return pl.pallas_call(
+        _scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_block, q_time.shape[1]),
+                         lambda i: (i, 0)),
+            row_spec,
+        ],
+        out_specs=[row_spec, row_spec, row_spec, row_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q_time, t_q)
+
+
+def _update_kernel(qt_ref, qd_ref, qi_ref, popq_ref, pops_ref,
+                   appq_ref, apps_ref, appt_ref, appd_ref, appi_ref,
+                   ot_ref, od_ref, oi_ref, *, rows_per_block: int):
+    qt = qt_ref[...]                     # (rows, C)
+    rows, ncols = qt.shape
+    base = pl.program_id(0) * rows_per_block
+    row_ids = base + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+
+    popq = popq_ref[...]                 # (Lk,) queue id or Q sentinel
+    pops = pops_ref[...]                 # (Lk,) popped slot
+    appq = appq_ref[...]                 # (Lk,) queue id or Q sentinel
+    apps = apps_ref[...]                 # (Lk,) append slot
+    nlk = popq.shape[0]
+
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (nlk, ncols), 1)
+    dn = (((1,), (0,)), ((), ()))
+
+    # scatter-as-matmul, int32 end to end (exact for times < 2**31)
+    a_pop = (row_ids == popq[None, :]).astype(jnp.int32)     # (rows, Lk)
+    s_pop = (pops[:, None] == iota_c).astype(jnp.int32)      # (Lk, C)
+    p_pop = jax.lax.dot_general(a_pop, s_pop, dn,
+                                preferred_element_type=jnp.int32)
+
+    a_app = (row_ids == appq[None, :]).astype(jnp.int32)
+    s_app = (apps[:, None] == iota_c).astype(jnp.int32)
+    p_app = jax.lax.dot_general(a_app, s_app, dn,
+                                preferred_element_type=jnp.int32)
+
+    def scatter(vals):
+        return jax.lax.dot_general(a_app * vals[None, :], s_app, dn,
+                                   preferred_element_type=jnp.int32)
+
+    keep = 1 - p_pop - p_app             # pop/append slots are disjoint
+    ot_ref[...] = qt * keep + _BIG * p_pop + scatter(appt_ref[...])
+    od_ref[...] = qd_ref[...] * (1 - p_app) + scatter(appd_ref[...])
+    oi_ref[...] = qi_ref[...] * (1 - p_app) + scatter(appi_ref[...])
+
+
+def fabric_queue_update_pallas(q_time, q_dest, q_inj,
+                               pop_q, pop_slot,
+                               app_q, app_slot, app_t, app_dest, app_inj,
+                               *, rows_per_block: int = 8,
+                               interpret: bool = True):
+    """Fused pop-consume + forward-append over the (Q, C) slot arrays.
+
+    ``pop_q`` / ``app_q`` hold a queue id per link, or ``Q`` (any id
+    >= Q) to skip that link; popped slots revert to ``BIG_NS``, appended
+    slots receive ``(app_t, app_dest, app_inj)``.  Pop and append slots
+    must be disjoint (the engine appends at ``n_ins``, beyond any
+    released slot).  Returns the three updated arrays.
+    """
+    nq, ncols = q_time.shape
+    assert nq % rows_per_block == 0, (nq, rows_per_block)
+    grid = (nq // rows_per_block,)
+
+    kernel = functools.partial(_update_kernel, rows_per_block=rows_per_block)
+    tile = pl.BlockSpec((rows_per_block, ncols), lambda i: (i, 0))
+    whole = pl.BlockSpec((pop_q.shape[0],), lambda i: (0,))
+    out_shape = [jax.ShapeDtypeStruct((nq, ncols), jnp.int32)
+                 for _ in range(3)]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tile, tile, tile,
+                  whole, whole, whole, whole, whole, whole, whole],
+        out_specs=[tile, tile, tile],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q_time, q_dest, q_inj, pop_q, pop_slot,
+      app_q, app_slot, app_t, app_dest, app_inj)

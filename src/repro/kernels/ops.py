@@ -20,6 +20,8 @@ from ..core import events as ev
 from . import ref
 from .aer_decode import aer_decode_pallas
 from .aer_encode import aer_encode_pallas
+from .fabric_queue import (fabric_queue_step_pallas,
+                           fabric_queue_update_pallas)
 from .lif_step import lif_step_pallas
 
 DEFAULT_BLOCK = 1024
@@ -121,6 +123,53 @@ def compress_with_feedback(x: jnp.ndarray, residual: jnp.ndarray, *,
     dec = aer_decompress(events_, block, interpret=interpret)
     new_res = unpad_from_blocks(tiles - dec, n, x.shape)
     return events_, new_res, n
+
+
+def _rows_per_block_for(nq: int, rows_per_block: int) -> int:
+    rpb = rows_per_block
+    while nq % rpb:
+        rpb //= 2
+    return max(rpb, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_ref",
+                                             "rows_per_block"))
+def fabric_queue_scan(q_time: jnp.ndarray, t_q: jnp.ndarray, *,
+                      interpret: bool | None = None, use_ref: bool = False,
+                      rows_per_block: int = 8):
+    """Fused per-queue released-count / min-release / next-arrival /
+    argmin-pop over (Q, C) slot arrays (the fabric engine's O(C) step).
+
+    Returns ``(pend, r_min, nxt, amin)``, each (Q,) int32.
+    """
+    if use_ref:
+        return ref.fabric_queue_scan(q_time, t_q)
+    return fabric_queue_step_pallas(
+        q_time, t_q,
+        rows_per_block=_rows_per_block_for(q_time.shape[0], rows_per_block),
+        interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_ref",
+                                             "rows_per_block"))
+def fabric_queue_update(q_time, q_dest, q_inj, pop_q, pop_slot,
+                        app_q, app_slot, app_t, app_dest, app_inj, *,
+                        interpret: bool | None = None, use_ref: bool = False,
+                        rows_per_block: int = 8):
+    """Fused pop-consume + forward-append scatter on the slot arrays.
+
+    Queue ids >= Q skip the link (no pop / dropped forward).  Returns the
+    updated ``(q_time, q_dest, q_inj)``.
+    """
+    if use_ref:
+        return ref.fabric_queue_update(q_time, q_dest, q_inj, pop_q,
+                                       pop_slot, app_q, app_slot, app_t,
+                                       app_dest, app_inj)
+    return fabric_queue_update_pallas(
+        q_time, q_dest, q_inj, pop_q, pop_slot,
+        app_q, app_slot, app_t, app_dest, app_inj,
+        rows_per_block=_rows_per_block_for(q_time.shape[0], rows_per_block),
+        interpret=_auto_interpret(interpret))
 
 
 def lif_step(v: jnp.ndarray, i_syn: jnp.ndarray, *, decay: float = 0.9,

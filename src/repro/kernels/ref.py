@@ -77,6 +77,49 @@ def lif_step(v: jnp.ndarray, i_syn: jnp.ndarray, decay: float, v_th: float,
 
 
 # ---------------------------------------------------------------------------
+# fabric_queue_scan / fabric_queue_update: the per-micro-transaction queue
+# step of core/network.py's slot engines.  q_time is (Q, C) int32 release
+# times with BIG_NS (2**30) marking empty/consumed one-shot slots; t_q is
+# the (Q,) per-queue clock.  These ARE the reference engine's per-step
+# queue semantics — the Pallas kernels in fabric_queue.py must match them
+# bit-for-bit (tested in tests/test_fabric_queue_kernel.py).
+# ---------------------------------------------------------------------------
+
+from ..core.protocol_sim import BIG_NS as _QBIG  # noqa: E402
+
+
+def fabric_queue_scan(q_time: jnp.ndarray, t_q: jnp.ndarray):
+    """Per-queue released-count / min-release / next-arrival / argmin-pop.
+
+    Returns ``(pend, r_min, nxt, amin)``, each (Q,) int32; ``amin`` is
+    the slot a pop must consume (lowest released slot of the minimum
+    release time — FIFO among simultaneous arrivals; 0 for empty rows).
+    """
+    released = q_time <= t_q[:, None]
+    pend = jnp.sum(released.astype(jnp.int32), axis=1)
+    val = jnp.where(released, q_time, _QBIG)
+    r_min = jnp.min(val, axis=1)
+    nxt = jnp.min(jnp.where(released, _QBIG, q_time), axis=1)
+    amin = jnp.argmin(val, axis=1).astype(jnp.int32)
+    return pend, r_min, nxt, amin
+
+
+def fabric_queue_update(q_time, q_dest, q_inj, pop_q, pop_slot,
+                        app_q, app_slot, app_t, app_dest, app_inj):
+    """Consume popped slots (back to BIG_NS) and append forwarded events.
+
+    ``pop_q`` / ``app_q``: (Lk,) queue row per link, or any id >= Q to
+    skip that link (dropped indices).  Pop and append slots are disjoint
+    by construction (appends land at ``n_ins``, beyond released slots).
+    """
+    q_time = q_time.at[pop_q, pop_slot].set(_QBIG, mode="drop")
+    q_time = q_time.at[app_q, app_slot].set(app_t, mode="drop")
+    q_dest = q_dest.at[app_q, app_slot].set(app_dest, mode="drop")
+    q_inj = q_inj.at[app_q, app_slot].set(app_inj, mode="drop")
+    return q_time, q_dest, q_inj
+
+
+# ---------------------------------------------------------------------------
 # selective_scan_ref: plain time-step loop oracle for the S6 recurrence
 #   h_t = exp(dt_t · A) ⊙ h_{t-1} + (dt_t · x_t) ⊗ B_t ;  y_t = h_t · C_t
 # ---------------------------------------------------------------------------

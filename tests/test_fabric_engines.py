@@ -1,0 +1,183 @@
+"""Cross-engine regression net for the fabric event-transport engines.
+
+``simulate_fabric`` ships three engines — ``reference`` (PR 1 flat slot
+scan, the semantics oracle), ``ring`` (O(1)-per-step streams, the default
+hot path) and ``pallas`` (slot scan through the fused fabric_queue
+kernels).  Every configuration must produce an identical ``FabricResult``
+on every engine: same departures, switch counts, ``t_end``, drops and
+delivery log ordering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import network as net
+from repro.core import protocol_sim as ps
+from repro.core import traffic as tr
+from repro.core.router import (Topology, line_topology, mesh2d_topology,
+                               ring_topology)
+
+# the engines' shared bit-exactness contract (one field list for tests
+# and the CI bench smoke alike)
+assert_bit_exact = net.assert_results_equal
+
+
+class TestRingVsReference:
+    """The hot path must be indistinguishable from the slot-scan oracle
+    across topologies, traffic patterns and fairness settings."""
+
+    @pytest.mark.parametrize("pattern", sorted(tr.PATTERNS))
+    def test_ring4_all_patterns(self, pattern):
+        spec = tr.PATTERNS[pattern](jax.random.PRNGKey(13), 4, 24)
+        mb = 1 if pattern == "ping_pong" else 0
+        a = net.simulate_fabric(ring_topology(4), spec,
+                                engine="reference", max_burst=mb)
+        b = net.simulate_fabric(ring_topology(4), spec,
+                                engine="ring", max_burst=mb)
+        assert int(a.delivered) == a.injected
+        assert_bit_exact(a, b, f"ring4/{pattern}")
+
+    @pytest.mark.parametrize("topo_fn,max_burst", [
+        (lambda: line_topology(4), 0),
+        (lambda: mesh2d_topology(2, 3), 4),
+        (lambda: ring_topology(6), 1),
+    ])
+    def test_topologies(self, topo_fn, max_burst):
+        topo = topo_fn()
+        spec = tr.poisson(jax.random.PRNGKey(5), topo.n_chips, 20)
+        a = net.simulate_fabric(topo, spec, engine="reference",
+                                max_burst=max_burst)
+        b = net.simulate_fabric(topo, spec, engine="ring",
+                                max_burst=max_burst)
+        assert_bit_exact(a, b, topo.name)
+
+    @pytest.mark.parametrize("initial_tx", [0, 1])
+    def test_two_chip_degenerates_to_paper_link(self, initial_tx):
+        """The 2-chip fabric on the ring engine still reproduces
+        ``protocol_sim.simulate`` departures / switches / t_end."""
+        rng = np.random.default_rng(21)
+        arr_l = np.sort(rng.integers(0, 30_000, 40)).astype(np.int32)
+        arr_r = np.sort(rng.integers(0, 30_000, 30)).astype(np.int32)
+        ref = ps.simulate(jnp.asarray(arr_l), jnp.asarray(arr_r),
+                          initial_tx=initial_tx)
+        spec = tr.TrafficSpec(
+            src=jnp.concatenate([jnp.zeros(40, jnp.int32),
+                                 jnp.ones(30, jnp.int32)]),
+            t=jnp.concatenate([jnp.asarray(arr_l), jnp.asarray(arr_r)]),
+            dest=jnp.concatenate([jnp.ones(40, jnp.int32),
+                                  jnp.zeros(30, jnp.int32)]))
+        res = net.simulate_fabric(line_topology(2), spec, engine="ring",
+                                  initial_tx=initial_tx)
+        assert int(res.delivered) == 70
+        assert int(res.t_end) == int(ref.t_end)
+        assert np.asarray(res.sent).tolist() == [
+            [int(ref.sent_l), int(ref.sent_r)]]
+        assert int(res.n_switches[0]) == int(ref.n_switches)
+
+    def test_chunk_size_invariance(self):
+        """Early-exit chunking must not be observable on completed sims."""
+        spec = tr.poisson(jax.random.PRNGKey(3), 4, 24)
+        a = net.simulate_fabric(ring_topology(4), spec, chunk_size=16)
+        b = net.simulate_fabric(ring_topology(4), spec, chunk_size=256)
+        assert_bit_exact(a, b, "chunk16-vs-256")
+
+    def test_unknown_engine_rejected(self):
+        spec = tr.poisson(jax.random.PRNGKey(0), 2, 4)
+        with pytest.raises(ValueError, match="unknown engine"):
+            net.simulate_fabric(ring_topology(2), spec, engine="warp")
+
+    def test_nonpositive_chunk_size_rejected(self):
+        """chunk_size <= 0 would make the early-exit loop spin forever —
+        it must raise instead."""
+        spec = tr.poisson(jax.random.PRNGKey(0), 2, 4)
+        with pytest.raises(ValueError, match="chunk_size"):
+            net.simulate_fabric(ring_topology(2), spec, chunk_size=0)
+
+    @pytest.mark.parametrize("engine", sorted(net.ENGINES))
+    def test_unreachable_destination_rejected(self, engine):
+        """A disconnected fabric raises the clean setup error on every
+        engine (the ring engine walks routes for its stream quotas and
+        must validate first)."""
+        topo = Topology(4, np.array([(0, 1), (2, 3)], np.int32))
+        spec = tr.TrafficSpec(src=jnp.zeros(1, jnp.int32),
+                              t=jnp.zeros(1, jnp.int32),
+                              dest=jnp.full((1,), 2, jnp.int32))
+        with pytest.raises(ValueError, match="unreachable"):
+            net.simulate_fabric(topo, spec, engine=engine)
+
+
+class TestPallasEngine:
+    """The fused-kernel slot engine (interpret mode off-TPU) is the same
+    simulation as the reference engine, step for step."""
+
+    def test_ring4_poisson(self):
+        spec = tr.poisson(jax.random.PRNGKey(7), 4, 12)
+        a = net.simulate_fabric(ring_topology(4), spec, engine="reference")
+        b = net.simulate_fabric(ring_topology(4), spec, engine="pallas")
+        assert int(a.delivered) == a.injected
+        assert_bit_exact(a, b, "pallas/ring4")
+
+    def test_multihop_with_bursts(self):
+        spec = tr.poisson(jax.random.PRNGKey(8), 3, 10)
+        a = net.simulate_fabric(line_topology(3), spec,
+                                engine="reference", max_burst=2)
+        b = net.simulate_fabric(line_topology(3), spec,
+                                engine="pallas", max_burst=2)
+        assert_bit_exact(a, b, "pallas/line3")
+
+
+def _convergecast(n):
+    """Chips 0 and 1 flood chip 3 through relay chip 2: the (2,3) queue
+    sees 2x its drain rate, and links 0 and 1 deliver simultaneous
+    forwards into the SAME queue on the same micro-step."""
+    topo = Topology(4, np.array([(0, 2), (1, 2), (2, 3)], np.int32))
+    spec = tr.TrafficSpec(
+        src=jnp.concatenate([jnp.zeros(n, jnp.int32),
+                             jnp.ones(n, jnp.int32)]),
+        t=jnp.zeros(2 * n, jnp.int32),
+        dest=jnp.full((2 * n,), 3, jnp.int32))
+    return topo, spec
+
+
+class TestDropPathRegression:
+    """Capacity-limited queues must behave identically on both engines:
+    same ``drops``, same delivered set, same delivery order — including
+    the simultaneous-forwards-into-one-queue insertion-ordering case."""
+
+    @pytest.mark.parametrize("capacity", [64, 80, 100])
+    def test_drops_identical(self, capacity):
+        topo, spec = _convergecast(64)
+        a = net.simulate_fabric(topo, spec, queue_capacity=capacity,
+                                engine="reference")
+        b = net.simulate_fabric(topo, spec, queue_capacity=capacity,
+                                engine="ring")
+        assert int(a.drops) > 0
+        assert int(a.delivered) + int(a.drops) == 2 * 64
+        assert_bit_exact(a, b, f"drop/cap{capacity}")
+
+    def test_simultaneous_forwards_ordering_lossless(self):
+        """With room for everything, the insertion order of simultaneous
+        forwards (by link index) is visible in the delivery log — the
+        engines must agree entry for entry."""
+        topo, spec = _convergecast(32)
+        a = net.simulate_fabric(topo, spec, engine="reference")
+        b = net.simulate_fabric(topo, spec, engine="ring")
+        assert int(a.drops) == 0
+        assert int(a.delivered) == a.injected
+        assert_bit_exact(a, b, "simultaneous-forwards")
+
+    def test_delivered_set_matches_under_drops(self):
+        """Not just the count: the surviving events (by injection time
+        multiset) are the same under both engines."""
+        topo, spec = _convergecast(48)
+        a = net.simulate_fabric(topo, spec, queue_capacity=48,
+                                engine="reference")
+        b = net.simulate_fabric(topo, spec, queue_capacity=48,
+                                engine="ring")
+        n = int(a.delivered)
+        assert n == int(b.delivered)
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(a.log_inj)[:n]),
+            np.sort(np.asarray(b.log_inj)[:n]))
+        assert int(a.drops) == int(b.drops)

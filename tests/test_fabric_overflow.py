@@ -1,0 +1,102 @@
+"""Clock-overflow margin of the fabric engines (the BIG_NS sentinel).
+
+Empty queue slots hold ``BIG_NS`` = 2**30 ("never released").  If a
+link-local clock could reach it, empty slots would look released and the
+simulation would corrupt silently.  ``simulate_fabric`` therefore
+refuses traffic whose worst-case end time
+``max(t) + total_hops * worst_cost`` reaches the sentinel — and below
+that guard, every release-time and ``horizon + t_cycle`` comparison must
+stay exact however close the clocks get.  The property here is
+time-shift invariance: shifting all injections by a constant shifts
+every clock and changes no latency, switch count or ordering, right up
+to the admissible limit."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from tests._hypothesis_compat import given, settings, st
+
+from repro.core import network as net
+from repro.core import traffic as tr
+from repro.core.link import PAPER_TIMING
+from repro.core.protocol_sim import BIG_NS
+from repro.core.router import line_topology, ring_topology
+
+BIG = int(BIG_NS)
+WORST_COST = (PAPER_TIMING.t_req2req_ns
+              + max(PAPER_TIMING.t_reverse_penalty_ns,
+                    PAPER_TIMING.t_idle_switch_ns))
+
+
+def _spec(src, t, dest):
+    return tr.TrafficSpec(src=jnp.asarray(src, jnp.int32),
+                          t=jnp.asarray(t, jnp.int32),
+                          dest=jnp.asarray(dest, jnp.int32))
+
+
+class TestOverflowGuard:
+    def test_guard_raises_at_sentinel(self):
+        spec = _spec([0], [BIG - 10], [1])
+        with pytest.raises(ValueError, match="overflow"):
+            net.simulate_fabric(line_topology(2), spec)
+
+    def test_guard_scales_with_workload(self):
+        """Many hops push the worst-case bound over even for earlier
+        injections."""
+        n = 2048
+        t0 = BIG - n * WORST_COST  # bound == BIG exactly -> refused
+        spec = _spec([0] * n, [t0] * n, [1] * n)
+        with pytest.raises(ValueError, match="overflow"):
+            net.simulate_fabric(line_topology(2), spec)
+
+    def test_tightest_admissible_time_simulates_exactly(self):
+        """One event at the largest time the guard admits: delivered with
+        the exact single-hop latency, clocks just below the sentinel."""
+        t0 = BIG - WORST_COST - 1
+        spec = _spec([0], [t0], [1])
+        res = net.simulate_fabric(line_topology(2), spec)
+        assert int(res.delivered) == 1
+        assert net.delivered_latencies(res).tolist() == [
+            PAPER_TIMING.t_req2req_ns]
+        assert int(res.t_end) == t0 + PAPER_TIMING.t_req2req_ns
+        assert int(res.t_end) < BIG
+
+    @pytest.mark.parametrize("engine", ["reference", "ring"])
+    def test_near_sentinel_multihop_both_engines(self, engine):
+        """Forward release times and the horizon + t_cycle lookahead stay
+        correct when every clock sits just under the sentinel."""
+        n = 8
+        base = BIG - 40 * WORST_COST
+        t = base + 31 * np.arange(n)
+        spec = _spec([0] * n, t, [2] * n)
+        res = net.simulate_fabric(line_topology(3), spec, engine=engine)
+        assert int(res.delivered) == n
+        lat = net.delivered_latencies(res)
+        assert (lat >= 2 * PAPER_TIMING.t_req2req_ns).all()
+        assert int(res.t_end) < BIG
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.lists(st.integers(0, 20_000), min_size=1, max_size=24),
+       seed=st.integers(0, 2 ** 16))
+def test_time_shift_invariance_near_sentinel(t, seed):
+    """P: latencies, switch counts, transmissions and drops are invariant
+    under shifting all injections close to the admissible limit."""
+    rng = np.random.default_rng(seed)
+    n = len(t)
+    src = rng.integers(0, 3, n).astype(np.int32)
+    dest = (src + 1 + rng.integers(0, 2, n).astype(np.int32)) % 3
+    t = np.sort(np.asarray(t, np.int64))
+    # per-source nondecreasing times (generator contract)
+    topo = ring_topology(3)
+    lo = net.simulate_fabric(topo, _spec(src, t, dest))
+    shift = BIG - int(t.max()) - (3 * n + 4) * WORST_COST
+    hi = net.simulate_fabric(topo, _spec(src, t + shift, dest))
+    assert int(hi.delivered) == int(lo.delivered) == n
+    np.testing.assert_array_equal(net.delivered_latencies(hi),
+                                  net.delivered_latencies(lo))
+    np.testing.assert_array_equal(np.asarray(hi.sent), np.asarray(lo.sent))
+    np.testing.assert_array_equal(np.asarray(hi.n_switches),
+                                  np.asarray(lo.n_switches))
+    assert int(hi.t_end) == int(lo.t_end) + shift
+    assert int(hi.t_end) < BIG

@@ -1,0 +1,123 @@
+"""Pallas fabric_queue kernels vs. their pure-jnp oracles (ref.py).
+
+The kernels run in interpret mode here (CPU container); integer outputs
+must match the oracles bit-for-bit, including the sentinel conventions
+(BIG_NS = empty slot, queue id >= Q = skip link) and the argmin tie rule
+(lowest slot among equal release times)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import fabric_queue as fq
+from repro.kernels import ops, ref
+
+BIG = int(ref._QBIG)
+
+
+def _random_queues(rng, nq, ncols, empty_frac=0.4, t_hi=60_000):
+    q_time = rng.integers(0, 50_000, (nq, ncols)).astype(np.int32)
+    q_time[rng.random((nq, ncols)) < empty_frac] = BIG
+    t_q = rng.integers(0, t_hi, (nq,)).astype(np.int32)
+    return jnp.asarray(q_time), jnp.asarray(t_q)
+
+
+class TestQueueScanKernel:
+    @pytest.mark.parametrize("nq,ncols", [(8, 32), (16, 96), (32, 257),
+                                          (2, 5)])
+    def test_matches_oracle(self, nq, ncols):
+        rng = np.random.default_rng(nq * 1000 + ncols)
+        q_time, t_q = _random_queues(rng, nq, ncols)
+        want = ref.fabric_queue_scan(q_time, t_q)
+        got = ops.fabric_queue_scan(q_time, t_q)
+        for w, g, name in zip(want, got, ("pend", "r_min", "nxt", "amin")):
+            np.testing.assert_array_equal(np.asarray(w), np.asarray(g),
+                                          err_msg=name)
+
+    def test_ties_resolve_to_lowest_slot(self):
+        """FIFO among simultaneous arrivals: duplicate minima pick the
+        first slot, exactly like jnp.argmin."""
+        q_time = jnp.asarray([[50, 10, 10, BIG], [BIG, BIG, BIG, BIG],
+                              [7, 7, 7, 7], [BIG, 3, BIG, 3]], jnp.int32)
+        t_q = jnp.asarray([100, 100, 100, 100], jnp.int32)
+        want = ref.fabric_queue_scan(q_time, t_q)
+        got = ops.fabric_queue_scan(q_time, t_q)
+        np.testing.assert_array_equal(np.asarray(got[3]), [1, 0, 0, 1])
+        for w, g in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(w), np.asarray(g))
+
+    def test_empty_and_all_released_rows(self):
+        q_time = jnp.asarray([[BIG] * 6, [1, 2, 3, 4, 5, 6]], jnp.int32)
+        t_q = jnp.asarray([0, 10], jnp.int32)
+        pend, r_min, nxt, amin = [np.asarray(x) for x in
+                                  ops.fabric_queue_scan(q_time, t_q)]
+        assert pend.tolist() == [0, 6]
+        assert r_min.tolist() == [BIG, 1]
+        assert nxt.tolist() == [BIG, BIG]
+        assert amin.tolist() == [0, 0]
+
+
+class TestQueueUpdateKernel:
+    @pytest.mark.parametrize("nq,ncols,nlk", [(8, 32, 4), (16, 64, 16),
+                                              (6, 17, 3)])
+    def test_matches_oracle(self, nq, ncols, nlk):
+        rng = np.random.default_rng(nq * 77 + nlk)
+        q_time, _ = _random_queues(rng, nq, ncols)
+        q_dest = jnp.asarray(rng.integers(0, 9, (nq, ncols)), jnp.int32)
+        q_inj = jnp.asarray(rng.integers(0, 50_000, (nq, ncols)),
+                            jnp.int32)
+        # unique pop rows, some sentinel-skipped; appends disjoint from
+        # pops (the engine's contract: appends land beyond released slots)
+        pop_q = np.array([r if r % 3 else nq
+                          for r in rng.permutation(nq)[:nlk]], np.int32)
+        pop_slot = rng.integers(0, ncols // 2, (nlk,)).astype(np.int32)
+        app_q = np.array([r if r % 2 else nq
+                          for r in rng.permutation(nq)[:nlk]], np.int32)
+        app_slot = (ncols // 2
+                    + rng.permutation(ncols - ncols // 2)[:nlk]).astype(
+                        np.int32)
+        app_t = rng.integers(0, 50_000, (nlk,)).astype(np.int32)
+        app_d = rng.integers(0, 9, (nlk,)).astype(np.int32)
+        app_i = rng.integers(0, 50_000, (nlk,)).astype(np.int32)
+        args = [q_time, q_dest, q_inj] + [jnp.asarray(x) for x in
+                (pop_q, pop_slot, app_q, app_slot, app_t, app_d, app_i)]
+        want = ref.fabric_queue_update(*args)
+        got = ops.fabric_queue_update(*args)
+        for w, g, name in zip(want, got, ("q_time", "q_dest", "q_inj")):
+            np.testing.assert_array_equal(np.asarray(w), np.asarray(g),
+                                          err_msg=name)
+
+    def test_sentinel_skips_and_big_values_exact(self):
+        """Skipped links change nothing, and values near the BIG_NS
+        sentinel survive the int32 matmul path exactly."""
+        q_time = jnp.asarray([[BIG - 3, BIG, 5], [7, BIG - 1, BIG]],
+                             jnp.int32)
+        q_dest = jnp.zeros((2, 3), jnp.int32)
+        q_inj = jnp.zeros((2, 3), jnp.int32)
+        nq = 2
+        pop_q = jnp.asarray([0, nq], jnp.int32)     # pop row 0 slot 2
+        pop_slot = jnp.asarray([2, 0], jnp.int32)
+        app_q = jnp.asarray([nq, 1], jnp.int32)     # append row 1 slot 2
+        app_slot = jnp.asarray([0, 2], jnp.int32)
+        app_t = jnp.asarray([0, BIG - 2], jnp.int32)
+        app_d = jnp.asarray([0, 3], jnp.int32)
+        app_i = jnp.asarray([0, BIG - 7], jnp.int32)
+        args = (q_time, q_dest, q_inj, pop_q, pop_slot, app_q, app_slot,
+                app_t, app_d, app_i)
+        for impl in (ref.fabric_queue_update,
+                     lambda *a: ops.fabric_queue_update(*a)):
+            qt, qd, qi = [np.asarray(x) for x in impl(*args)]
+            assert qt.tolist() == [[BIG - 3, BIG, BIG],
+                                   [7, BIG - 1, BIG - 2]]
+            assert qd[1, 2] == 3 and qi[1, 2] == BIG - 7
+
+    def test_direct_kernel_entry_points(self):
+        """The raw pallas wrappers (bypassing ops) agree too."""
+        rng = np.random.default_rng(3)
+        q_time, t_q = _random_queues(rng, 8, 16)
+        want = ref.fabric_queue_scan(q_time, t_q)
+        got = fq.fabric_queue_step_pallas(q_time, t_q, rows_per_block=4,
+                                          interpret=True)
+        for w, g in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(w), np.asarray(g))
