@@ -29,6 +29,7 @@ import jax
 
 from repro.core import network as net
 from repro.core import traffic as tr
+from repro.core.fabric import Fabric, QueuePolicy
 from repro.core.router import ring_topology
 
 BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
@@ -53,6 +54,11 @@ def run_smoke() -> dict:
         jax.block_until_ready(ring.log_del)
         t_ring += time.perf_counter() - t0
         _assert_bit_exact(ref, ring, f"ring{N_CHIPS}/{name}")
+        # the simulate_fabric wrapper IS the Fabric object API: identical
+        # smoke results, cell for cell
+        fab = Fabric(topo, queues=QueuePolicy(max_burst=mb))
+        _assert_bit_exact(ring, fab.run(spec),
+                          f"ring{N_CHIPS}/{name}/fabric-api")
         if name == "poisson":  # one cell through the fused-kernel engine
             pal = net.simulate_fabric(topo, spec, engine="pallas",
                                       max_burst=mb)

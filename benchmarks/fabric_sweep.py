@@ -32,7 +32,9 @@ import numpy as np
 
 from repro.core import network as net
 from repro.core import traffic as tr
-from repro.core.link import PAPER_TIMING
+from repro.core.fabric import Fabric, QueuePolicy
+from repro.core.link import (PAPER_TIMING, SERIAL_LVDS_TIMING,
+                             per_link_timing)
 from repro.core.router import mesh2d_topology, ring_topology
 
 EVENTS_PER_CHIP = 48
@@ -106,9 +108,11 @@ def _derived(m: dict) -> str:
             f"sw={m['switches']} E={m['energy_nj']:.1f}nJ")
 
 
-def _cell(name, us, derived, engine, metrics=None, lane="fast") -> dict:
+def _cell(name, us, derived, engine, metrics=None, lane="fast",
+          api="simulate_fabric") -> dict:
     return {"name": name, "us_per_call": us, "derived": derived,
-            "engine": engine, "lane": lane, "metrics": metrics or {}}
+            "engine": engine, "lane": lane, "api": api,
+            "metrics": metrics or {}}
 
 
 def sweep_rings(engine=DEFAULT_ENGINE, slow=False):
@@ -147,10 +151,16 @@ def sweep_mesh(engine=DEFAULT_ENGINE, slow=False):
 
 def sweep_anchor(engine=DEFAULT_ENGINE):
     """N=2 ping-pong must reproduce the paper's 28.6 MEvents/s (Fig. 8),
-    within ``ANCHOR_TOL`` — asserted, not just reported."""
-    topo = ring_topology(2)
+    within ``ANCHOR_TOL`` — asserted, not just reported.  Runs through
+    the declarative ``Fabric`` API, so the anchor also gates the new
+    front door (not just the ``simulate_fabric`` wrapper)."""
+    fab = Fabric(ring_topology(2), queues=QueuePolicy(max_burst=1),
+                 engine=engine)
     spec = tr.ping_pong(2, 1024)
-    res, us = _run_one(topo, spec, engine=engine, max_burst=1)
+    t0 = time.perf_counter()
+    res = fab.run(spec)
+    jax.block_until_ready(res.log_del)
+    us = (time.perf_counter() - t0) * 1e6
     thr = float(net.fabric_throughput_mev_s(res))
     err = abs(thr - ANCHOR_MEV_S) / ANCHOR_MEV_S
     if err > ANCHOR_TOL:  # a hard gate (assert would vanish under -O)
@@ -160,7 +170,32 @@ def sweep_anchor(engine=DEFAULT_ENGINE):
     m = {"thr_mev_s": thr, "paper_mev_s": ANCHOR_MEV_S, "err": err}
     return [_cell("fabric_ring2_anchor_fig8", us,
                   f"measured={thr:.2f}MEv/s paper={ANCHOR_MEV_S} "
-                  f"err={err:.2%}", engine, m)]
+                  f"err={err:.2%}", engine, m, api="fabric")]
+
+
+def sweep_heterogeneous(engine=DEFAULT_ENGINE):
+    """Per-link timing heterogeneity row: an 8-ring whose 7-0 edge is
+    the bit-serial LVDS class (331 ns/event) next to paper-timing links,
+    driven through ``Fabric.sweep`` so one compile serves both the
+    uniform baseline and the mixed cell (they share a shape bucket)."""
+    topo = ring_topology(8)
+    spec = _spec_cached("poisson", jax.random.PRNGKey(7), 8,
+                        EVENTS_PER_CHIP)
+    mixed = per_link_timing(
+        [PAPER_TIMING, SERIAL_LVDS_TIMING],
+        [1 if l == topo.n_links - 1 else 0 for l in range(topo.n_links)])
+    rows = []
+    for tag, timing in (("uniform", PAPER_TIMING), ("hetero", mixed)):
+        fab = Fabric(topo, timing=timing, engine=engine)
+        # warm=False: us_per_call stays "wall-clock, compile + run" like
+        # every other BENCH cell (the rows still share one engine
+        # compilation — timing is a dynamic operand)
+        (cell,) = fab.sweep([spec], warm=False)
+        m = _metrics(cell.result)
+        rows.append(_cell(f"fabric_{topo.name}_poisson_{tag}",
+                          cell.us_per_call, _derived(m), engine, m,
+                          api="fabric"))
+    return rows
 
 
 def enable_persistent_compile_cache():
@@ -184,7 +219,7 @@ def run_structured(engine=DEFAULT_ENGINE, slow=False):
     """All sweep cells as dicts (the ``BENCH_fabric.json`` payload)."""
     enable_persistent_compile_cache()
     return (sweep_anchor(engine) + sweep_rings(engine, slow)
-            + sweep_mesh(engine, slow))
+            + sweep_mesh(engine, slow) + sweep_heterogeneous(engine))
 
 
 def run(engine=DEFAULT_ENGINE, slow=False):

@@ -3,5 +3,5 @@ its timing/energy contract, the N-chip fabric built from it (routing,
 traffic, network), and the TPU-scale adaptations (event-sparse collectives
 + half-duplex link scheduling)."""
 
-from . import (events, fifo, link, network, protocol_sim, router,  # noqa: F401
-               traffic, transceiver)
+from . import (events, fabric, fifo, link, network,  # noqa: F401
+               protocol_sim, router, traffic, transceiver)

@@ -1,0 +1,533 @@
+"""Declarative fabric front-end: composable policies + compile/run lifecycle.
+
+``network.simulate_fabric`` grew one kwarg per feature; this module is the
+redesigned front door.  A :class:`Fabric` is a *declaration* — topology
+plus four orthogonal policies:
+
+* ``routing`` — a :class:`RoutingPolicy` (``StaticShortestPath`` wraps the
+  BFS table builder and exposes a ``table_override`` hook, the landing pad
+  for adaptive/congestion-aware routing), or a prebuilt ``RoutingTable``.
+* ``timing``  — one scalar ``LinkTiming`` shared by every link, or a
+  structure-of-arrays ``LinkTiming`` of shape (L,) mixing link classes
+  (fast parallel on-board buses next to slow bit-serial LVDS inter-board
+  links — see ``link.per_link_timing`` / ``link.SERIAL_LVDS_TIMING``).
+* ``queues``  — :class:`QueuePolicy`: per-endpoint capacity, bounded-burst
+  fairness, reset polarity.
+* ``engine``  — :class:`EngineSpec`: which bit-exact event-transport
+  engine runs the micro-transaction loop and its chunking.
+
+Execution is an *explicit lifecycle*:
+
+    fab = Fabric(ring_topology(8), timing=mixed, queues=QueuePolicy(max_burst=1))
+    cf = fab.compile(spec)          # bind + pre-warm one shape bucket
+    res = cf.run(spec)              # no compilation on this path
+    results = fab.run_many(specs)   # one compile amortised over a sweep
+
+``Fabric.compile`` makes the PR 2 shape-bucketed jit cache user-visible:
+it returns a :class:`CompiledFabric` pinned to one bucket (the pow2-padded
+static shape signature), whose ``warmup()`` populates the XLA cache with a
+zero-event dummy run and whose ``cache_size()`` exposes the underlying jit
+entry count — so tests and serving loops can *prove* a hot path never
+recompiles.  ``Fabric.run`` routes each spec to the right bucket
+automatically and caches ``CompiledFabric`` instances per bucket.
+
+``simulate_fabric`` survives unchanged as a thin wrapper that builds a
+one-shot ``Fabric`` and calls ``run`` — every historical call site keeps
+working and stays bit-exact.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .link import PAPER_TIMING, LinkTiming, link_timing_arrays
+from .network import (DEFAULT_CHUNK_SIZE, ENGINES, FabricResult, _BIG,
+                      _RING_D_FLOOR, _RING_E_FLOOR, _RING_L_FLOOR,
+                      _RING_N_FLOOR, _RING_STREAM_FLOOR, _check_reachable,
+                      _expand, _in_edge_ranks, _overflow_guard, _pad_to,
+                      _pow2ceil, _prefill, _ring_engine, _slot_engine,
+                      _stream_quota)
+from .router import AddressSpec, MulticastTable, RoutingTable, Topology
+from .traffic import TrafficSpec
+
+__all__ = ["Fabric", "CompiledFabric", "QueuePolicy", "EngineSpec",
+           "RoutingPolicy", "StaticShortestPath", "PrebuiltRouting",
+           "SweepCell"]
+
+
+# -----------------------------------------------------------------------
+# Policies
+# -----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class QueuePolicy:
+    """Per-endpoint queue behaviour of every link in the fabric.
+
+    ``capacity``   — one-shot slot budget per endpoint (bounds the events
+                     routed *through* an endpoint, not instantaneous
+                     depth); ``None`` = lossless (the expanded event
+                     count).  Overflowing forwards are dropped and
+                     counted in ``FabricResult.drops``.
+    ``max_burst``  — 0 = paper-faithful grant rule; B > 0 = bounded-burst
+                     fairness (transmitter yields after B events when the
+                     peer requests).
+    ``initial_tx`` — scalar or (L,): which side of each link resets into
+                     TX mode (the paper's chip-level global reset).
+    """
+    capacity: int | None = None
+    max_burst: int = 0
+    initial_tx: int | np.ndarray = 1
+
+    def __post_init__(self):
+        if self.capacity is not None and int(self.capacity) < 1:
+            raise ValueError(f"queue capacity must be >= 1, got "
+                             f"{self.capacity}")
+        if int(self.max_burst) < 0:
+            raise ValueError(f"max_burst must be >= 0, got {self.max_burst}")
+
+
+@dataclass(frozen=True)
+class EngineSpec:
+    """Which bit-exact event-transport engine runs the simulation.
+
+    ``name``       — ``"auto"`` (= ring), ``"ring"``, ``"reference"`` or
+                     ``"pallas"`` (see ``network`` module docstring).
+    ``chunk_size`` — ring engine only: micro-transactions per ``lax.scan``
+                     chunk between early-exit checks.
+    """
+    name: str = "auto"
+    chunk_size: int = DEFAULT_CHUNK_SIZE
+
+    def __post_init__(self):
+        resolved = "ring" if self.name == "auto" else self.name
+        if resolved not in ENGINES:
+            raise ValueError(f"unknown engine {self.name!r}; expected one "
+                             f"of {ENGINES} (or 'auto')")
+        if int(self.chunk_size) < 1:
+            # a 0-step chunk would make the early-exit while_loop spin
+            # forever
+            raise ValueError(f"chunk_size must be >= 1, got "
+                             f"{self.chunk_size}")
+
+    @property
+    def resolved(self) -> str:
+        return "ring" if self.name == "auto" else self.name
+
+
+@runtime_checkable
+class RoutingPolicy(Protocol):
+    """Anything that turns a topology into next-hop tables."""
+
+    def build(self, topo: Topology) -> RoutingTable: ...
+
+
+def _validate_tables(topo: Topology, rt: RoutingTable) -> RoutingTable:
+    n = topo.n_chips
+    for name in ("next_link", "out_side", "hops"):
+        a = np.asarray(getattr(rt, name))
+        if a.shape != (n, n):
+            raise ValueError(f"routing table {name} has shape {a.shape}, "
+                             f"expected ({n}, {n})")
+    nl = np.asarray(rt.next_link)
+    if nl.max(initial=-1) >= topo.n_links:
+        raise ValueError("routing table names a link id outside the "
+                         "topology")
+    return rt
+
+
+@dataclass(frozen=True)
+class StaticShortestPath:
+    """Deterministic BFS shortest-path routing (the PR 1 tables).
+
+    ``table_override`` — optional hook called with ``(topo, built_table)``
+    returning a replacement ``RoutingTable``.  This is the landing pad
+    for adaptive/congestion-aware routing policies: an override can bias
+    next-hops off the shortest path (it is trusted to keep the tables
+    consistent — every hop must make progress, or events cycle until the
+    step bound binds).
+    """
+    table_override: Callable[[Topology, RoutingTable],
+                             RoutingTable] | None = None
+
+    def build(self, topo: Topology) -> RoutingTable:
+        rt = RoutingTable.build(topo)
+        if self.table_override is not None:
+            rt = _validate_tables(topo, self.table_override(topo, rt))
+        return rt
+
+
+@dataclass(frozen=True)
+class PrebuiltRouting:
+    """Adapter: a ready-made ``RoutingTable`` as a ``RoutingPolicy``."""
+    table: RoutingTable
+
+    def build(self, topo: Topology) -> RoutingTable:
+        return _validate_tables(topo, self.table)
+
+
+# -----------------------------------------------------------------------
+# Run planning (setup-time numpy; shared by compile and run)
+# -----------------------------------------------------------------------
+
+class _Plan(NamedTuple):
+    """Everything one execution needs: expanded traffic, prefilled
+    queues, dynamic scalars and the static shape bucket they fit."""
+    E: int
+    C: int
+    max_steps: int
+    q_time: np.ndarray
+    q_dest: np.ndarray
+    q_inj: np.ndarray
+    sizes: np.ndarray
+    bucket: tuple
+
+
+class SweepCell(NamedTuple):
+    result: FabricResult
+    us_per_call: float
+    bucket: tuple
+
+
+class Fabric:
+    """A declarative N-chip AER fabric: topology + composable policies.
+
+    See the module docstring for the lifecycle.  Construction resolves
+    and validates every policy eagerly (routing tables are built once,
+    timing is normalised to per-link cost vectors), so a ``Fabric`` held
+    by a serving loop never re-runs setup-time numpy per call beyond the
+    per-spec routing/prefill pass.
+    """
+
+    def __init__(self, topo: Topology, *,
+                 routing: RoutingPolicy | RoutingTable | None = None,
+                 timing: LinkTiming = PAPER_TIMING,
+                 queues: QueuePolicy | None = None,
+                 engine: EngineSpec | str | None = None,
+                 addr: AddressSpec | None = None,
+                 mcast: MulticastTable | None = None):
+        self.topo = topo
+        if routing is None:
+            policy: RoutingPolicy = StaticShortestPath()
+        elif isinstance(routing, RoutingTable):
+            policy = PrebuiltRouting(routing)
+        elif isinstance(routing, RoutingPolicy):
+            policy = routing
+        else:
+            raise TypeError(f"routing must be a RoutingPolicy or a "
+                            f"RoutingTable, got {type(routing).__name__}")
+        self.routing_policy = policy
+        self.queues = queues if queues is not None else QueuePolicy()
+        if engine is None:
+            engine = EngineSpec()
+        elif isinstance(engine, str):
+            engine = EngineSpec(name=engine)
+        self.engine = engine
+        self.timing = timing
+        self.addr = addr
+        self.mcast = mcast
+
+        L = topo.n_links
+        # normalised per-link cost vectors: the engines' dynamic operands
+        self.timing_arrays = link_timing_arrays(timing, L)
+        tc, tv, ti = self.timing_arrays
+        self._worst_cost = int((tc.astype(np.int64)
+                                + np.maximum(tv, ti)).max(initial=1))
+        self.routing_table = policy.build(topo)
+        self._in_rank, self._D = _in_edge_ranks(topo)
+        self._init_tx = np.broadcast_to(
+            np.asarray(self.queues.initial_tx, np.int32), (L,))
+        self._compiled: dict[tuple, "CompiledFabric"] = {}
+        self._plan_memo: tuple | None = None  # (spec, max_steps, plan)
+
+    # --- declaration niceties ------------------------------------------
+
+    @property
+    def n_chips(self) -> int:
+        return self.topo.n_chips
+
+    @property
+    def n_links(self) -> int:
+        return self.topo.n_links
+
+    @property
+    def compiled_buckets(self) -> tuple[tuple, ...]:
+        """Shape buckets this fabric has bound so far (compile order)."""
+        return tuple(self._compiled)
+
+    def __repr__(self) -> str:
+        return (f"Fabric({self.topo.name}: {self.n_chips} chips, "
+                f"{self.n_links} links, engine={self.engine.resolved!r}, "
+                f"{len(self._compiled)} compiled bucket(s))")
+
+    # --- lifecycle ------------------------------------------------------
+
+    def compile(self, spec: TrafficSpec, *, max_steps: int | None = None,
+                warm: bool = True) -> "CompiledFabric":
+        """Bind the shape bucket that ``spec`` needs and return it.
+
+        With ``warm=True`` (default) the bucket's XLA compilation is
+        triggered immediately by a zero-event dummy run, so a subsequent
+        ``run`` of any spec in the bucket pays zero compile time — the
+        pre-warm hook a latency-sensitive serving loop wants.
+        """
+        plan = self._plan(spec, max_steps)
+        cf = self._get_compiled(plan.bucket)
+        if warm:
+            cf.warmup()
+        return cf
+
+    def run(self, spec: TrafficSpec, *,
+            max_steps: int | None = None) -> FabricResult:
+        """Simulate one traffic spec (compiling its bucket on first use)."""
+        plan = self._plan(spec, max_steps)
+        return self._get_compiled(plan.bucket)._execute(plan)
+
+    def run_many(self, specs, *,
+                 max_steps: int | None = None) -> list[FabricResult]:
+        """Run a sequence of specs, amortising compiles across buckets
+        (specs that bucket alike share one compilation)."""
+        return [self.run(s, max_steps=max_steps) for s in specs]
+
+    def sweep(self, specs, *, max_steps: int | None = None,
+              warm: bool = True) -> list[SweepCell]:
+        """``run_many`` with per-cell wall-clock: pre-warms every distinct
+        bucket first (unless ``warm=False``), then times each run — the
+        benchmark-sweep pattern where compile time must not pollute
+        per-cell numbers."""
+        plans = [self._plan(s, max_steps) for s in specs]
+        if warm:
+            for b in dict.fromkeys(p.bucket for p in plans):
+                self._get_compiled(b).warmup()
+        cells = []
+        for p in plans:
+            t0 = time.perf_counter()
+            res = self._get_compiled(p.bucket)._execute(p)
+            jax.block_until_ready(res.log_del)
+            us = (time.perf_counter() - t0) * 1e6
+            cells.append(SweepCell(result=res, us_per_call=us,
+                                   bucket=p.bucket))
+        return cells
+
+    # --- internals ------------------------------------------------------
+
+    def _get_compiled(self, bucket: tuple) -> "CompiledFabric":
+        cf = self._compiled.get(bucket)
+        if cf is None:
+            cf = CompiledFabric(self, bucket)
+            self._compiled[bucket] = cf
+        return cf
+
+    def _plan(self, spec: TrafficSpec, max_steps: int | None) -> _Plan:
+        # memoize the last plan by spec identity: the documented
+        # compile(spec) -> run(spec) lifecycle (and repeated runs of one
+        # spec) pays the setup-time numpy (expansion, route walking,
+        # prefill) once, not per call
+        memo = self._plan_memo
+        if memo is not None and memo[0] is spec and memo[1] == max_steps:
+            return memo[2]
+        plan = self._plan_impl(spec, max_steps)
+        self._plan_memo = (spec, max_steps, plan)
+        return plan
+
+    def _plan_impl(self, spec: TrafficSpec, max_steps: int | None) -> _Plan:
+        topo, rt = self.topo, self.routing_table
+        src, t, dest = _expand(spec, self.addr, self.mcast)
+        if np.any(src == dest):
+            raise ValueError("self-addressed events (src == dest)")
+        E, L = len(src), topo.n_links
+        if L == 0 or E == 0:
+            raise ValueError("need at least one link and one event")
+        # validate before any route walking (_stream_quota follows paths)
+        _check_reachable(rt, src, dest)
+
+        cap = self.queues.capacity
+        C = int(cap) if cap is not None else max(E, 1)
+        total_tx = int(rt.hops[src, dest].sum())
+        if max_steps is None:
+            max_steps = 4 * total_tx + 2 * E + 64 * (rt.diameter + 2)
+        _overflow_guard(int(t.max(initial=0)), total_tx, self._worst_cost)
+
+        eng = self.engine.resolved
+        if eng == "ring":
+            quota = _stream_quota(rt, topo.links, self._in_rank, src, dest,
+                                  L, self._D)
+            qt, qd, qi, sizes = _prefill(topo, rt, src, t, dest, C,
+                                         width="auto")
+            # Bucketed shapes (+1 = always-BIG_NS pad column for
+            # head/tail gathers); logical E / C / max_burst / max_steps
+            # and the timing vectors stay dynamic so cells share
+            # compiles.
+            C0 = qt.shape[2]
+            Cf = _pow2ceil(max(int(quota.max(initial=1)),
+                               _RING_STREAM_FLOOR)) + 1
+            bucket = ("ring",
+                      _pow2ceil(max(L, _RING_L_FLOOR)),
+                      _pow2ceil(max(topo.n_chips, _RING_N_FLOOR)),
+                      _pow2ceil(max(E, _RING_E_FLOOR)),
+                      C0,
+                      _pow2ceil(max(self._D, _RING_D_FLOOR)),
+                      Cf,
+                      int(self.engine.chunk_size))
+        else:
+            qt, qd, qi, sizes = _prefill(topo, rt, src, t, dest, C)
+            # the slot engines bake max_steps/max_burst into the scan, so
+            # they key the bucket too
+            bucket = (eng, L, E, C, int(max_steps),
+                      int(self.queues.max_burst))
+        return _Plan(E=E, C=C, max_steps=int(max_steps), q_time=qt,
+                     q_dest=qd, q_inj=qi, sizes=sizes, bucket=bucket)
+
+
+class CompiledFabric:
+    """A :class:`Fabric` bound to ONE engine shape bucket.
+
+    The bucket is the static shape signature the engines compile for
+    (pow2-padded link/event/queue dimensions for the ring engine; exact
+    shapes plus the scan length for the slot engines).  Everything else —
+    traffic, capacity, burst bound, step bound, per-link timing — travels
+    as dynamic operands, so every ``run`` on the same bucket reuses one
+    XLA executable.  ``cache_size()`` exposes the underlying jit entry
+    count; a hot serving path can assert it stays flat.
+    """
+
+    def __init__(self, fabric: Fabric, bucket: tuple):
+        self.fabric = fabric
+        self.bucket = bucket
+        self.n_runs = 0
+        topo, rt = fabric.topo, fabric.routing_table
+        L = topo.n_links
+        tc, tv, ti = fabric.timing_arrays
+        eng = bucket[0]
+        if eng == "ring":
+            _, Lp, Np, _Ep, C0, Dp, Cf, chunk = bucket
+            self._fn = _ring_engine(Lp, _Ep, C0, Dp, Cf, chunk)
+            # static gather tables + timing vectors, padded once per
+            # bucket (dummy links park forever: empty queues, zero-cost
+            # timing — semantically inert)
+            self._tables = (
+                jnp.asarray(_pad_to(fabric._init_tx, (Lp,), 1)),
+                jnp.asarray(_pad_to(topo.links, (Lp, 2), 0), jnp.int32),
+                jnp.asarray(_pad_to(rt.next_link, (Np, Np), 0), jnp.int32),
+                jnp.asarray(_pad_to(rt.out_side, (Np, Np), 0), jnp.int32),
+                jnp.asarray(_pad_to(fabric._in_rank, (Lp, 2), 0),
+                            jnp.int32),
+                jnp.asarray(_pad_to(tc, (Lp,), 0)),
+                jnp.asarray(_pad_to(tv, (Lp,), 0)),
+                jnp.asarray(_pad_to(ti, (Lp,), 0)),
+            )
+        else:
+            _, _L, E, C, max_steps, mb = bucket
+            self._fn = _slot_engine(L, E, C, max_steps, mb,
+                                    eng == "pallas")
+            self._tables = (
+                jnp.asarray(fabric._init_tx),
+                jnp.asarray(topo.links, jnp.int32),
+                jnp.asarray(rt.next_link, jnp.int32),
+                jnp.asarray(rt.out_side, jnp.int32),
+                jnp.asarray(tc), jnp.asarray(tv), jnp.asarray(ti),
+            )
+        self._warmed = False
+
+    @property
+    def engine_name(self) -> str:
+        return self.bucket[0]
+
+    def __repr__(self) -> str:
+        return (f"CompiledFabric(engine={self.engine_name!r}, "
+                f"bucket={self.bucket}, runs={self.n_runs})")
+
+    def cache_size(self) -> int:
+        """Entries in the underlying jit cache (-1 when unavailable).
+
+        One entry per traced shape signature; a second ``run`` on this
+        bucket must leave it unchanged — the no-recompile contract."""
+        fn = self._fn
+        try:
+            return int(fn._cache_size())
+        except AttributeError:  # pragma: no cover - older/newer jax
+            return -1
+
+    def run(self, spec: TrafficSpec, *,
+            max_steps: int | None = None) -> FabricResult:
+        """Run one spec, refusing specs that fall outside this bucket."""
+        plan = self.fabric._plan(spec, max_steps)
+        if plan.bucket != self.bucket:
+            raise ValueError(
+                f"spec needs shape bucket {plan.bucket} but this "
+                f"CompiledFabric is bound to {self.bucket}; use "
+                f"Fabric.run (auto-routes) or Fabric.compile the new "
+                f"bucket")
+        return self._execute(plan)
+
+    def warmup(self) -> "CompiledFabric":
+        """Trigger this bucket's XLA compilation with a zero-event run.
+
+        The dummy run offers no traffic (all queue slots hold the
+        ``BIG_NS`` sentinel, zero logical events).  On the ring engine —
+        the hot path this hook exists for — the early-exit condition
+        holds immediately, so the cost is one compilation plus
+        microseconds of execution.  The slot engines have no early exit
+        (``max_steps`` is baked into their scan), so their dummy run
+        executes the full-length scan of settled no-op steps; compile
+        time still dominates, but latency-critical slot-engine users may
+        prefer ``warm=False``.  Idempotent."""
+        if self._warmed:
+            return self
+        # a zero-event plan through the one real marshalling path
+        # (_execute), so the engine call signature lives in one place
+        L = self.fabric.topo.n_links
+        width = self.bucket[4] if self.bucket[0] == "ring" \
+            else self.bucket[3]
+        qt = np.full((L, 2, width), int(_BIG), np.int32)
+        z = np.zeros((L, 2, width), np.int32)
+        n_runs = self.n_runs
+        res = self._execute(_Plan(
+            E=0, C=width, max_steps=0, q_time=qt, q_dest=z, q_inj=z,
+            sizes=np.zeros((L, 2), np.int32), bucket=self.bucket))
+        jax.block_until_ready(res.drops)
+        self.n_runs = n_runs  # the dummy run is not a user run
+        self._warmed = True
+        return self
+
+    def _execute(self, plan: _Plan) -> FabricResult:
+        fab = self.fabric
+        E, L = plan.E, fab.topo.n_links
+        mb = int(fab.queues.max_burst)
+        if self.bucket[0] == "ring":
+            _, Lp, _Np, Ep, C0, _Dp, _Cf, _chunk = self.bucket
+            out = self._fn(
+                jnp.asarray(_pad_to(plan.q_time, (Lp, 2, C0), int(_BIG))),
+                jnp.asarray(_pad_to(plan.q_dest, (Lp, 2, C0), 0)),
+                jnp.asarray(_pad_to(plan.q_inj, (Lp, 2, C0), 0)),
+                jnp.asarray(_pad_to(plan.sizes, (Lp, 2), 0)),
+                *self._tables,
+                jnp.int32(plan.C), jnp.int32(E), jnp.int32(mb),
+                jnp.int32(plan.max_steps))
+            (log_n, log_inj, log_del, log_dest, sent, n_sw, t_link,
+             drops) = out
+            # trim the shape-bucket padding back to the real fabric
+            log_inj, log_del, log_dest = (log_inj[:E], log_del[:E],
+                                          log_dest[:E])
+            sent, n_sw, t_link = sent[:L], n_sw[:L], t_link[:L]
+            t_end = jnp.max(t_link)
+        else:
+            C = plan.C
+            out = self._fn(jnp.asarray(plan.q_time).reshape(2 * L, C),
+                           jnp.asarray(plan.q_dest).reshape(2 * L, C),
+                           jnp.asarray(plan.q_inj).reshape(2 * L, C),
+                           jnp.asarray(plan.sizes), *self._tables)
+            (log_n, log_inj, log_del, log_dest, sent, n_sw, t_link, t_end,
+             drops) = out
+        self.n_runs += 1
+        self._warmed = True  # first real run compiles the bucket too
+        return FabricResult(
+            delivered=log_n, injected=E,
+            log_inj=log_inj, log_del=log_del, log_dest=log_dest,
+            sent=sent, n_switches=n_sw,
+            t_link=t_link, t_end=t_end, drops=drops)

@@ -18,11 +18,26 @@ cycle, while a switch out of an *idle* bus pays the full, un-overlapped
 t_sw + t_sw2req = 10 ns before the first request.
 
 All times are integer nanoseconds so the discrete-event simulator is exact.
+
+Per-link heterogeneity
+----------------------
+Real multi-chip AER systems mix link classes — fast parallel on-board
+buses next to slow bit-serial LVDS inter-board links (Qiao & Indiveri
+2019), hierarchical stages with different wire budgets (DYNAPs).  A
+``LinkTiming`` therefore accepts *arrays* in every field: a
+structure-of-arrays instance of shape ``(L,)`` gives link ``l`` the
+timing contract ``timing[l]`` (see :func:`per_link_timing` /
+:meth:`LinkTiming.for_links`).  A scalar instance means "every link
+identical" — the fabric engines normalise both forms through
+:func:`link_timing_arrays` and a uniform per-link array is bit-exactly
+equivalent to the scalar it broadcasts.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -89,8 +104,93 @@ class LinkTiming:
             e_event_pj=self.e_event_pj,   # same charge moved, fewer wires
             word_bits=self.word_bits // factor)
 
+    # --- per-link heterogeneity ----------------------------------------
+
+    @property
+    def is_scalar(self) -> bool:
+        """True when every field is a plain scalar (one shared contract)."""
+        return all(np.ndim(getattr(self, f)) == 0 for f in _TIMING_FIELDS)
+
+    def for_links(self, n_links: int) -> "LinkTiming":
+        """Broadcast to an explicit structure-of-arrays of shape (L,)."""
+        return LinkTiming(**{
+            f: np.broadcast_to(np.asarray(getattr(self, f)),
+                               (n_links,)).copy()
+            for f in _TIMING_FIELDS})
+
+
+_TIMING_FIELDS = ("t_sw_ns", "t_sw2req_ns", "t_req2req_ns", "t_bidir_ns",
+                  "e_event_pj", "word_bits")
+
+
+def per_link_timing(classes, assignment) -> LinkTiming:
+    """Compose link classes into one structure-of-arrays ``LinkTiming``.
+
+    ``classes`` is a sequence of scalar ``LinkTiming`` contracts (e.g. the
+    paper's parallel bus next to a bit-serial LVDS class built with
+    ``subword``); ``assignment[l]`` names the class of link ``l``.
+    """
+    idx = np.asarray(assignment, np.int64)
+    if idx.ndim != 1:
+        raise ValueError(f"assignment must be 1-D, got shape {idx.shape}")
+    if idx.size and (idx.min() < 0 or idx.max() >= len(classes)):
+        raise ValueError(f"assignment indexes {len(classes)} classes "
+                         f"out of range: {idx.min()}..{idx.max()}")
+    for c in classes:
+        if not c.is_scalar:
+            raise ValueError("per_link_timing classes must be scalar "
+                             "LinkTiming instances")
+    return LinkTiming(**{
+        f: np.asarray([getattr(c, f) for c in classes])[idx]
+        for f in _TIMING_FIELDS})
+
+
+def link_timing_arrays(timing: LinkTiming, n_links: int):
+    """Normalise scalar-or-per-link timing to the engine's (L,) vectors.
+
+    Returns ``(t_cycle, t_rev, t_idle_sw)`` int32 arrays of shape (L,) —
+    the three costs ``protocol_sim.link_step`` charges — after validating
+    shape and the timing contract's invariants.  A scalar ``timing``
+    broadcasts; the engines consume only these vectors, so the uniform
+    broadcast is bit-exactly the scalar contract.
+    """
+    def vec(x, name):
+        a = np.asarray(x)
+        if a.ndim not in (0, 1) or (a.ndim == 1 and a.shape[0] != n_links):
+            raise ValueError(f"per-link {name} must be scalar or shape "
+                             f"({n_links},), got {a.shape}")
+        return np.broadcast_to(a, (n_links,)).astype(np.int64)
+
+    cyc = vec(timing.t_req2req_ns, "t_req2req_ns")
+    bidir = vec(timing.t_bidir_ns, "t_bidir_ns")
+    idle = vec(timing.t_sw_ns, "t_sw_ns") + vec(timing.t_sw2req_ns,
+                                                "t_sw2req_ns")
+    if np.any(cyc <= 0):
+        raise ValueError("t_req2req_ns must be positive on every link")
+    if np.any(bidir < cyc):
+        raise ValueError("t_bidir_ns must be >= t_req2req_ns on every link")
+    if np.any(idle < 0):
+        raise ValueError("idle-switch latency must be >= 0 on every link")
+    # the simulator's clocks are int32 ns with the BIG_NS = 2**30 "never
+    # released" sentinel; costs at or above it would truncate/wrap after
+    # the int32 cast and corrupt silently — refuse them while still on
+    # int64 (validated BEFORE the cast)
+    big = 1 << 30
+    if np.any(bidir >= big) or np.any(idle >= big):
+        raise ValueError(
+            "per-link timing costs must stay below the int32 BIG_NS "
+            f"sentinel ({big} ns); got max cycle {int(bidir.max())} ns, "
+            f"max idle switch {int(idle.max())} ns")
+    return (cyc.astype(np.int32), (bidir - cyc).astype(np.int32),
+            idle.astype(np.int32))
+
 
 PAPER_TIMING = LinkTiming()
+
+#: The paper §V "sub-words" contract taken to bit-serial (26 beats of one
+#: wire): the LVDS-like slow inter-board link class the heterogeneity
+#: example and benchmarks mix with the on-board parallel bus.
+SERIAL_LVDS_TIMING = PAPER_TIMING.subword(26)
 
 
 @dataclass(frozen=True)

@@ -71,9 +71,24 @@ engines (select with ``engine=``):
     in interpret mode off-TPU).
 
 When the step bound binds before delivery completes, the chunked ring
-engine may run up to ``chunk_size - 1`` extra micro-transactions past
-``max_steps``; completed simulations are unaffected (post-completion
-steps are no-ops).
+engine clamps its final chunk to the steps remaining, so it executes
+exactly ``max_steps`` micro-transactions — bit-exact against a
+reference scan of the same length (regression-tested in
+``tests/test_fabric_engines.py``).
+
+All engines take the timing contract as *dynamic* per-link (L,) cost
+vectors (``link.link_timing_arrays``): a scalar ``LinkTiming`` broadcasts
+uniformly (bit-exactly equal to the historical static-scalar path), and a
+structure-of-arrays ``LinkTiming`` gives every link its own class — e.g.
+fast on-board parallel buses next to slow bit-serial LVDS inter-board
+links.  The conservative insert bound generalises to
+``min(na + t_cycle)`` per link, which degenerates to the uniform
+``min(na) + t_cycle`` exactly.
+
+The declarative front door — composable routing/timing/queue/engine
+policies with an explicit ``compile``/``run``/``run_many`` lifecycle —
+lives in :mod:`repro.core.fabric`; ``simulate_fabric`` below is its
+one-shot convenience wrapper.
 
 The degenerate 2-chip fabric runs the identical ``link_step`` code path
 with the identical pending/next-arrival semantics as
@@ -306,7 +321,7 @@ def _pad_to(a: np.ndarray, shape: tuple, fill) -> np.ndarray:
     return out
 
 
-def _overflow_guard(t_max: int, total_tx: int, timing: LinkTiming):
+def _overflow_guard(t_max: int, total_tx: int, worst_cost: int):
     """Refuse traffic that could push a clock past the ``BIG_NS`` sentinel.
 
     Empty queue slots hold ``BIG_NS`` ("never released"); once any
@@ -314,10 +329,11 @@ def _overflow_guard(t_max: int, total_tx: int, timing: LinkTiming):
     queue state would corrupt silently.  The clock only advances by
     jumping to an arrival (<= ``t_max``) or by paying one transmission
     cost, so ``t_max + total_tx * worst_cost`` bounds every clock (and
-    ``horizon + t_cycle`` stays below int32 overflow a fortiori).
+    the ``min(na + t_cycle)`` insert bound stays below int32 overflow a
+    fortiori).  ``worst_cost`` is the maximum single-transmission cost
+    over all links (per-link heterogeneous timing maximises over the
+    fabric).
     """
-    worst_cost = timing.t_req2req_ns + max(timing.t_reverse_penalty_ns,
-                                           timing.t_idle_switch_ns)
     bound = int(t_max) + int(total_tx) * int(worst_cost)
     if bound >= int(_BIG):
         raise ValueError(
@@ -394,8 +410,14 @@ class _SlotState(NamedTuple):
 
 @functools.lru_cache(maxsize=None)
 def _slot_engine(L: int, E: int, C: int, max_steps: int,
-                 timing: LinkTiming, max_burst: int, use_kernels: bool):
-    """Compile-once slot-scan simulation for one static shape signature."""
+                 max_burst: int, use_kernels: bool):
+    """Compile-once slot-scan simulation for one static shape signature.
+
+    Timing arrives as *dynamic* (L,) cost vectors (``t_cycle_v`` /
+    ``t_rev_v`` / ``t_idle_v`` — see ``link.link_timing_arrays``), so one
+    compilation serves every timing contract, uniform or per-link
+    heterogeneous.
+    """
     from ..kernels import ops as kops
     from ..kernels import ref as kref
     if use_kernels:
@@ -406,11 +428,11 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
         update_fn = kref.fabric_queue_update
 
     Q = 2 * L
-    t_cycle = jnp.int32(timing.t_req2req_ns)
     lidx = jnp.arange(L)
 
     def run(q_time, q_dest, q_inj, sizes, init_tx,
-            links_j, next_link_j, out_side_j):
+            links_j, next_link_j, out_side_j,
+            t_cycle_v, t_rev_v, t_idle_v):
         link0 = reset_links(init_tx)
         init = _SlotState(
             link=link0,
@@ -445,14 +467,18 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
             # --- conservative clock synchronization ---------------------
             # A link acts no earlier than its clock (work pending) or its
             # own next arrival: ``na``.  Any *future* forward is released
-            # at some link's next delivery, i.e. no earlier than
-            # min(na) + t_cycle.  Two consequences keep every queue in
-            # true release order:
+            # at some link's next delivery — link ``l``'s next
+            # transmission completes no earlier than ``na[l] +
+            # t_cycle[l]`` (every transmit cost is >= its event cycle), so
+            # ``min(na + t_cycle)`` lower-bounds every possible future
+            # insert even under per-link heterogeneous timing (with
+            # uniform timing it is exactly the old ``min(na) + t_cycle``).
+            # Two consequences keep every queue in true release order:
             #   * idle links never jump past min(na), so a parked clock
             #     never overtakes a forward still in flight;
             #   * a busy link may pop its earliest released entry only if
             #     its release precedes every possible future insert
-            #     (release <= min(na) + t_cycle) — otherwise it stalls
+            #     (release <= min(na + t_cycle)) — otherwise it stalls
             #     until the rest of the fabric catches up (classic
             #     conservative lookahead).
             # With one link both guards are vacuous (its own bound is
@@ -462,13 +488,14 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
             na = jnp.where(pend_any, t_now, t_next)
             horizon = jnp.min(na)
             t_next_eff = jnp.minimum(t_next, jnp.maximum(horizon, t_now))
-            safe = r_min <= horizon + t_cycle                    # (L,2)
+            safe = r_min <= jnp.min(na + t_cycle_v)              # (L,2)
             pend_safe = jnp.where(safe, pend, 0)
 
             # --- one micro-transaction on every link, batched -----------
-            link, out = link_step_batch(s.link, pend_safe[:, 0],
-                                        pend_safe[:, 1], t_next_eff,
-                                        timing=timing, max_burst=max_burst)
+            link, out = link_step_batch(
+                s.link, pend_safe[:, 0], pend_safe[:, 1], t_next_eff,
+                max_burst=max_burst,
+                timing_arrays=(t_cycle_v, t_rev_v, t_idle_v))
 
             did = (out.tx_l + out.tx_r) > 0                      # (L,) bool
             did32 = did.astype(jnp.int32)
@@ -549,8 +576,7 @@ class _RingState(NamedTuple):
 
 
 @functools.lru_cache(maxsize=None)
-def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int,
-                 chunk: int, timing: LinkTiming):
+def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
     """Compile-once ring simulation for one static shape signature.
 
     All dimensions are the *bucketed* ones (``_RING_*_FLOOR`` pow2
@@ -559,17 +585,20 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int,
     head/tail gathers never need bounds checks), ``D`` streams per
     endpoint.  The logical capacity, event count and burst bound arrive
     as dynamic scalars (``cap``, ``real_e``, ``max_burst`` — the FSM's
-    burst guard is pure arithmetic), so every fabric that fits the
-    buckets shares ONE compilation regardless of traffic, capacity or
-    fairness setting.
+    burst guard is pure arithmetic) and the timing contract as dynamic
+    (L,) cost vectors (``t_cycle_v`` / ``t_rev_v`` / ``t_idle_v``,
+    padded with zeros on dummy links — which park forever, so their
+    ``na + t_cycle`` term is the inert ``BIG_NS``), so every fabric that
+    fits the buckets shares ONE compilation regardless of traffic,
+    capacity, fairness setting or per-link timing assignment.
     """
     Q = 2 * L
-    t_cycle = jnp.int32(timing.t_req2req_ns)
     lidx = jnp.arange(L)
     no_key = jnp.int32(2 ** 31 - 1)  # tie-break sentinel (keys are < cap)
 
     def run(q0_time, q0_dest, q0_inj, sizes, init_tx,
             links_j, next_link_j, out_side_j, in_rank_j,
+            t_cycle_v, t_rev_v, t_idle_v,
             cap, real_e, max_burst, max_steps):
         link0 = reset_links(init_tx)
         init = _RingState(
@@ -619,7 +648,8 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int,
 
             # --- conservative clock synchronization ---------------------
             # Identical contract to the reference engine (see
-            # _slot_engine); head releases are exact stand-ins: with any
+            # _slot_engine, including the per-link ``min(na + t_cycle)``
+            # insert bound); head releases are exact stand-ins: with any
             # work pending the effective next-arrival collapses to the
             # clock, and with none pending every head is the stream
             # minimum.  The FSM only tests pending > 0, so the 0/1
@@ -628,13 +658,14 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int,
             na = jnp.where(pend_any, t_now, t_next)
             horizon = jnp.min(na)
             t_next_eff = jnp.minimum(t_next, jnp.maximum(horizon, t_now))
-            safe = r_min <= horizon + t_cycle                    # (L, 2)
+            safe = r_min <= jnp.min(na + t_cycle_v)              # (L, 2)
             pend_safe = (pend_side & safe).astype(jnp.int32)
 
             # --- one micro-transaction on every link, batched -----------
-            link, out = link_step_batch(s.link, pend_safe[:, 0],
-                                        pend_safe[:, 1], t_next_eff,
-                                        timing=timing, max_burst=max_burst)
+            link, out = link_step_batch(
+                s.link, pend_safe[:, 0], pend_safe[:, 1], t_next_eff,
+                max_burst=max_burst,
+                timing_arrays=(t_cycle_v, t_rev_v, t_idle_v))
 
             did = (out.tx_l + out.tx_r) > 0                      # (L,) bool
             did32 = did.astype(jnp.int32)
@@ -734,14 +765,22 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int,
                 log_n=log_n, drops=drops)
             return ns, None
 
-        # --- chunked scan inside while_loop: exit within one chunk of
+        # --- chunked steps inside while_loop: exit within one chunk of
         # delivered + drops == injected.  Post-completion steps are
         # no-ops (no pending, parked clocks, settled FSMs), so stopping
         # at a chunk boundary is bit-exact vs. the padded reference scan.
+        # The inner trip count is clamped to the steps remaining under
+        # ``max_steps`` (a dynamic fori_loop bound — same lowering as the
+        # fixed-length scan, no per-step masking cost), so when the step
+        # bound binds mid-chunk the simulation still executes EXACTLY
+        # ``max_steps`` micro-transactions — bit-exact against a
+        # reference scan of the same length.
         def chunk_body(carry):
             st, base = carry
-            st2, _ = jax.lax.scan(
-                body, st, base + jnp.arange(chunk, dtype=jnp.int32))
+            this_chunk = jnp.minimum(jnp.int32(chunk), max_steps - base)
+            st2 = jax.lax.fori_loop(
+                jnp.int32(0), this_chunk,
+                lambda i, s: body(s, base + i)[0], st)
             return st2, base + jnp.int32(chunk)
 
         def cond(carry):
@@ -777,13 +816,25 @@ def simulate_fabric(topo: Topology,
                     chunk_size: int = DEFAULT_CHUNK_SIZE) -> FabricResult:
     """Simulate an N-chip fabric of bi-directional AER links.
 
+    This is the stable *convenience wrapper* around the declarative
+    :class:`repro.core.fabric.Fabric` object API: it folds the kwargs
+    into the corresponding policy objects, builds a one-shot ``Fabric``
+    and calls :meth:`Fabric.run`.  Code that reuses one fabric across
+    many traffic specs (sweeps, serving loops) should hold a ``Fabric``
+    and use its explicit ``compile``/``run``/``run_many`` lifecycle
+    instead — the wrapper rebuilds routing tables every call and hides
+    the shape-bucketed jit cache that makes repeat runs cheap.
+
     Args:
       topo:        fabric topology (``router.line/ring/mesh2d_topology``).
       spec:        injected traffic.  With ``addr`` given, ``spec.dest``
                    holds packed 26-bit AER words (multicast tags expanded
                    through ``mcast``); otherwise plain destination chip ids.
       routing:     prebuilt table (rebuilt from ``topo`` when omitted).
-      timing:      per-link timing contract (shared by all links).
+      timing:      timing contract — one scalar ``LinkTiming`` shared by
+                   all links, or a structure-of-arrays ``LinkTiming`` of
+                   shape (L,) for per-link heterogeneity (see
+                   ``link.per_link_timing``).
       max_burst:   0 = paper-faithful grant rule, B > 0 = bounded burst.
       initial_tx:  scalar or (L,) — which side of each link resets into TX.
       max_steps:   global micro-transaction count; default scales with the
@@ -801,82 +852,14 @@ def simulate_fabric(topo: Topology,
       chunk_size:  ring engine only — micro-transactions per ``lax.scan``
                    chunk between early-exit checks.
     """
-    rt = routing if routing is not None else RoutingTable.build(topo)
-    src, t, dest = _expand(spec, addr, mcast)
-    if np.any(src == dest):
-        raise ValueError("self-addressed events (src == dest)")
-    E = len(src)
-    L = topo.n_links
-    if L == 0 or E == 0:
-        raise ValueError("need at least one link and one event")
-    eng = "ring" if engine == "auto" else engine
-    if eng not in ENGINES:
-        raise ValueError(f"unknown engine {engine!r}; expected one of "
-                         f"{ENGINES} (or 'auto')")
-    if chunk_size < 1:
-        # a 0-step chunk would make the early-exit while_loop spin forever
-        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
-    # validate before any route walking (_stream_quota follows paths)
-    _check_reachable(rt, src, dest)
-
-    C = int(queue_capacity) if queue_capacity is not None else max(E, 1)
-    total_tx = int(rt.hops[src, dest].sum())
-    if max_steps is None:
-        max_steps = 4 * total_tx + 2 * E + 64 * (rt.diameter + 2)
-    _overflow_guard(int(t.max(initial=0)), total_tx, timing)
-
-    init_tx = np.broadcast_to(np.asarray(initial_tx, np.int32), (L,))
-
-    if eng == "ring":
-        in_rank, D = _in_edge_ranks(topo)
-        quota = _stream_quota(rt, topo.links, in_rank, src, dest, L, D)
-        qt, qd, qi, sizes = _prefill(topo, rt, src, t, dest, C, width="auto")
-        # Bucketed shapes (+1 = always-BIG_NS pad column for head/tail
-        # gathers); logical E / C stay dynamic so cells share compiles.
-        C0 = qt.shape[2]
-        Cf = _pow2ceil(max(int(quota.max(initial=1)),
-                           _RING_STREAM_FLOOR)) + 1
-        Lp = _pow2ceil(max(L, _RING_L_FLOOR))
-        Np = _pow2ceil(max(topo.n_chips, _RING_N_FLOOR))
-        Dp = _pow2ceil(max(D, _RING_D_FLOOR))
-        Ep = _pow2ceil(max(E, _RING_E_FLOOR))
-        fn = _ring_engine(Lp, Ep, C0, Dp, Cf, int(chunk_size), timing)
-        out = fn(jnp.asarray(_pad_to(qt, (Lp, 2, C0), int(_BIG))),
-                 jnp.asarray(_pad_to(qd, (Lp, 2, C0), 0)),
-                 jnp.asarray(_pad_to(qi, (Lp, 2, C0), 0)),
-                 jnp.asarray(_pad_to(sizes, (Lp, 2), 0)),
-                 jnp.asarray(_pad_to(init_tx, (Lp,), 1)),
-                 jnp.asarray(_pad_to(topo.links, (Lp, 2), 0), jnp.int32),
-                 jnp.asarray(_pad_to(rt.next_link, (Np, Np), 0), jnp.int32),
-                 jnp.asarray(_pad_to(rt.out_side, (Np, Np), 0), jnp.int32),
-                 jnp.asarray(_pad_to(in_rank, (Lp, 2), 0), jnp.int32),
-                 jnp.int32(C), jnp.int32(E), jnp.int32(max_burst),
-                 jnp.int32(max_steps))
-        (log_n, log_inj, log_del, log_dest, sent, n_sw, t_link,
-         drops) = out
-        # trim the shape-bucket padding back to the real fabric
-        log_inj, log_del, log_dest = (log_inj[:E], log_del[:E],
-                                      log_dest[:E])
-        sent, n_sw, t_link = sent[:L], n_sw[:L], t_link[:L]
-        t_end = jnp.max(t_link)
-    else:
-        qt, qd, qi, sizes = _prefill(topo, rt, src, t, dest, C)
-        fn = _slot_engine(L, E, C, int(max_steps), timing, int(max_burst),
-                          eng == "pallas")
-        out = fn(jnp.asarray(qt).reshape(2 * L, C),
-                 jnp.asarray(qd).reshape(2 * L, C),
-                 jnp.asarray(qi).reshape(2 * L, C),
-                 jnp.asarray(sizes), jnp.asarray(init_tx),
-                 jnp.asarray(topo.links, jnp.int32),
-                 jnp.asarray(rt.next_link, jnp.int32),
-                 jnp.asarray(rt.out_side, jnp.int32))
-        (log_n, log_inj, log_del, log_dest, sent, n_sw, t_link, t_end,
-         drops) = out
-    return FabricResult(
-        delivered=log_n, injected=E,
-        log_inj=log_inj, log_del=log_del, log_dest=log_dest,
-        sent=sent, n_switches=n_sw,
-        t_link=t_link, t_end=t_end, drops=drops)
+    from .fabric import EngineSpec, Fabric, QueuePolicy
+    fab = Fabric(topo, routing=routing, timing=timing,
+                 queues=QueuePolicy(capacity=queue_capacity,
+                                    max_burst=max_burst,
+                                    initial_tx=initial_tx),
+                 engine=EngineSpec(name=engine, chunk_size=chunk_size),
+                 addr=addr, mcast=mcast)
+    return fab.run(spec, max_steps=max_steps)
 
 
 # -----------------------------------------------------------------------
@@ -896,8 +879,12 @@ def per_link_throughput_mev_s(res: FabricResult) -> jnp.ndarray:
 
 def fabric_energy_pj(res: FabricResult,
                      timing: LinkTiming = PAPER_TIMING) -> jnp.ndarray:
-    """Total link energy: every hop moves one ``e_event_pj`` event."""
-    return jnp.sum(res.sent) * timing.e_event_pj
+    """Total link energy: every hop on link ``l`` moves one event at that
+    link's ``e_event_pj`` (scalar timing: the paper's 11 pJ everywhere)."""
+    e = np.asarray(timing.e_event_pj)
+    if e.ndim == 0:
+        return jnp.sum(res.sent) * timing.e_event_pj
+    return jnp.sum(jnp.sum(res.sent, axis=1) * jnp.asarray(e))
 
 
 def delivered_latencies(res: FabricResult) -> np.ndarray:

@@ -97,7 +97,10 @@ def link_step(s: LinkState,
               t_next_arr: jnp.ndarray,
               *,
               timing: LinkTiming = PAPER_TIMING,
-              max_burst: int = 0):
+              max_burst: int = 0,
+              t_cycle_ns=None,
+              t_rev_ns=None,
+              t_idle_sw_ns=None):
     """One micro-transaction of one link: FSM settling + at most one bus act.
 
     Args:
@@ -109,12 +112,21 @@ def link_step(s: LinkState,
                   of jumping.
       timing:     link timing contract (static; closed over under vmap).
       max_burst:  0 = paper-faithful grant rule; B > 0 = bounded-burst.
+      t_cycle_ns / t_rev_ns / t_idle_sw_ns: optional *dynamic* overrides of
+                  the three costs ``timing`` would supply statically — the
+                  per-link-heterogeneity path.  The fabric engines vmap
+                  these as (L,) vectors so one compilation serves every
+                  timing assignment; a uniform override is bit-exactly the
+                  static contract (identical int32 arithmetic).
 
     Returns ``(new_state, LinkStepOut)``.
     """
-    t_cycle = jnp.int32(timing.t_req2req_ns)
-    t_rev = jnp.int32(timing.t_reverse_penalty_ns)
-    t_idle_sw = jnp.int32(timing.t_idle_switch_ns)
+    t_cycle = jnp.int32(timing.t_req2req_ns if t_cycle_ns is None
+                        else t_cycle_ns)
+    t_rev = jnp.int32(timing.t_reverse_penalty_ns if t_rev_ns is None
+                      else t_rev_ns)
+    t_idle_sw = jnp.int32(timing.t_idle_switch_ns if t_idle_sw_ns is None
+                          else t_idle_sw_ns)
 
     # --- FSM evaluation with wire settling ------------------------------
     # The SW_req/SW_ack wires propagate in O(gate delay), far inside the
@@ -188,7 +200,8 @@ def link_step_batch(state: LinkState,
                     t_next_arr: jnp.ndarray,
                     *,
                     timing: LinkTiming = PAPER_TIMING,
-                    max_burst: int = 0):
+                    max_burst: int = 0,
+                    timing_arrays=None):
     """One micro-transaction on a whole batch of links at once.
 
     ``state`` is a ``LinkState`` with ``(L,)``-shaped leaves (see
@@ -200,12 +213,29 @@ def link_step_batch(state: LinkState,
     condition (e.g. "all events delivered") holds instead of padding to a
     worst-case step count.
 
+    ``timing_arrays`` — an optional ``(t_cycle, t_rev, t_idle_sw)`` triple
+    of (L,) int32 vectors (see ``link.link_timing_arrays``) — switches the
+    batch to per-link heterogeneous timing: link ``l`` pays link ``l``'s
+    costs, and the vectors travel as *dynamic* operands, so one
+    compilation serves every timing assignment.  When omitted, the static
+    ``timing`` contract applies to every link, exactly as before.
+
     Returns ``(new_state, LinkStepOut)`` with ``(L,)``-shaped leaves.
     """
+    if timing_arrays is None:
+        step = jax.vmap(
+            lambda s, pl, pr, na: link_step(s, pl, pr, na, timing=timing,
+                                            max_burst=max_burst))
+        return step(state, pend_l, pend_r, t_next_arr)
+    t_cycle, t_rev, t_idle_sw = timing_arrays
     step = jax.vmap(
-        lambda s, pl, pr, na: link_step(s, pl, pr, na,
-                                        timing=timing, max_burst=max_burst))
-    return step(state, pend_l, pend_r, t_next_arr)
+        lambda s, pl, pr, na, tc, tv, ti: link_step(
+            s, pl, pr, na, timing=timing, max_burst=max_burst,
+            t_cycle_ns=tc, t_rev_ns=tv, t_idle_sw_ns=ti))
+    return step(state, pend_l, pend_r, t_next_arr,
+                jnp.asarray(t_cycle, jnp.int32),
+                jnp.asarray(t_rev, jnp.int32),
+                jnp.asarray(t_idle_sw, jnp.int32))
 
 
 class SimState(NamedTuple):

@@ -37,6 +37,13 @@ TPU adaptation notes (mirroring ``aer_encode.py``):
 Validated bit-exactly against ``ref.fabric_queue_scan`` /
 ``ref.fabric_queue_update`` in interpret mode (CPU container); the
 grid/BlockSpec layout is the TPU deployment configuration.
+
+These kernels back ``engine="pallas"`` of the fabric front-end
+(``fabric.EngineSpec`` / the ``simulate_fabric`` wrapper).  They are
+deliberately timing-agnostic: the queue step sees only release times and
+per-queue clocks, so per-link timing heterogeneity (structure-of-arrays
+``LinkTiming``) flows through the engine's dynamic cost vectors without
+touching the kernel layout.
 """
 
 from __future__ import annotations

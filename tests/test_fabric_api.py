@@ -1,0 +1,330 @@
+"""The declarative ``Fabric`` front-end: policy composition, the explicit
+compile/run lifecycle, per-link timing heterogeneity, and the contract
+that the ``simulate_fabric`` compatibility wrapper is the new API
+bit-for-bit."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import network as net
+from repro.core import traffic as tr
+from repro.core.fabric import (CompiledFabric, EngineSpec, Fabric,
+                               PrebuiltRouting, QueuePolicy,
+                               StaticShortestPath)
+from repro.core.link import (PAPER_TIMING, SERIAL_LVDS_TIMING, LinkTiming,
+                             link_timing_arrays, per_link_timing)
+from repro.core.router import RoutingTable, line_topology, ring_topology
+
+assert_bit_exact = net.assert_results_equal
+
+
+def _spec(key=3, n=8, epc=24):
+    return tr.poisson(jax.random.PRNGKey(key), n, epc)
+
+
+def _mixed_timing(n_links, slow=(0,)):
+    cls = [0] * n_links
+    for l in slow:
+        cls[l] = 1
+    return per_link_timing([PAPER_TIMING, SERIAL_LVDS_TIMING], cls)
+
+
+class TestWrapperEquivalence:
+    """``simulate_fabric`` must be ``Fabric.run`` bit-exactly — it IS the
+    same code path, and this pins the contract."""
+
+    @pytest.mark.parametrize("engine", sorted(net.ENGINES))
+    def test_wrapper_is_fabric_run(self, engine):
+        topo = ring_topology(4)
+        spec = _spec(13, 4, 24)
+        a = net.simulate_fabric(topo, spec, engine=engine, max_burst=1)
+        fab = Fabric(topo, queues=QueuePolicy(max_burst=1),
+                     engine=EngineSpec(name=engine))
+        assert_bit_exact(a, fab.run(spec), f"wrapper/{engine}")
+
+    def test_wrapper_with_prebuilt_routing(self):
+        topo = ring_topology(6)
+        rt = RoutingTable.build(topo)
+        spec = _spec(5, 6, 16)
+        a = net.simulate_fabric(topo, spec, routing=rt)
+        b = Fabric(topo, routing=rt).run(spec)
+        assert_bit_exact(a, b, "prebuilt-routing")
+
+    def test_paper_anchor_through_fabric_api(self):
+        """The N=2 Fig. 8 anchor (28.6 MEv/s) must hold through the new
+        front door, not just the wrapper."""
+        fab = Fabric(ring_topology(2), queues=QueuePolicy(max_burst=1))
+        res = fab.run(tr.ping_pong(2, 1024))
+        thr = float(net.fabric_throughput_mev_s(res))
+        assert thr == pytest.approx(28.6, rel=1e-3)
+
+
+class TestCompileRunLifecycle:
+    def test_compile_returns_bound_bucket(self):
+        fab = Fabric(ring_topology(4))
+        spec = _spec(1, 4, 16)
+        cf = fab.compile(spec, warm=False)
+        assert isinstance(cf, CompiledFabric)
+        assert cf.bucket[0] == "ring"
+        assert cf.bucket in fab.compiled_buckets
+
+    def test_second_run_same_bucket_zero_recompiles(self):
+        """The headline cache contract: after a warm compile, further
+        runs on the bucket add NO jit cache entries — even with
+        different traffic, capacity or burst settings (all dynamic)."""
+        fab = Fabric(ring_topology(4))
+        cf = fab.compile(_spec(1, 4, 16))        # warm=True
+        n0 = cf.cache_size()
+        assert n0 >= 1
+        cf.run(_spec(1, 4, 16))
+        cf.run(_spec(2, 4, 20))                  # same bucket, new traffic
+        Fabric(ring_topology(4),
+               queues=QueuePolicy(max_burst=3)).run(_spec(3, 4, 16))
+        assert cf.cache_size() == n0
+
+    def test_warm_compile_then_run_bit_exact(self):
+        topo = ring_topology(4)
+        spec = _spec(7, 4, 24)
+        fab = Fabric(topo)
+        cf = fab.compile(spec)
+        assert_bit_exact(net.simulate_fabric(topo, spec), cf.run(spec),
+                         "warm-compile")
+
+    def test_compiled_rejects_foreign_bucket(self):
+        """CompiledFabric.run refuses a spec outside its bucket instead
+        of silently recompiling."""
+        fab = Fabric(line_topology(3),
+                     engine=EngineSpec(name="reference"))
+        cf = fab.compile(_spec(1, 3, 8), warm=False)
+        with pytest.raises(ValueError, match="shape bucket"):
+            cf.run(_spec(1, 3, 12))  # different E -> different slot bucket
+
+    def test_fabric_run_routes_buckets_automatically(self):
+        """Fabric.run (unlike CompiledFabric.run) accepts any spec and
+        compiles/reuses buckets as needed."""
+        fab = Fabric(line_topology(3), engine=EngineSpec(name="reference"))
+        fab.run(_spec(1, 3, 8))
+        fab.run(_spec(1, 3, 12))
+        assert len(fab.compiled_buckets) == 2
+
+    def test_run_many_amortises_and_matches(self):
+        topo = ring_topology(4)
+        specs = [_spec(k, 4, 24) for k in range(4)]
+        fab = Fabric(topo)
+        results = fab.run_many(specs)
+        assert len(fab.compiled_buckets) == 1  # one bucket, one compile
+        for s, r in zip(specs, results):
+            assert_bit_exact(net.simulate_fabric(topo, s), r, "run_many")
+
+    def test_sweep_returns_timed_cells(self):
+        fab = Fabric(ring_topology(4))
+        cells = fab.sweep([_spec(k, 4, 16) for k in range(3)])
+        assert len(cells) == 3
+        for c in cells:
+            assert c.us_per_call > 0
+            assert int(c.result.delivered) == c.result.injected
+
+
+class TestPolicyValidation:
+    def test_unknown_engine(self):
+        with pytest.raises(ValueError, match="unknown engine"):
+            EngineSpec(name="warp")
+
+    def test_bad_chunk(self):
+        with pytest.raises(ValueError, match="chunk_size"):
+            EngineSpec(chunk_size=0)
+
+    def test_bad_queue_policy(self):
+        with pytest.raises(ValueError, match="capacity"):
+            QueuePolicy(capacity=0)
+        with pytest.raises(ValueError, match="max_burst"):
+            QueuePolicy(max_burst=-1)
+
+    def test_bad_routing_type(self):
+        with pytest.raises(TypeError, match="RoutingPolicy"):
+            Fabric(ring_topology(4), routing=42)
+
+    def test_bad_timing_shape(self):
+        bad = LinkTiming(t_req2req_ns=np.array([31, 31, 31], np.int32))
+        with pytest.raises(ValueError, match="per-link"):
+            Fabric(ring_topology(4), timing=bad)  # 4 links, 3 entries
+
+    def test_timing_invariants(self):
+        with pytest.raises(ValueError, match="t_bidir"):
+            link_timing_arrays(LinkTiming(t_bidir_ns=30), 2)
+        with pytest.raises(ValueError, match="positive"):
+            link_timing_arrays(LinkTiming(t_req2req_ns=0), 2)
+
+    def test_timing_int32_overflow_rejected(self):
+        """Costs at/above the int32 BIG_NS sentinel must be refused
+        before the int32 cast, not silently wrapped."""
+        huge = 3_000_000_000
+        with pytest.raises(ValueError, match="BIG_NS"):
+            link_timing_arrays(LinkTiming(t_req2req_ns=huge,
+                                          t_bidir_ns=huge + 4), 2)
+
+
+class TestRoutingPolicy:
+    def test_static_shortest_path_matches_default(self):
+        topo = ring_topology(6)
+        spec = _spec(9, 6, 16)
+        a = Fabric(topo).run(spec)
+        b = Fabric(topo, routing=StaticShortestPath()).run(spec)
+        assert_bit_exact(a, b, "explicit-policy")
+
+    def test_table_override_hook_changes_routes(self):
+        """The adaptive-routing landing pad: an override that forces the
+        long way around a ring is honoured (more hops -> more sent)."""
+        topo = ring_topology(4)
+        spec = tr.TrafficSpec(src=jnp.zeros(8, jnp.int32),
+                              t=jnp.arange(8, dtype=jnp.int32) * 200,
+                              dest=jnp.ones(8, jnp.int32))
+
+        def long_way(topo_, rt):
+            # dest 1 from chip 0: force the 3-hop detour 0 -(l3)-> 3
+            # -(l2)-> 2 -(l1)-> 1 instead of the direct 0-1 link (the
+            # override owns consistency of every hop it bends)
+            nl = rt.next_link.copy()
+            os = rt.out_side.copy()
+            hops = rt.hops.copy()
+            nl[0, 1], os[0, 1], hops[0, 1] = 3, 1, 3
+            nl[3, 1], os[3, 1], hops[3, 1] = 2, 1, 2
+            return RoutingTable(next_link=nl, out_side=os, hops=hops)
+
+        direct = Fabric(topo).run(spec)
+        detour = Fabric(
+            topo, routing=StaticShortestPath(table_override=long_way)
+        ).run(spec)
+        assert int(detour.delivered) == 8
+        assert int(np.asarray(detour.sent).sum()) == 3 * 8
+        assert int(np.asarray(direct.sent).sum()) == 8
+
+    def test_override_validated(self):
+        def bad(topo_, rt):
+            return RoutingTable(next_link=rt.next_link[:2, :2],
+                                out_side=rt.out_side, hops=rt.hops)
+        with pytest.raises(ValueError, match="routing table"):
+            Fabric(ring_topology(4),
+                   routing=StaticShortestPath(table_override=bad))
+
+    def test_prebuilt_adapter(self):
+        topo = ring_topology(4)
+        pol = PrebuiltRouting(RoutingTable.build(topo))
+        assert_bit_exact(Fabric(topo).run(_spec(2, 4, 12)),
+                         Fabric(topo, routing=pol).run(_spec(2, 4, 12)),
+                         "prebuilt-adapter")
+
+
+class TestPerLinkTiming:
+    """The headline capability: per-link heterogeneous LinkTiming on all
+    three engines, with the uniform array bit-exactly the scalar."""
+
+    @pytest.mark.parametrize("engine", sorted(net.ENGINES))
+    def test_uniform_array_equals_scalar(self, engine):
+        topo = ring_topology(4)
+        spec = _spec(13, 4, 24)
+        a = net.simulate_fabric(topo, spec, engine=engine,
+                                timing=PAPER_TIMING)
+        b = net.simulate_fabric(topo, spec, engine=engine,
+                                timing=PAPER_TIMING.for_links(topo.n_links))
+        assert_bit_exact(a, b, f"uniform/{engine}")
+
+    @pytest.mark.parametrize("engine", sorted(net.ENGINES))
+    def test_uniform_subword_array_equals_scalar(self, engine):
+        """Same check on a non-default contract (subword serialisation)."""
+        topo = line_topology(3)
+        t = PAPER_TIMING.subword(2)
+        spec = _spec(5, 3, 16)
+        a = net.simulate_fabric(topo, spec, engine=engine, timing=t)
+        b = net.simulate_fabric(topo, spec, engine=engine,
+                                timing=t.for_links(topo.n_links))
+        assert_bit_exact(a, b, f"uniform-subword/{engine}")
+
+    def test_heterogeneous_cross_engine_bit_exact(self):
+        topo = ring_topology(8)
+        spec = _spec(3, 8, 24)
+        mixed = _mixed_timing(topo.n_links, slow=(7,))
+        res = {e: net.simulate_fabric(topo, spec, engine=e, timing=mixed)
+               for e in net.ENGINES}
+        assert int(res["ring"].delivered) == res["ring"].injected
+        assert_bit_exact(res["reference"], res["ring"], "het/ring")
+        assert_bit_exact(res["reference"], res["pallas"], "het/pallas")
+
+    def test_heterogeneous_with_bursts(self):
+        """Heterogeneity composes with the bounded-burst fairness
+        extension identically on both scan engines."""
+        topo = ring_topology(6)
+        spec = tr.ping_pong(6, 24)
+        mixed = _mixed_timing(topo.n_links, slow=(0, 3))
+        kw = dict(timing=mixed, max_burst=1)
+        a = net.simulate_fabric(topo, spec, engine="reference", **kw)
+        b = net.simulate_fabric(topo, spec, engine="ring", **kw)
+        assert_bit_exact(a, b, "het/burst")
+
+    def test_heterogeneous_with_drops(self):
+        """...and with the capacity/drop path: a convergecast through a
+        slow relay link drops identically on both engines."""
+        from repro.core.router import Topology
+        topo = Topology(4, np.array([(0, 2), (1, 2), (2, 3)], np.int32))
+        n = 64
+        spec = tr.TrafficSpec(
+            src=jnp.concatenate([jnp.zeros(n, jnp.int32),
+                                 jnp.ones(n, jnp.int32)]),
+            t=jnp.zeros(2 * n, jnp.int32),
+            dest=jnp.full((2 * n,), 3, jnp.int32))
+        mixed = _mixed_timing(topo.n_links, slow=(2,))  # slow drain link
+        kw = dict(timing=mixed, queue_capacity=n)
+        a = net.simulate_fabric(topo, spec, engine="reference", **kw)
+        b = net.simulate_fabric(topo, spec, engine="ring", **kw)
+        assert int(a.drops) > 0
+        assert int(a.delivered) + int(a.drops) == 2 * n
+        assert_bit_exact(a, b, "het/drop")
+
+    def test_slow_link_slows_only_its_traffic(self):
+        """Physics check: a slow LVDS class on one ring link stretches
+        latencies crossing it; traffic avoiding it keeps paper latency."""
+        topo = ring_topology(8)
+        n = 16
+        # chip 2 -> 3: never touches link 7 (the 7-0 edge); chip 7 -> 0
+        # rides it directly
+        spec = tr.TrafficSpec(
+            src=jnp.concatenate([jnp.full((n,), 2, jnp.int32),
+                                 jnp.full((n,), 7, jnp.int32)]),
+            t=jnp.tile(jnp.arange(n, dtype=jnp.int32) * 1500, 2),
+            dest=jnp.concatenate([jnp.full((n,), 3, jnp.int32),
+                                  jnp.zeros(n, jnp.int32)]))
+        mixed = _mixed_timing(topo.n_links, slow=(7,))
+        res = net.simulate_fabric(topo, spec, timing=mixed)
+        m = int(res.delivered)
+        assert m == 2 * n
+        lat = net.delivered_latencies(res)
+        dst = np.asarray(res.log_dest)[:m]
+        assert lat[dst == 3].max() == PAPER_TIMING.t_req2req_ns
+        assert lat[dst == 0].min() >= SERIAL_LVDS_TIMING.t_req2req_ns
+
+    def test_heterogeneous_energy_rollup(self):
+        """Per-link e_event_pj weights each hop by its link's energy."""
+        topo = line_topology(3)
+        cheap = LinkTiming(e_event_pj=1.0)
+        dear = LinkTiming(e_event_pj=100.0)
+        mixed = per_link_timing([cheap, dear], [0, 1])
+        n = 8
+        spec = tr.TrafficSpec(src=jnp.zeros(n, jnp.int32),
+                              t=jnp.arange(n, dtype=jnp.int32) * 100,
+                              dest=jnp.full((n,), 2, jnp.int32))
+        res = net.simulate_fabric(topo, spec, timing=mixed)
+        assert float(net.fabric_energy_pj(res, mixed)) == pytest.approx(
+            n * 1.0 + n * 100.0)
+
+    def test_shared_bucket_across_timing(self):
+        """Timing travels as dynamic vectors: fabrics that differ ONLY in
+        timing share one ring-engine shape bucket (and so one compile)."""
+        topo = ring_topology(4)
+        spec = _spec(1, 4, 16)
+        f1 = Fabric(topo)
+        f2 = Fabric(topo, timing=_mixed_timing(topo.n_links))
+        b1 = f1.compile(spec, warm=False).bucket
+        b2 = f2.compile(spec, warm=False).bucket
+        assert b1 == b2

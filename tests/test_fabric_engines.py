@@ -82,6 +82,25 @@ class TestRingVsReference:
         b = net.simulate_fabric(ring_topology(4), spec, chunk_size=256)
         assert_bit_exact(a, b, "chunk16-vs-256")
 
+    @pytest.mark.parametrize("max_steps", [5, 17, 130])
+    def test_binding_max_steps_is_exact(self, max_steps):
+        """Regression for the PR 2 wart: when the step bound binds
+        mid-chunk, the ring engine must execute EXACTLY ``max_steps``
+        micro-transactions — not up to ``chunk_size - 1`` extra — and so
+        match a reference scan of the same length bit-for-bit."""
+        spec = tr.poisson(jax.random.PRNGKey(3), 4, 24)
+        a = net.simulate_fabric(ring_topology(4), spec,
+                                engine="reference", max_steps=max_steps)
+        assert int(a.delivered) < a.injected  # the bound really binds
+        for chunk in (16, 64, 256):
+            b = net.simulate_fabric(ring_topology(4), spec, engine="ring",
+                                    max_steps=max_steps, chunk_size=chunk)
+            assert_bit_exact(a, b, f"max_steps={max_steps}/chunk={chunk}")
+
+    # Per-link timing heterogeneity is covered by
+    # tests/test_fabric_api.py::TestPerLinkTiming (cross-engine
+    # bit-exactness, uniform-array ≡ scalar, bursts/drops composition).
+
     def test_unknown_engine_rejected(self):
         spec = tr.poisson(jax.random.PRNGKey(0), 2, 4)
         with pytest.raises(ValueError, match="unknown engine"):
