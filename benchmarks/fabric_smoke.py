@@ -4,10 +4,13 @@ Runs one small fabric through every engine: ring-4 under all traffic
 patterns on the ``reference`` slot-scan engine vs. the ``ring`` hot
 path, plus one Poisson cell on the ``pallas`` fused-kernel engine
 (interpret mode off-TPU) — asserting the ``FabricResult``s identical
-field-for-field.  Then it times the ring engine end-to-end (compile +
-run, the number a user feels) and fails if it regressed more than
-``MAX_REGRESSION``x against the checked-in baseline in
-``baselines/fabric_smoke.json``.
+field-for-field.  A multicast cell gates the in-fabric replication
+claim: ``in_fabric`` must deliver the identical destination multiset as
+``source_expand`` while using STRICTLY fewer link traversals on a
+shared-path ring (and stay bit-exact across engines itself).  Then it
+times the ring engine end-to-end (compile + run, the number a user
+feels) and fails if it regressed more than ``MAX_REGRESSION``x against
+the checked-in baseline in ``baselines/fabric_smoke.json``.
 
 The 5x headroom absorbs CI machine variance; a genuine complexity
 regression (e.g. the per-step queue read going back to O(C)) overshoots
@@ -26,11 +29,12 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+import numpy as np
 
 from repro.core import network as net
 from repro.core import traffic as tr
-from repro.core.fabric import Fabric, QueuePolicy
-from repro.core.router import ring_topology
+from repro.core.fabric import Fabric, MulticastPolicy, QueuePolicy
+from repro.core.router import AddressSpec, MulticastTable, ring_topology
 
 BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
                         "fabric_smoke.json")
@@ -63,10 +67,47 @@ def run_smoke() -> dict:
             pal = net.simulate_fabric(topo, spec, engine="pallas",
                                       max_burst=mb)
             _assert_bit_exact(ref, pal, f"ring{N_CHIPS}/{name}/pallas")
+    saved = run_multicast_gate()
     return {"ring_us": t_ring * 1e6,
             "cells": len(tr.PATTERNS),
             "n_chips": N_CHIPS,
-            "events_per_chip": EVENTS_PER_CHIP}
+            "events_per_chip": EVENTS_PER_CHIP,
+            "mcast_traversals_saved": saved}
+
+
+def run_multicast_gate() -> int:
+    """Gate the in-fabric multicast claim: identical delivery multiset,
+    strictly fewer link traversals than source expansion on a fanout-8
+    shared-path ring, bit-exact across ring and reference engines.
+    Returns the traversals saved (> 0 or the run fails)."""
+    topo = ring_topology(16)
+    addr = AddressSpec()
+    members = np.zeros((1, 16), bool)
+    members[0, 4:12] = True               # fanout 8 from chip 0
+    mc = MulticastTable(members)
+    n = 12
+    spec = tr.TrafficSpec(
+        src=jax.numpy.zeros(n, jax.numpy.int32),
+        t=jax.numpy.arange(n, dtype=jax.numpy.int32) * 400,
+        dest=jax.numpy.asarray(addr.pack_multicast(np.zeros(n, np.int64))))
+
+    def run(mode, engine="ring"):
+        return Fabric(topo, addr=addr, engine=engine,
+                      mcast=MulticastPolicy(mode, mc)).run(spec)
+
+    infab = run("in_fabric")
+    _assert_bit_exact(infab, run("in_fabric", engine="reference"),
+                      "mcast/in_fabric ring-vs-reference")
+    source = run("source_expand")
+
+    if net.delivery_multiset(infab) != net.delivery_multiset(source):
+        raise RuntimeError("in_fabric multicast delivered a different "
+                           "destination multiset than source_expand")
+    if infab.traversals >= source.traversals:
+        raise RuntimeError(
+            f"in-fabric multicast did not save traversals: "
+            f"{infab.traversals} vs {source.traversals} (source expand)")
+    return source.traversals - infab.traversals
 
 
 def main(argv=None) -> int:
@@ -77,6 +118,8 @@ def main(argv=None) -> int:
 
     result = run_smoke()
     print(f"engines bit-exact on {result['cells']} ring{N_CHIPS} cells; "
+          f"in-fabric multicast saves "
+          f"{result['mcast_traversals_saved']} traversals; "
           f"ring engine {result['ring_us'] / 1e3:.0f} ms total "
           f"(compile + run)")
 

@@ -32,10 +32,11 @@ import numpy as np
 
 from repro.core import network as net
 from repro.core import traffic as tr
-from repro.core.fabric import Fabric, QueuePolicy
+from repro.core.fabric import Fabric, MulticastPolicy, QueuePolicy
 from repro.core.link import (PAPER_TIMING, SERIAL_LVDS_TIMING,
                              per_link_timing)
-from repro.core.router import mesh2d_topology, ring_topology
+from repro.core.router import (AddressSpec, MulticastTable, mesh2d_topology,
+                               ring_topology)
 
 EVENTS_PER_CHIP = 48
 SWEEP_N = (2, 4, 8, 16)
@@ -90,6 +91,9 @@ def _metrics(res) -> dict:
     return {
         "delivered": st["delivered"],
         "injected": st["injected"],
+        "offered": st["offered"],
+        "fanout": st["fanout"],
+        "traversals": st["traversals"],
         "thr_mev_s": float(net.fabric_throughput_mev_s(res)),
         "max_link_mev_s": float(per_link.max()),
         "p50_ns": st["p50_ns"],
@@ -105,14 +109,15 @@ def _derived(m: dict) -> str:
             f"thr={m['thr_mev_s']:.1f}MEv/s "
             f"maxlink={m['max_link_mev_s']:.1f}MEv/s "
             f"p50={m['p50_ns']:.0f}ns p99={m['p99_ns']:.0f}ns "
-            f"sw={m['switches']} E={m['energy_nj']:.1f}nJ")
+            f"sw={m['switches']} trav={m['traversals']} "
+            f"E={m['energy_nj']:.1f}nJ")
 
 
 def _cell(name, us, derived, engine, metrics=None, lane="fast",
-          api="simulate_fabric") -> dict:
+          api="simulate_fabric", tags=()) -> dict:
     return {"name": name, "us_per_call": us, "derived": derived,
             "engine": engine, "lane": lane, "api": api,
-            "metrics": metrics or {}}
+            "tags": list(tags), "metrics": metrics or {}}
 
 
 def sweep_rings(engine=DEFAULT_ENGINE, slow=False):
@@ -198,6 +203,39 @@ def sweep_heterogeneous(engine=DEFAULT_ENGINE):
     return rows
 
 
+def sweep_multicast(engine=DEFAULT_ENGINE):
+    """Multicast A/B rows: the same fanout-7 tagged workload on an
+    8-ring, transported by ``source_expand`` (one unicast copy per
+    member at the source) vs ``in_fabric`` (tag routed, replicated at
+    the Steiner-tree branch points).  Both rows report the delivery
+    metrics plus ``traversals`` and ``fanout``; both modes share ONE
+    ring-engine shape bucket (replication dims are bucketed), so the
+    A/B cost is one compile.  The in-fabric row must save traversals —
+    the CI-gated assertion lives in ``fabric_smoke.py``."""
+    topo = ring_topology(8)
+    addr = AddressSpec()
+    mc = MulticastTable(np.ones((1, 8), bool))   # tag 0 = every chip
+    rng = np.random.default_rng(5)
+    n = 8 * EVENTS_PER_CHIP
+    src = rng.integers(0, 8, n).astype(np.int32)
+    t = np.sort(rng.integers(0, 80_000, n)).astype(np.int32)
+    spec = tr.TrafficSpec(
+        src=jax.numpy.asarray(src),
+        t=jax.numpy.asarray(t),
+        dest=jax.numpy.asarray(addr.pack_multicast(np.zeros(n, np.int64))))
+    rows = []
+    for tag, mode in (("source", "source_expand"), ("infabric",
+                                                    "in_fabric")):
+        fab = Fabric(topo, addr=addr, engine=engine,
+                     mcast=MulticastPolicy(mode, mc))
+        (cell,) = fab.sweep([spec], warm=False)
+        m = _metrics(cell.result)
+        rows.append(_cell(f"fabric_{topo.name}_mcast_{tag}",
+                          cell.us_per_call, _derived(m), engine, m,
+                          api="fabric", tags=("mcast",)))
+    return rows
+
+
 def enable_persistent_compile_cache():
     """Opt this process into a persistent XLA compile cache so repeat
     sweep runs (and CI with a cache action) skip the one shared engine
@@ -219,7 +257,8 @@ def run_structured(engine=DEFAULT_ENGINE, slow=False):
     """All sweep cells as dicts (the ``BENCH_fabric.json`` payload)."""
     enable_persistent_compile_cache()
     return (sweep_anchor(engine) + sweep_rings(engine, slow)
-            + sweep_mesh(engine, slow) + sweep_heterogeneous(engine))
+            + sweep_mesh(engine, slow) + sweep_heterogeneous(engine)
+            + sweep_multicast(engine))
 
 
 def run(engine=DEFAULT_ENGINE, slow=False):

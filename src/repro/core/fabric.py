@@ -48,17 +48,20 @@ import numpy as np
 
 from .link import PAPER_TIMING, LinkTiming, link_timing_arrays
 from .network import (DEFAULT_CHUNK_SIZE, ENGINES, FabricResult, _BIG,
-                      _RING_D_FLOOR, _RING_E_FLOOR, _RING_L_FLOOR,
-                      _RING_N_FLOOR, _RING_STREAM_FLOOR, _check_reachable,
-                      _expand, _in_edge_ranks, _overflow_guard, _pad_to,
-                      _pow2ceil, _prefill, _ring_engine, _slot_engine,
-                      _stream_quota)
-from .router import AddressSpec, MulticastTable, RoutingTable, Topology
+                      _RING_D_FLOOR, _RING_E_FLOOR, _RING_K_FLOOR,
+                      _RING_L_FLOOR, _RING_N_FLOOR, _RING_R_FLOOR,
+                      _RING_STREAM_FLOOR, _check_reachable, _expand,
+                      _first_hop_queues, _in_edge_ranks, _overflow_guard,
+                      _pad_to, _pow2ceil, _prefill, _ring_engine,
+                      _routes_with_trees, _slot_engine, _stream_quota,
+                      _tree_stream_quota, _unicast_routes)
+from .router import (AddressSpec, MulticastTable, MulticastTree,
+                     RoutingTable, Topology)
 from .traffic import TrafficSpec
 
 __all__ = ["Fabric", "CompiledFabric", "QueuePolicy", "EngineSpec",
-           "RoutingPolicy", "StaticShortestPath", "PrebuiltRouting",
-           "SweepCell"]
+           "MulticastPolicy", "RoutingPolicy", "StaticShortestPath",
+           "PrebuiltRouting", "SweepCell"]
 
 
 # -----------------------------------------------------------------------
@@ -120,6 +123,44 @@ class EngineSpec:
         return "ring" if self.name == "auto" else self.name
 
 
+@dataclass(frozen=True)
+class MulticastPolicy:
+    """How tagged (multicast) events traverse the fabric.
+
+    ``mode``
+        ``"source_expand"`` (default, the PR 1 semantics): a tag with
+        fanout F becomes F independent unicast copies at the source —
+        bit-exact with the historical behaviour, but F traversals of
+        every shared link.
+
+        ``"in_fabric"``: the event carries its tag through the fabric
+        and is replicated only where the per-``(source, tag)``
+        Steiner-branching tree diverges (``router.MulticastTree``) —
+        one traversal per tree edge, the DYNAPs-style replication the
+        paper's reserved multicast flag anticipates.
+
+    ``table``
+        The ``MulticastTable`` resolving tags to member-chip sets
+        (required only when the traffic actually carries tagged events).
+
+    Both modes deliver the identical destination multiset; ``in_fabric``
+    strictly reduces link traversals whenever member paths share links.
+    """
+    mode: str = "source_expand"
+    table: MulticastTable | None = None
+
+    MODES = ("source_expand", "in_fabric")
+
+    def __post_init__(self):
+        if self.mode not in self.MODES:
+            raise ValueError(f"unknown multicast mode {self.mode!r}; "
+                             f"expected one of {self.MODES}")
+        if self.table is not None and not isinstance(self.table,
+                                                     MulticastTable):
+            raise TypeError(f"table must be a MulticastTable, got "
+                            f"{type(self.table).__name__}")
+
+
 @runtime_checkable
 class RoutingPolicy(Protocol):
     """Anything that turns a topology into next-hop tables."""
@@ -176,15 +217,22 @@ class PrebuiltRouting:
 # -----------------------------------------------------------------------
 
 class _Plan(NamedTuple):
-    """Everything one execution needs: expanded traffic, prefilled
-    queues, dynamic scalars and the static shape bucket they fit."""
+    """Everything one execution needs: routed traffic, prefilled
+    queues, replication tables, dynamic scalars and the static shape
+    bucket they fit.  ``E`` is the EXPECTED delivery count (fanout
+    applied); ``offered`` the pre-fanout event count the ``fanout``
+    metric reports against."""
     E: int
     C: int
     max_steps: int
     q_time: np.ndarray
-    q_dest: np.ndarray
+    q_dest: np.ndarray      # route ids (dest chip | n_chips + tree)
     q_inj: np.ndarray
     sizes: np.ndarray
+    route_out: np.ndarray   # (N, R, K) replication out-queues, -1 = none
+    route_del: np.ndarray   # (N, R) local-deliver bits
+    route_wt: np.ndarray    # (N, R, K) subtree delivery weights (drops)
+    offered: int
     bucket: tuple
 
 
@@ -210,7 +258,7 @@ class Fabric:
                  queues: QueuePolicy | None = None,
                  engine: EngineSpec | str | None = None,
                  addr: AddressSpec | None = None,
-                 mcast: MulticastTable | None = None):
+                 mcast: MulticastTable | MulticastPolicy | None = None):
         self.topo = topo
         if routing is None:
             policy: RoutingPolicy = StaticShortestPath()
@@ -230,7 +278,17 @@ class Fabric:
         self.engine = engine
         self.timing = timing
         self.addr = addr
-        self.mcast = mcast
+        if mcast is None:
+            self.mcast_policy = MulticastPolicy()
+        elif isinstance(mcast, MulticastPolicy):
+            self.mcast_policy = mcast
+        elif isinstance(mcast, MulticastTable):
+            self.mcast_policy = MulticastPolicy(table=mcast)
+        else:
+            raise TypeError(f"mcast must be a MulticastTable or a "
+                            f"MulticastPolicy, got {type(mcast).__name__}")
+        # legacy attribute: the bare table (what _expand consumes)
+        self.mcast = self.mcast_policy.table
 
         L = topo.n_links
         # normalised per-link cost vectors: the engines' dynamic operands
@@ -244,6 +302,12 @@ class Fabric:
             np.asarray(self.queues.initial_tx, np.int32), (L,))
         self._compiled: dict[tuple, "CompiledFabric"] = {}
         self._plan_memo: tuple | None = None  # (spec, max_steps, plan)
+        # in-fabric multicast setup caches: trees are a pure function of
+        # (routing table, multicast table, src, tag) — all fixed per
+        # Fabric — and the unicast replication tables of the routing
+        # table alone
+        self._tree_cache: dict[tuple[int, int], MulticastTree] = {}
+        self._unicast_tables_np: tuple | None = None
 
     # --- declaration niceties ------------------------------------------
 
@@ -335,34 +399,134 @@ class Fabric:
         self._plan_memo = (spec, max_steps, plan)
         return plan
 
+    def _unicast_tables(self):
+        if self._unicast_tables_np is None:
+            self._unicast_tables_np = _unicast_routes(self.topo,
+                                                      self.routing_table)
+        return self._unicast_tables_np
+
+    def _tree(self, src: int, tag: int) -> MulticastTree:
+        tree = self._tree_cache.get((src, tag))
+        if tree is None:
+            tree = MulticastTree.build(self.topo, self.routing_table, src,
+                                       self.mcast_policy.table.expand(tag))
+            self._tree_cache[(src, tag)] = tree
+        return tree
+
+    def _route_in_fabric(self, spec: TrafficSpec):
+        """Setup for ``MulticastPolicy("in_fabric")``: split unicast from
+        tagged events, build (and cache) one replication tree per unique
+        ``(source, tag)`` pair, and emit the per-copy prefill stream —
+        one copy per source out-edge of the tree — in original event
+        order.  Returns everything ``_plan_impl`` needs."""
+        topo, rt = self.topo, self.routing_table
+        N = topo.n_chips
+        src = np.asarray(spec.src, np.int32)
+        t = np.asarray(spec.t, np.int32)
+        dest = np.asarray(spec.dest, np.int32)
+        if self.addr is not None:
+            is_mc = np.asarray(self.addr.is_multicast(dest))
+            chip_or_tag, _ = self.addr.unpack(dest)
+        else:  # plain chip-id destinations: nothing to replicate
+            is_mc = np.zeros(len(dest), bool)
+            chip_or_tag = dest
+        u_src, u_dest = src[~is_mc], chip_or_tag[~is_mc]
+        if np.any(u_src == u_dest):
+            raise ValueError("self-addressed events (src == dest)")
+        _check_reachable(rt, u_src, u_dest)
+        m_src, m_tag = src[is_mc], chip_or_tag[is_mc]
+        if len(m_src) and self.mcast_policy.table is None:
+            raise ValueError("multicast events but no MulticastTable")
+
+        route_ev = chip_or_tag.astype(np.int64)   # unicast route = dest
+        n_copies = np.ones(len(src), np.int64)    # prefill copies/event
+        fanout_ev = np.ones(len(src), np.int64)   # deliveries/event
+        if len(m_src):
+            pairs, inv = np.unique(np.stack([m_src, m_tag], 1), axis=0,
+                                   return_inverse=True)
+            trees = [self._tree(int(s), int(g)) for s, g in pairs]
+            tree_counts = np.bincount(inv, minlength=len(trees))
+            roots = [tr.edges[tr.parent < 0] for tr in trees]
+            root_qs = [(e[:, 1] * 2 + e[:, 2]).astype(np.int64)
+                       for e in roots]
+            route_ev[is_mc] = N + inv
+            n_copies[is_mc] = np.array([len(q) for q in root_qs],
+                                       np.int64)[inv]
+            fanout_ev[is_mc] = np.array([tr.fanout for tr in trees],
+                                        np.int64)[inv]
+        else:
+            trees, tree_counts, root_qs, inv = [], np.zeros(0, np.int64), \
+                [], np.zeros(0, np.int64)
+
+        # per-copy prefill stream, original event order (a tagged event's
+        # source out-edges stay in tree-edge order)
+        ev_idx = np.repeat(np.arange(len(src)), n_copies)
+        is_mc_copy = is_mc[ev_idx]
+        grp = np.empty(len(ev_idx), np.int64)
+        grp[~is_mc_copy] = _first_hop_queues(rt, u_src, u_dest)
+        if len(m_src):
+            grp[is_mc_copy] = np.concatenate([root_qs[j] for j in inv])
+        expected = int(fanout_ev.sum())   # 1/unicast + fanout/tagged
+        total_tx = int(rt.hops[u_src, u_dest].sum()) + int(
+            sum(tr.n_edges * int(c) for tr, c in zip(trees, tree_counts)))
+        return (grp, t[ev_idx], route_ev[ev_idx].astype(np.int32),
+                t[ev_idx], u_src, u_dest, trees, tree_counts,
+                expected, total_tx)
+
     def _plan_impl(self, spec: TrafficSpec, max_steps: int | None) -> _Plan:
         topo, rt = self.topo, self.routing_table
-        src, t, dest = _expand(spec, self.addr, self.mcast)
-        if np.any(src == dest):
-            raise ValueError("self-addressed events (src == dest)")
-        E, L = len(src), topo.n_links
+        L = topo.n_links
+        if self.mcast_policy.mode == "in_fabric":
+            (grp, copy_t, copy_route, copy_inj, u_src, u_dest, trees,
+             tree_counts, E, total_tx) = self._route_in_fabric(spec)
+            route_out, route_del, route_wt = _routes_with_trees(
+                topo, rt, trees)
+        else:
+            src, t, dest = _expand(spec, self.addr, self.mcast)
+            if np.any(src == dest):
+                raise ValueError("self-addressed events (src == dest)")
+            # validate before route walking (_stream_quota follows paths)
+            _check_reachable(rt, src, dest)
+            route_out, route_del, route_wt = self._unicast_tables()
+            grp = _first_hop_queues(rt, src, dest)
+            copy_t = copy_inj = t
+            copy_route = dest
+            u_src, u_dest, trees, tree_counts = src, dest, [], []
+            E = len(src)
+            total_tx = int(rt.hops[src, dest].sum())
         if L == 0 or E == 0:
             raise ValueError("need at least one link and one event")
-        # validate before any route walking (_stream_quota follows paths)
-        _check_reachable(rt, src, dest)
 
         cap = self.queues.capacity
         C = int(cap) if cap is not None else max(E, 1)
-        total_tx = int(rt.hops[src, dest].sum())
         if max_steps is None:
             max_steps = 4 * total_tx + 2 * E + 64 * (rt.diameter + 2)
-        _overflow_guard(int(t.max(initial=0)), total_tx, self._worst_cost)
+        _overflow_guard(int(copy_t.max(initial=0)), total_tx,
+                        self._worst_cost)
+        R, K = route_out.shape[1], route_out.shape[2]
 
         eng = self.engine.resolved
         if eng == "ring":
-            quota = _stream_quota(rt, topo.links, self._in_rank, src, dest,
-                                  L, self._D)
-            qt, qd, qi, sizes = _prefill(topo, rt, src, t, dest, C,
-                                         width="auto")
+            quota = _stream_quota(rt, topo.links, self._in_rank, u_src,
+                                  u_dest, L, self._D)
+            if trees:
+                quota = quota + _tree_stream_quota(trees, tree_counts,
+                                                   self._in_rank, L,
+                                                   self._D)
+            qt, qd, qi, sizes = _prefill(L, grp, copy_t, copy_route,
+                                         copy_inj, C, width="auto")
             # Bucketed shapes (+1 = always-BIG_NS pad column for
             # head/tail gathers); logical E / C / max_burst / max_steps
             # and the timing vectors stay dynamic so cells share
-            # compiles.
+            # compiles.  The replication-table dims (routes, branch
+            # bound) are bucketed too, so ``source_expand`` (R = N,
+            # K = 1) and a moderate ``in_fabric`` tree population land
+            # in the SAME bucket and share one compilation.  The K
+            # floor applies only to multicast-capable fabrics (a table
+            # is declared): a pure-unicast fabric keeps the historical
+            # single append lane per link on its hot path.
+            k_floor = _RING_K_FLOOR if self.mcast_policy.table is not None \
+                else 1
             C0 = qt.shape[2]
             Cf = _pow2ceil(max(int(quota.max(initial=1)),
                                _RING_STREAM_FLOOR)) + 1
@@ -373,15 +537,21 @@ class Fabric:
                       C0,
                       _pow2ceil(max(self._D, _RING_D_FLOOR)),
                       Cf,
+                      _pow2ceil(max(R, _RING_R_FLOOR)),
+                      _pow2ceil(max(K, k_floor)),
                       int(self.engine.chunk_size))
         else:
-            qt, qd, qi, sizes = _prefill(topo, rt, src, t, dest, C)
+            qt, qd, qi, sizes = _prefill(L, grp, copy_t, copy_route,
+                                         copy_inj, C)
             # the slot engines bake max_steps/max_burst into the scan, so
-            # they key the bucket too
+            # they key the bucket too (R/K only shape the table operands)
             bucket = (eng, L, E, C, int(max_steps),
-                      int(self.queues.max_burst))
+                      int(self.queues.max_burst), R, K)
         return _Plan(E=E, C=C, max_steps=int(max_steps), q_time=qt,
-                     q_dest=qd, q_inj=qi, sizes=sizes, bucket=bucket)
+                     q_dest=qd, q_inj=qi, sizes=sizes,
+                     route_out=route_out, route_del=route_del,
+                     route_wt=route_wt, offered=spec.n_events,
+                     bucket=bucket)
 
 
 class CompiledFabric:
@@ -405,16 +575,16 @@ class CompiledFabric:
         tc, tv, ti = fabric.timing_arrays
         eng = bucket[0]
         if eng == "ring":
-            _, Lp, Np, _Ep, C0, Dp, Cf, chunk = bucket
+            _, Lp, Np, _Ep, C0, Dp, Cf, _Rp, _Kp, chunk = bucket
             self._fn = _ring_engine(Lp, _Ep, C0, Dp, Cf, chunk)
             # static gather tables + timing vectors, padded once per
             # bucket (dummy links park forever: empty queues, zero-cost
-            # timing — semantically inert)
+            # timing — semantically inert); the replication tables are
+            # per-plan operands (they carry the spec's multicast trees)
+            # and are padded in _execute
             self._tables = (
                 jnp.asarray(_pad_to(fabric._init_tx, (Lp,), 1)),
                 jnp.asarray(_pad_to(topo.links, (Lp, 2), 0), jnp.int32),
-                jnp.asarray(_pad_to(rt.next_link, (Np, Np), 0), jnp.int32),
-                jnp.asarray(_pad_to(rt.out_side, (Np, Np), 0), jnp.int32),
                 jnp.asarray(_pad_to(fabric._in_rank, (Lp, 2), 0),
                             jnp.int32),
                 jnp.asarray(_pad_to(tc, (Lp,), 0)),
@@ -422,14 +592,12 @@ class CompiledFabric:
                 jnp.asarray(_pad_to(ti, (Lp,), 0)),
             )
         else:
-            _, _L, E, C, max_steps, mb = bucket
+            _, _L, E, C, max_steps, mb, _R, _K = bucket
             self._fn = _slot_engine(L, E, C, max_steps, mb,
                                     eng == "pallas")
             self._tables = (
                 jnp.asarray(fabric._init_tx),
                 jnp.asarray(topo.links, jnp.int32),
-                jnp.asarray(rt.next_link, jnp.int32),
-                jnp.asarray(rt.out_side, jnp.int32),
                 jnp.asarray(tc), jnp.asarray(tv), jnp.asarray(ti),
             )
         self._warmed = False
@@ -482,14 +650,23 @@ class CompiledFabric:
         # a zero-event plan through the one real marshalling path
         # (_execute), so the engine call signature lives in one place
         L = self.fabric.topo.n_links
-        width = self.bucket[4] if self.bucket[0] == "ring" \
-            else self.bucket[3]
+        N = self.fabric.topo.n_chips
+        if self.bucket[0] == "ring":
+            width = self.bucket[4]
+            R, K = N, 1         # _execute pads to the bucket's (Rp, Kp)
+        else:
+            width = self.bucket[3]
+            R, K = self.bucket[6], self.bucket[7]
         qt = np.full((L, 2, width), int(_BIG), np.int32)
         z = np.zeros((L, 2, width), np.int32)
         n_runs = self.n_runs
         res = self._execute(_Plan(
             E=0, C=width, max_steps=0, q_time=qt, q_dest=z, q_inj=z,
-            sizes=np.zeros((L, 2), np.int32), bucket=self.bucket))
+            sizes=np.zeros((L, 2), np.int32),
+            route_out=np.full((N, R, K), -1, np.int32),
+            route_del=np.zeros((N, R), np.int32),
+            route_wt=np.zeros((N, R, K), np.int32),
+            offered=0, bucket=self.bucket))
         jax.block_until_ready(res.drops)
         self.n_runs = n_runs  # the dummy run is not a user run
         self._warmed = True
@@ -500,13 +677,18 @@ class CompiledFabric:
         E, L = plan.E, fab.topo.n_links
         mb = int(fab.queues.max_burst)
         if self.bucket[0] == "ring":
-            _, Lp, _Np, Ep, C0, _Dp, _Cf, _chunk = self.bucket
+            _, Lp, Np, Ep, C0, _Dp, _Cf, Rp, Kp, _chunk = self.bucket
+            init_tx_j, links_j, in_rank_j, tc_j, tv_j, ti_j = self._tables
             out = self._fn(
                 jnp.asarray(_pad_to(plan.q_time, (Lp, 2, C0), int(_BIG))),
                 jnp.asarray(_pad_to(plan.q_dest, (Lp, 2, C0), 0)),
                 jnp.asarray(_pad_to(plan.q_inj, (Lp, 2, C0), 0)),
                 jnp.asarray(_pad_to(plan.sizes, (Lp, 2), 0)),
-                *self._tables,
+                init_tx_j, links_j,
+                jnp.asarray(_pad_to(plan.route_out, (Np, Rp, Kp), -1)),
+                jnp.asarray(_pad_to(plan.route_del, (Np, Rp), 0)),
+                jnp.asarray(_pad_to(plan.route_wt, (Np, Rp, Kp), 0)),
+                in_rank_j, tc_j, tv_j, ti_j,
                 jnp.int32(plan.C), jnp.int32(E), jnp.int32(mb),
                 jnp.int32(plan.max_steps))
             (log_n, log_inj, log_del, log_dest, sent, n_sw, t_link,
@@ -518,10 +700,16 @@ class CompiledFabric:
             t_end = jnp.max(t_link)
         else:
             C = plan.C
+            init_tx_j, links_j, tc_j, tv_j, ti_j = self._tables
             out = self._fn(jnp.asarray(plan.q_time).reshape(2 * L, C),
                            jnp.asarray(plan.q_dest).reshape(2 * L, C),
                            jnp.asarray(plan.q_inj).reshape(2 * L, C),
-                           jnp.asarray(plan.sizes), *self._tables)
+                           jnp.asarray(plan.sizes),
+                           init_tx_j, links_j,
+                           jnp.asarray(plan.route_out),
+                           jnp.asarray(plan.route_del),
+                           jnp.asarray(plan.route_wt),
+                           tc_j, tv_j, ti_j)
             (log_n, log_inj, log_del, log_dest, sent, n_sw, t_link, t_end,
              drops) = out
         self.n_runs += 1
@@ -530,4 +718,5 @@ class CompiledFabric:
             delivered=log_n, injected=E,
             log_inj=log_inj, log_del=log_del, log_dest=log_dest,
             sent=sent, n_switches=n_sw,
-            t_link=t_link, t_end=t_end, drops=drops)
+            t_link=t_link, t_end=t_end, drops=drops,
+            offered=plan.offered)

@@ -10,12 +10,31 @@ and one global step advances **all** links simultaneously via
 Event transport
 ---------------
 Each link endpoint owns a fixed-capacity queue of
-``(release_time, dest_chip, inject_time)`` entries.  Injected traffic
-(``traffic.TrafficSpec``) is routed to its first-hop queue at setup time
-(numpy, sorted by time).  When a link delivers an event to a chip that is
-not its destination, the event is re-queued on that chip's next-hop link
-(``router.RoutingTable`` gather) with release time equal to its delivery
-time — multi-hop latency accumulates exactly.
+``(release_time, route_id, inject_time)`` entries.  Injected traffic
+(``traffic.TrafficSpec``) is routed to its first-hop queue(s) at setup
+time (numpy, sorted by time).  A *route id* is either a destination chip
+(unicast: ``r < n_chips``) or a multicast replication tree
+(``r = n_chips + tree``, in-fabric multicast — see below).  When a link
+delivers an event, the receiving chip consults its *replication table*
+row ``(chip, route)``: a local-deliver bit plus up to ``K`` out-queues
+to copy the event onto.  For unicast routes the table degenerates to the
+classic next-hop gather (one out-link everywhere, deliver exactly at the
+destination); forwarded copies re-queue with release time equal to their
+delivery time — multi-hop latency accumulates exactly.
+
+Multicast events can travel in two modes (``fabric.MulticastPolicy``):
+
+``source_expand`` (default, PR 1 semantics)
+    A tag with fanout F becomes F independent unicast copies at the
+    source — F traversals of every shared link.
+
+``in_fabric``
+    The tagged event carries its route id through the fabric and is
+    replicated only where the per-``(source, tag)`` Steiner-branching
+    tree (``router.MulticastTree``) diverges: one traversal per tree
+    edge.  A replication step can deliver locally AND spawn several
+    child events from one pop; drops are weighted by the subtree's
+    delivery count so ``delivered + drops == expected`` stays exact.
 
 An entry only *enters* the physical FIFO at its release time, so service
 order is release-time order (FIFO among equal times): a forward that has
@@ -112,14 +131,15 @@ import numpy as np
 
 from .link import LinkTiming, PAPER_TIMING
 from .protocol_sim import BIG_NS, LinkState, link_step_batch, reset_link
-from .router import AddressSpec, MulticastTable, RoutingTable, Topology
+from .router import (AddressSpec, MulticastTable, MulticastTree,
+                     RoutingTable, Topology)
 from .traffic import TrafficSpec
 
 __all__ = ["FabricResult", "simulate_fabric", "reset_links",
            "fabric_throughput_mev_s", "fabric_energy_pj",
            "per_link_throughput_mev_s", "delivered_latencies",
-           "latency_stats", "ENGINES", "DEFAULT_CHUNK_SIZE",
-           "RESULT_FIELDS", "assert_results_equal"]
+           "delivery_multiset", "latency_stats", "ENGINES",
+           "DEFAULT_CHUNK_SIZE", "RESULT_FIELDS", "assert_results_equal"]
 
 _BIG = BIG_NS  # one sentinel shared with link_step's park/wake contract
 
@@ -141,14 +161,16 @@ DEFAULT_CHUNK_SIZE = 128
 _RING_L_FLOOR = 32        # links
 _RING_N_FLOOR = 64        # chips (routing-table side)
 _RING_D_FLOOR = 4         # chip degree (forward streams per endpoint)
-_RING_E_FLOOR = 2048      # expanded events (delivery-log length)
+_RING_E_FLOOR = 2048      # expected deliveries (delivery-log length)
 _RING_PREFILL_FLOOR = 2048  # prefill queue width
 _RING_STREAM_FLOOR = 512  # forward-stream width
+_RING_R_FLOOR = 64        # route ids (chips + multicast trees)
+_RING_K_FLOOR = 4         # replication branch bound (out-copies per pop)
 
 
 class FabricResult(NamedTuple):
     delivered: jnp.ndarray   # scalar int32
-    injected: int            # static: expanded events offered
+    injected: int            # static: expected deliveries (post-fanout)
     log_inj: jnp.ndarray     # (E,) valid up to ``delivered``
     log_del: jnp.ndarray
     log_dest: jnp.ndarray
@@ -156,7 +178,23 @@ class FabricResult(NamedTuple):
     n_switches: jnp.ndarray  # (L,) direction switches per link
     t_link: jnp.ndarray      # (L,) final link-local clocks
     t_end: jnp.ndarray       # scalar: max over links
-    drops: jnp.ndarray       # scalar
+    drops: jnp.ndarray       # scalar (subtree-weighted for in-fabric
+    #                          multicast: delivered + drops == injected)
+    offered: int = -1        # static: events offered pre-fanout (-1 =
+    #                          legacy result without the field)
+
+    @property
+    def traversals(self) -> int:
+        """Actual link traversals (sum of per-link transmissions) — the
+        quantity in-fabric multicast replication minimizes."""
+        return int(np.asarray(self.sent).sum())
+
+    @property
+    def fanout(self) -> float:
+        """Expected deliveries per offered event (1.0 = pure unicast)."""
+        if self.offered <= 0:
+            return 1.0
+        return float(self.injected) / float(self.offered)
 
 
 #: FabricResult fields the engines must agree on bit-for-bit (log arrays
@@ -169,6 +207,7 @@ def assert_results_equal(a: FabricResult, b: FabricResult, ctx: str = ""):
     """The engines' bit-exactness contract, shared by tests and the CI
     bench smoke so the checked field list cannot drift apart."""
     assert a.injected == b.injected, ctx
+    assert a.offered == b.offered, ctx
     n = int(a.delivered)
     for f in RESULT_FIELDS:
         x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
@@ -200,22 +239,26 @@ def _check_reachable(rt: RoutingTable, src: np.ndarray, dest: np.ndarray):
                          f"src={src[bad]} dest={dest[bad]}")
 
 
-def _prefill(topo: Topology, rt: RoutingTable, src, t, dest,
+def _prefill(L: int, grp, t, route, inj,
              capacity: int, width: int | str | None = None):
-    """Route every injected event to its first-hop queue (numpy, setup).
+    """Place injected copies into their first-hop queues (numpy, setup).
 
+    ``grp`` is the flat first-hop queue id (``link * 2 + side``) of each
+    copy, ``route`` its route id (destination chip or multicast tree)
+    and ``inj`` the original injection time the delivery log reports.
     ``capacity`` is the logical per-endpoint budget (raises on overflow);
     ``width`` is the allocated column count of the returned arrays —
     ``None`` = ``capacity`` (the reference slot layout), ``"auto"`` = the
     max initial backlog bucketed to a power of two plus one
     always-empty pad column (the ring engine's prefill-only layout).
     """
-    L = topo.n_links
-    first_link = rt.next_link[src, dest]   # validated by simulate_fabric
-    first_side = rt.out_side[src, dest]
-    grp = first_link * 2 + first_side
+    grp = np.asarray(grp, np.int64)
+    t = np.asarray(t, np.int32)
+    route = np.asarray(route, np.int32)
+    inj = np.asarray(inj, np.int32)
     order = np.lexsort((np.arange(len(t)), t, grp))  # stable time order
-    grp_s, t_s, dest_s, inj_s = grp[order], t[order], dest[order], t[order]
+    grp_s, t_s, route_s, inj_s = (grp[order], t[order], route[order],
+                                  inj[order])
 
     sizes = np.bincount(grp, minlength=2 * L).astype(np.int32)
     if sizes.max(initial=0) > capacity:
@@ -236,10 +279,69 @@ def _prefill(topo: Topology, rt: RoutingTable, src, t, dest,
     q_dest = np.zeros((2 * L, width), np.int32)
     q_inj = np.zeros((2 * L, width), np.int32)
     q_time[grp_s, slot] = t_s
-    q_dest[grp_s, slot] = dest_s
+    q_dest[grp_s, slot] = route_s
     q_inj[grp_s, slot] = inj_s
     return (q_time.reshape(L, 2, width), q_dest.reshape(L, 2, width),
             q_inj.reshape(L, 2, width), sizes.reshape(L, 2))
+
+
+def _first_hop_queues(rt: RoutingTable, src, dest) -> np.ndarray:
+    """Flat first-hop queue ids of unicast events (validated upstream)."""
+    return rt.next_link[src, dest] * 2 + rt.out_side[src, dest]
+
+
+# -----------------------------------------------------------------------
+# Replication tables: one (node, route) -> out-copies/deliver contract
+# shared by every engine.  Route id r < N is "unicast to chip r"; route
+# id N + i is multicast tree i (router.MulticastTree).
+# -----------------------------------------------------------------------
+
+def _unicast_routes(topo: Topology, rt: RoutingTable):
+    """(N, N, 1) out-queue / (N, N) deliver / (N, N, 1) drop-weight
+    tables for the unicast route ids.  ``out_q`` holds the flat next-hop
+    queue (``link * 2 + side``) or -1 (deliver here / unreachable);
+    ``deliver`` is the identity (a unicast route delivers exactly at its
+    destination chip); every forward carries drop weight 1."""
+    nl, os_ = rt.next_link, rt.out_side
+    out_q = np.where(nl >= 0, nl * 2 + os_, -1).astype(np.int32)[:, :, None]
+    deliver = np.eye(topo.n_chips, dtype=np.int32)
+    weight = (out_q >= 0).astype(np.int32)
+    return out_q, deliver, weight
+
+
+def _routes_with_trees(topo: Topology, rt: RoutingTable,
+                       trees: list[MulticastTree]):
+    """Stack the unicast tables with one route per multicast tree.
+
+    Returns ``(out_q (N, R, K), deliver (N, R), weight (N, R, K))`` with
+    ``R = n_chips + len(trees)`` and ``K`` the largest replication
+    branch factor.  ``weight[c, r, k]`` is the number of final
+    deliveries in the subtree fed by that out-copy — what a capacity
+    drop at that point forfeits."""
+    N = topo.n_chips
+    uq, ud, uw = _unicast_routes(topo, rt)
+    K = max([1] + [t.max_out_degree for t in trees])
+    R = N + len(trees)
+    out_q = np.full((N, R, K), -1, np.int32)
+    deliver = np.zeros((N, R), np.int32)
+    weight = np.zeros((N, R, K), np.int32)
+    out_q[:, :N, :1] = uq
+    deliver[:, :N] = ud
+    weight[:, :N, :1] = uw
+    for i, t in enumerate(trees):
+        r = N + i
+        deliver[:, r] = t.deliver
+        k_next = np.zeros(N, np.int64)
+        for e in range(t.n_edges):
+            if t.parent[e] < 0:
+                continue   # root edges are prefill, not replication (no
+                #            copy ever arrives at the source on its own
+                #            tree route — the source row stays empty)
+            u, l, s, _v = (int(x) for x in t.edges[e])
+            out_q[u, r, k_next[u]] = l * 2 + s
+            weight[u, r, k_next[u]] = t.subtree[e]
+            k_next[u] += 1
+    return out_q, deliver, weight
 
 
 def _expand(spec: TrafficSpec, addr: AddressSpec | None,
@@ -314,6 +416,28 @@ def _stream_quota(rt: RoutingTable, links: np.ndarray, in_rank: np.ndarray,
     return counts
 
 
+def _tree_stream_quota(trees: list[MulticastTree], tree_counts,
+                       in_rank: np.ndarray, L: int, D: int):
+    """Static per-(queue, in-edge) forward-count bound for tree routes.
+
+    Every non-root tree edge is one in-fabric forward: the copy arrives
+    at ``u`` over the parent edge's link and is appended to the edge's
+    out-queue on the parent link's in-edge stream — once per event
+    riding the tree (``tree_counts``).  Root edges are prefill, not
+    stream appends."""
+    counts = np.zeros((2 * L, D), np.int64)
+    for tree, n in zip(trees, tree_counts):
+        for e in range(tree.n_edges):
+            p = int(tree.parent[e])
+            if p < 0:
+                continue
+            _u, l, s, _v = (int(x) for x in tree.edges[e])
+            lp, sp = int(tree.edges[p][1]), int(tree.edges[p][2])
+            d = int(in_rank[lp, 1 - sp])
+            counts[l * 2 + s, d] += int(n)
+    return counts
+
+
 def _pad_to(a: np.ndarray, shape: tuple, fill) -> np.ndarray:
     """Embed ``a`` in a ``fill``-initialized array of ``shape``."""
     out = np.full(shape, fill, a.dtype)
@@ -369,23 +493,42 @@ def _log_deliveries(log_inj, log_del, log_dest, log_n,
             log_n + jnp.sum(d32))
 
 
-def _forward_slots(forward, fq, lidx, n_ins_flat, cap, n_queues: int):
-    """Insertion slots for this step's forwards.
+def _forward_slots(forward, fq, n_ins_flat, cap, n_queues: int):
+    """Insertion slots for this step's forward copies.
 
-    Simultaneous forwards into one queue are ordered by link index; the
-    returned ``key`` is the queue's insertion index (the reference slot
-    id and pop tie-break key).  Returns ``(fq_g, key, app, n_dropped)``
-    where ``app`` masks forwards that fit under ``cap``.
+    ``forward`` / ``fq`` are flat (M,) candidate arrays in priority
+    order — link-major, replica-minor (M = L for unicast, L·K with
+    in-fabric replication) — so simultaneous appends into one queue are
+    ordered by (link index, replica index).  The returned ``key`` is the
+    queue's insertion index (the reference slot id and pop tie-break
+    key).  Returns ``(fq_g, key, app, dropped)`` where ``app`` masks
+    copies that fit under ``cap`` and ``dropped`` the ones that did not
+    (the caller weighs them — an in-fabric multicast copy carries its
+    whole subtree's deliveries).
     """
+    idx = jnp.arange(forward.shape[0])
     fq_m = jnp.where(forward, fq, n_queues)   # sentinel for non-forwards
     before = (fq_m[None, :] == fq_m[:, None]) \
-        & (lidx[None, :] < lidx[:, None]) & forward[None, :]
+        & (idx[None, :] < idx[:, None]) & forward[None, :]
     offs = jnp.sum(before.astype(jnp.int32), axis=1)
     fq_g = jnp.where(forward, fq, 0)
     key = n_ins_flat[fq_g] + offs             # next free slot
     cap_ok = key < cap
     app = forward & cap_ok
-    return fq_g, key, app, jnp.sum((forward & ~cap_ok).astype(jnp.int32))
+    return fq_g, key, app, forward & ~cap_ok
+
+
+def _replicate(route_out_j, route_wt_j, rx_chip, ev_route, did):
+    """Gather one step's forward copies from the replication tables.
+
+    Returns flat (L·K,) ``(forward mask, queue id, drop weight)`` in the
+    link-major / replica-minor priority order ``_forward_slots``
+    expects.  With unicast-only tables (K = 1) this is exactly the
+    historical single next-hop gather."""
+    out_qk = route_out_j[rx_chip, ev_route]              # (L, K)
+    wt_k = route_wt_j[rx_chip, ev_route]                 # (L, K)
+    fwd = (did[:, None] & (out_qk >= 0)).reshape(-1)
+    return fwd, jnp.maximum(out_qk, 0).reshape(-1), wt_k.reshape(-1)
 
 
 # -----------------------------------------------------------------------
@@ -395,7 +538,7 @@ def _forward_slots(forward, fq, lidx, n_ins_flat, cap, n_queues: int):
 class _SlotState(NamedTuple):
     link: LinkState         # (L,)-leaved LinkSim batch
     q_time: jnp.ndarray     # (Q, C) release times; BIG_NS = empty/consumed
-    q_dest: jnp.ndarray     # (Q, C) destination chip
+    q_dest: jnp.ndarray     # (Q, C) route id (dest chip | multicast tree)
     q_inj: jnp.ndarray      # (Q, C) original injection time
     n_ins: jnp.ndarray      # (L, 2) entries ever inserted (next free slot)
     sent: jnp.ndarray       # (L, 2) transmissions per direction (0: L->R)
@@ -416,7 +559,11 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
     Timing arrives as *dynamic* (L,) cost vectors (``t_cycle_v`` /
     ``t_rev_v`` / ``t_idle_v`` — see ``link.link_timing_arrays``), so one
     compilation serves every timing contract, uniform or per-link
-    heterogeneous.
+    heterogeneous.  Routing arrives as the replication tables
+    ``route_out/route_del/route_wt`` ((N, R, K) / (N, R) / (N, R, K)):
+    one pop can deliver locally AND spawn up to K child copies, which
+    for unicast-only tables (K = 1, identity deliver) reproduces the
+    historical next-hop gather bit-exactly.
     """
     from ..kernels import ops as kops
     from ..kernels import ref as kref
@@ -431,8 +578,9 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
     lidx = jnp.arange(L)
 
     def run(q_time, q_dest, q_inj, sizes, init_tx,
-            links_j, next_link_j, out_side_j,
+            links_j, route_out_j, route_del_j, route_wt_j,
             t_cycle_v, t_rev_v, t_idle_v):
+        K = route_out_j.shape[2]
         link0 = reset_links(init_tx)
         init = _SlotState(
             link=link0,
@@ -502,32 +650,35 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
             send_side = jnp.where(out.tx_l == 1, 0, 1)           # (L,)
             qid = lidx * 2 + send_side                           # (L,)
             pop_slot = amin_q[qid]
-            ev_dest = s.q_dest[qid, pop_slot]
+            ev_route = s.q_dest[qid, pop_slot]
             ev_inj = s.q_inj[qid, pop_slot]
             # consume the popped slot (one-shot slots; no reuse)
             pop_q = jnp.where(did, qid, Q)
             sent = s.sent.at[lidx, send_side].add(did32)
 
-            # --- deliver or forward -------------------------------------
+            # --- deliver and/or replicate -------------------------------
+            # The receiving chip's replication-table row decides both: a
+            # branch node of a multicast tree can deliver locally AND
+            # spawn several child copies from this one pop.
             rx_chip = jnp.where(out.tx_l == 1, links_j[:, 1], links_j[:, 0])
-            deliver = did & (ev_dest == rx_chip)
-            forward = did & ~deliver
+            deliver = did & (route_del_j[rx_chip, ev_route] > 0)
 
             log_inj, log_del, log_dest, log_n = _log_deliveries(
                 s.log_inj, s.log_del, s.log_dest, s.log_n,
-                deliver, ev_inj, link.t, ev_dest, E)
+                deliver, ev_inj, link.t, rx_chip, E)
 
-            nl = next_link_j[rx_chip, ev_dest]
-            nside = out_side_j[rx_chip, ev_dest]
+            fwd_f, fqk_f, wt_f = _replicate(route_out_j, route_wt_j,
+                                            rx_chip, ev_route, did)
             n_ins_f = s.n_ins.reshape(-1)
-            fq_g, slot, app, n_drop = _forward_slots(
-                forward, nl * 2 + nside, lidx, n_ins_f, C, Q)
+            fq_g, slot, app, dropped = _forward_slots(
+                fwd_f, fqk_f, n_ins_f, C, Q)
             fq_s = jnp.where(app, fq_g, Q)         # drop non-appends
             q_time, q_dest, q_inj = update_fn(
                 s.q_time, s.q_dest, s.q_inj, pop_q, pop_slot,
-                fq_s, slot, link.t, ev_dest, ev_inj)
+                fq_s, slot, jnp.repeat(link.t, K),
+                jnp.repeat(ev_route, K), jnp.repeat(ev_inj, K))
             n_ins = n_ins_f.at[fq_s].add(1, mode="drop").reshape(L, 2)
-            drops = s.drops + n_drop
+            drops = s.drops + jnp.sum(jnp.where(dropped, wt_f, 0))
 
             # --- switch counting (matches SimResult.n_switches: mode_l
             # transitions between consecutive steps, reset excluded) -----
@@ -561,7 +712,7 @@ class _RingState(NamedTuple):
     fh: jnp.ndarray           # (L, 2, D) forward-stream heads
     ftl: jnp.ndarray          # (L, 2, D) forward-stream tails
     fq_time: jnp.ndarray      # (L, 2, D, Cf) stream release times
-    fq_dest: jnp.ndarray      # (L, 2, D, Cf) destination chip
+    fq_dest: jnp.ndarray      # (L, 2, D, Cf) route id (dest | mcast tree)
     fq_inj: jnp.ndarray       # (L, 2, D, Cf) original injection time
     fq_key: jnp.ndarray       # (L, 2, D, Cf) reference-slot tie key
     n_ins: jnp.ndarray        # (L, 2) entries ever inserted (capacity/key)
@@ -597,9 +748,10 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
     no_key = jnp.int32(2 ** 31 - 1)  # tie-break sentinel (keys are < cap)
 
     def run(q0_time, q0_dest, q0_inj, sizes, init_tx,
-            links_j, next_link_j, out_side_j, in_rank_j,
+            links_j, route_out_j, route_del_j, route_wt_j, in_rank_j,
             t_cycle_v, t_rev_v, t_idle_v,
             cap, real_e, max_burst, max_steps):
+        K = route_out_j.shape[2]
         link0 = reset_links(init_tx)
         init = _RingState(
             link=link0,
@@ -694,7 +846,7 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
             from_pre = best == 0
             d_best = jnp.maximum(best - 1, 0)
             slot_f = fh_sel[lidx, d_best]
-            ev_dest = jnp.where(
+            ev_route = jnp.where(
                 from_pre,
                 jnp.take_along_axis(
                     q0_dest, s.h0[:, :, None],
@@ -712,35 +864,43 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
                 (did & ~from_pre).astype(jnp.int32))
             sent = s.sent.at[lidx, send_side].add(did32)
 
-            # --- deliver or forward -------------------------------------
+            # --- deliver and/or replicate -------------------------------
+            # The replication-table row of (rx_chip, route) decides both:
+            # a multicast branch node can deliver locally AND spawn up to
+            # K child copies from this one pop.
             rx_side = jnp.where(out.tx_l == 1, 1, 0)
             rx_chip = links_j[lidx, rx_side]
-            deliver = did & (ev_dest == rx_chip)
-            forward = did & ~deliver
+            deliver = did & (route_del_j[rx_chip, ev_route] > 0)
 
             log_inj, log_del, log_dest, log_n = _log_deliveries(
                 s.log_inj, s.log_del, s.log_dest, s.log_n,
-                deliver, ev_inj, link.t, ev_dest, E)
+                deliver, ev_inj, link.t, rx_chip, E)
 
-            # --- forward append: tail of the delivering link's stream ---
-            nl = next_link_j[rx_chip, ev_dest]
-            nside = out_side_j[rx_chip, ev_dest]
+            # --- forward append: tails of the delivering link's streams -
+            # All K copies of one pop land at the SAME chip on K distinct
+            # out-queues, so every active (queue, in-edge) target below
+            # is unique and the multi-scatter is race-free.
+            fwd_f, fqk_f, wt_f = _replicate(route_out_j, route_wt_j,
+                                            rx_chip, ev_route, did)
             n_ins_f = s.n_ins.reshape(-1)
             # ``key`` is the reference slot id: the pop tie-break key
-            fq_g, key, app, n_drop = _forward_slots(
-                forward, nl * 2 + nside, lidx, n_ins_f, cap, Q)
-            d_ins = in_rank_j[lidx, rx_side]                     # (L,)
+            fq_g, key, app, dropped = _forward_slots(
+                fwd_f, fqk_f, n_ins_f, cap, Q)
+            d_ins = jnp.repeat(in_rank_j[lidx, rx_side], K)      # (L·K,)
             stream = fq_g * D + d_ins          # flat stream id
             stream_s = jnp.where(app, stream, Q * D)
-            tail = s.ftl.reshape(-1)[stream]                     # (L,)
+            tail = s.ftl.reshape(-1)[stream]                     # (L·K,)
             fq_time = s.fq_time.reshape(Q * D, Cf) \
-                .at[stream_s, tail].set(link.t, mode="drop") \
+                .at[stream_s, tail].set(jnp.repeat(link.t, K),
+                                        mode="drop") \
                 .reshape(L, 2, D, Cf)
             fq_dest = s.fq_dest.reshape(Q * D, Cf) \
-                .at[stream_s, tail].set(ev_dest, mode="drop") \
+                .at[stream_s, tail].set(jnp.repeat(ev_route, K),
+                                        mode="drop") \
                 .reshape(L, 2, D, Cf)
             fq_inj = s.fq_inj.reshape(Q * D, Cf) \
-                .at[stream_s, tail].set(ev_inj, mode="drop") \
+                .at[stream_s, tail].set(jnp.repeat(ev_inj, K),
+                                        mode="drop") \
                 .reshape(L, 2, D, Cf)
             fq_key = s.fq_key.reshape(Q * D, Cf) \
                 .at[stream_s, tail].set(key, mode="drop") \
@@ -749,7 +909,7 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
                 1, mode="drop").reshape(L, 2, D)
             n_ins = n_ins_f.at[jnp.where(app, fq_g, Q)].add(
                 1, mode="drop").reshape(L, 2)
-            drops = s.drops + n_drop
+            drops = s.drops + jnp.sum(jnp.where(dropped, wt_f, 0))
 
             # --- switch counting (reset step excluded) ------------------
             n_sw = s.n_sw + jnp.where(
@@ -806,7 +966,7 @@ def simulate_fabric(topo: Topology,
                     *,
                     routing: RoutingTable | None = None,
                     addr: AddressSpec | None = None,
-                    mcast: MulticastTable | None = None,
+                    mcast=None,
                     timing: LinkTiming = PAPER_TIMING,
                     max_burst: int = 0,
                     initial_tx: int | np.ndarray = 1,
@@ -828,9 +988,13 @@ def simulate_fabric(topo: Topology,
     Args:
       topo:        fabric topology (``router.line/ring/mesh2d_topology``).
       spec:        injected traffic.  With ``addr`` given, ``spec.dest``
-                   holds packed 26-bit AER words (multicast tags expanded
+                   holds packed 26-bit AER words (multicast tags resolved
                    through ``mcast``); otherwise plain destination chip ids.
       routing:     prebuilt table (rebuilt from ``topo`` when omitted).
+      mcast:       a ``MulticastTable`` (tags expanded at the source, the
+                   historical default) or a ``fabric.MulticastPolicy``
+                   selecting ``source_expand`` vs ``in_fabric``
+                   replication.
       timing:      timing contract — one scalar ``LinkTiming`` shared by
                    all links, or a structure-of-arrays ``LinkTiming`` of
                    shape (L,) for per-link heterogeneity (see
@@ -887,6 +1051,16 @@ def fabric_energy_pj(res: FabricResult,
     return jnp.sum(jnp.sum(res.sent, axis=1) * jnp.asarray(e))
 
 
+def delivery_multiset(res: FabricResult) -> list:
+    """Sorted (injection time, destination chip) pairs of all deliveries
+    — the mode-independent multicast contract: ``source_expand`` and
+    ``in_fabric`` transports of one workload must produce the identical
+    multiset (asserted in tests and gated in the CI bench smoke)."""
+    n = int(res.delivered)
+    return sorted(zip(np.asarray(res.log_inj)[:n].tolist(),
+                      np.asarray(res.log_dest)[:n].tolist()))
+
+
 def delivered_latencies(res: FabricResult) -> np.ndarray:
     """End-to-end ns latencies of the delivered events (numpy)."""
     n = int(res.delivered)
@@ -896,14 +1070,25 @@ def delivered_latencies(res: FabricResult) -> np.ndarray:
 
 
 def latency_stats(res: FabricResult) -> dict:
-    """p50/p90/p99/max end-to-end latency plus delivery counters."""
+    """p50/p90/p99/max end-to-end latency plus delivery counters.
+
+    ``traversals`` counts actual link transmissions (the per-link
+    weighted hop count energy is billed on) and ``fanout`` the expected
+    deliveries per offered event — together they quantify what in-fabric
+    multicast replication saves over source expansion."""
     lat = delivered_latencies(res)
-    if lat.size == 0:
-        return {"delivered": 0, "injected": res.injected,
-                "p50_ns": 0.0, "p90_ns": 0.0, "p99_ns": 0.0, "max_ns": 0}
-    return {
+    base = {
         "delivered": int(res.delivered),
         "injected": res.injected,
+        "offered": res.offered,
+        "fanout": res.fanout,
+        "traversals": res.traversals,
+    }
+    if lat.size == 0:
+        return {**base, "delivered": 0,
+                "p50_ns": 0.0, "p90_ns": 0.0, "p99_ns": 0.0, "max_ns": 0}
+    return {
+        **base,
         "p50_ns": float(np.percentile(lat, 50)),
         "p90_ns": float(np.percentile(lat, 90)),
         "p99_ns": float(np.percentile(lat, 99)),

@@ -29,7 +29,7 @@ import numpy as np
 
 __all__ = [
     "AddressSpec", "Topology", "RoutingTable", "MulticastTable",
-    "line_topology", "ring_topology", "mesh2d_topology",
+    "MulticastTree", "line_topology", "ring_topology", "mesh2d_topology",
 ]
 
 
@@ -232,16 +232,111 @@ class MulticastTable:
         """Vector expansion of a tagged event stream into unicast triples.
 
         Returns ``(src', t', dest')`` where each input event is replicated
-        once per member chip of its tag, source excluded.
+        once per member chip of its tag, source excluded.  Fully
+        vectorized: one boolean gather + ``np.nonzero`` (row-major, so
+        copies appear in event order and, within an event, in ascending
+        member-chip order — exactly the order ``expand`` yields).
         """
-        src = np.asarray(src, np.int32)
-        t = np.asarray(t, np.int32)
-        tag = np.asarray(tag, np.int32)
-        out_s, out_t, out_d = [], [], []
-        for s_, t_, g_ in zip(src, t, tag):
-            for d in self.expand(int(g_), int(s_)):
-                out_s.append(s_)
-                out_t.append(t_)
-                out_d.append(d)
-        return (np.asarray(out_s, np.int32), np.asarray(out_t, np.int32),
-                np.asarray(out_d, np.int32))
+        src = np.asarray(src, np.int32).reshape(-1)
+        t = np.asarray(t, np.int32).reshape(-1)
+        tag = np.asarray(tag, np.int32).reshape(-1)
+        mask = self.members[tag].copy()          # (E, n_chips)
+        if len(src):
+            mask[np.arange(len(src)), src] = False   # source never receives
+        ev, chips = np.nonzero(mask)
+        return (src[ev].astype(np.int32), t[ev].astype(np.int32),
+                chips.astype(np.int32))
+
+
+# -----------------------------------------------------------------------
+# In-fabric multicast replication trees
+# -----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MulticastTree:
+    """Replication tree of one ``(source, tag)`` pair.
+
+    The Steiner-branching of the per-destination BFS shortest paths:
+    member paths are grafted onto the growing tree at their last shared
+    node (members processed in ascending chip order, so the tree is
+    deterministic), which guarantees every tree node has exactly ONE
+    in-edge — an event replicated along the tree reaches each member
+    exactly once.  A tagged event traverses each tree edge once instead
+    of once per downstream member, which is where in-fabric replication
+    saves link occupancy and energy over source expansion.
+
+    ``edges[e] = (u, link, out_side, v)`` — the copy leaves chip ``u`` on
+    ``link`` (from the link's ``out_side`` endpoint) toward ``v``.
+    ``parent[e]`` is the edge index delivering into ``u`` (-1 for edges
+    leaving the source — those become queue prefill, not in-fabric
+    forwards).  ``deliver[c]`` marks member chips (source excluded);
+    ``subtree[e]`` counts the final deliveries at or below ``v`` — the
+    number of deliveries lost if the copy on edge ``e`` is dropped, the
+    weight the engines' drop accounting uses to keep
+    ``delivered + drops == expected`` exact.
+    """
+    src: int
+    edges: np.ndarray    # (n_edges, 4) int32 [u, link, out_side, v]
+    parent: np.ndarray   # (n_edges,) int32, -1 = source out-edge
+    deliver: np.ndarray  # (n_chips,) bool
+    subtree: np.ndarray  # (n_edges,) int32
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.edges)
+
+    @property
+    def fanout(self) -> int:
+        """Final deliveries per injected event on this tree."""
+        return int(self.deliver.sum())
+
+    @property
+    def max_out_degree(self) -> int:
+        """Largest *in-fabric* replication factor: the max out-degree
+        over non-source nodes (the engines' K lane bound).  Source
+        out-edges are prefill — one injected copy per root edge, never
+        a mid-flight replication — so they do not widen K."""
+        non_root = self.edges[self.parent >= 0]
+        if not len(non_root):
+            return 0
+        return int(np.bincount(non_root[:, 0]).max())
+
+    @staticmethod
+    def build(topo: Topology, rt: RoutingTable, src: int,
+              members: np.ndarray) -> "MulticastTree":
+        """Graft each member's shortest path onto the tree at the last
+        on-path node already covered (ascending member order)."""
+        deliver = np.zeros(topo.n_chips, bool)
+        in_edge: dict[int, int] = {int(src): -1}
+        edges: list[tuple[int, int, int, int]] = []
+        parent: list[int] = []
+        for d in sorted(int(m) for m in np.asarray(members).reshape(-1)):
+            if d == src:
+                continue
+            if rt.hops[src, d] < 0:
+                raise ValueError(f"multicast member chip {d} unreachable "
+                                 f"from source {src}")
+            deliver[d] = True
+            path = []
+            c = int(src)
+            while c != d:
+                l = int(rt.next_link[c, d])
+                s = int(rt.out_side[c, d])
+                v = int(topo.links[l][1 - s])
+                path.append((c, l, s, v))
+                c = v
+            nodes = [int(src)] + [st[3] for st in path]
+            graft = max(i for i, nd in enumerate(nodes) if nd in in_edge)
+            for (u, l, s, v) in path[graft:]:
+                parent.append(in_edge[u])
+                in_edge[v] = len(edges)
+                edges.append((u, l, s, v))
+        edges_a = np.asarray(edges, np.int32).reshape(-1, 4)
+        parent_a = np.asarray(parent, np.int32).reshape(-1)
+        subtree = deliver[edges_a[:, 3]].astype(np.int32) \
+            if len(edges) else np.zeros(0, np.int32)
+        for e in range(len(edges) - 1, -1, -1):
+            if parent_a[e] >= 0:
+                subtree[parent_a[e]] += subtree[e]
+        return MulticastTree(src=int(src), edges=edges_a, parent=parent_a,
+                             deliver=deliver, subtree=subtree)

@@ -12,8 +12,11 @@ Each micro-transaction needs four reductions over every queue —
          among simultaneous arrivals),
 
 — followed by a sparse update: consume at most one popped slot per link
-(set it back to ``BIG_NS``) and append at most one forwarded event per
-link at its queue's insertion slot.  Off-kernel this is several separate
+(set it back to ``BIG_NS``) and append the step's forwarded copies at
+their queues' insertion slots.  In-fabric multicast replication spawns
+up to ``K`` child copies per pop, so the append operands are (L·K,)
+lanes while the pop operands stay (L,) — the one-hot scatter handles
+the two widths independently.  Off-kernel this is several separate
 O(Q·C) passes per step; here each becomes ONE pass.
 
 TPU adaptation notes (mirroring ``aer_encode.py``):
@@ -118,23 +121,25 @@ def _update_kernel(qt_ref, qd_ref, qi_ref, popq_ref, pops_ref,
     base = pl.program_id(0) * rows_per_block
     row_ids = base + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
 
-    popq = popq_ref[...]                 # (Lk,) queue id or Q sentinel
-    pops = pops_ref[...]                 # (Lk,) popped slot
-    appq = appq_ref[...]                 # (Lk,) queue id or Q sentinel
-    apps = apps_ref[...]                 # (Lk,) append slot
-    nlk = popq.shape[0]
+    popq = popq_ref[...]                 # (Lp,) queue id or Q sentinel
+    pops = pops_ref[...]                 # (Lp,) popped slot
+    appq = appq_ref[...]                 # (La,) queue id or Q sentinel
+    apps = apps_ref[...]                 # (La,) append slot
+    n_pop = popq.shape[0]
+    n_app = appq.shape[0]                # = Lp·K under in-fabric mcast
 
-    iota_c = jax.lax.broadcasted_iota(jnp.int32, (nlk, ncols), 1)
+    iota_pop = jax.lax.broadcasted_iota(jnp.int32, (n_pop, ncols), 1)
+    iota_app = jax.lax.broadcasted_iota(jnp.int32, (n_app, ncols), 1)
     dn = (((1,), (0,)), ((), ()))
 
     # scatter-as-matmul, int32 end to end (exact for times < 2**31)
-    a_pop = (row_ids == popq[None, :]).astype(jnp.int32)     # (rows, Lk)
-    s_pop = (pops[:, None] == iota_c).astype(jnp.int32)      # (Lk, C)
+    a_pop = (row_ids == popq[None, :]).astype(jnp.int32)     # (rows, Lp)
+    s_pop = (pops[:, None] == iota_pop).astype(jnp.int32)    # (Lp, C)
     p_pop = jax.lax.dot_general(a_pop, s_pop, dn,
                                 preferred_element_type=jnp.int32)
 
-    a_app = (row_ids == appq[None, :]).astype(jnp.int32)
-    s_app = (apps[:, None] == iota_c).astype(jnp.int32)
+    a_app = (row_ids == appq[None, :]).astype(jnp.int32)     # (rows, La)
+    s_app = (apps[:, None] == iota_app).astype(jnp.int32)    # (La, C)
     p_app = jax.lax.dot_general(a_app, s_app, dn,
                                 preferred_element_type=jnp.int32)
 
@@ -155,11 +160,14 @@ def fabric_queue_update_pallas(q_time, q_dest, q_inj,
                                interpret: bool = True):
     """Fused pop-consume + forward-append over the (Q, C) slot arrays.
 
-    ``pop_q`` / ``app_q`` hold a queue id per link, or ``Q`` (any id
-    >= Q) to skip that link; popped slots revert to ``BIG_NS``, appended
-    slots receive ``(app_t, app_dest, app_inj)``.  Pop and append slots
-    must be disjoint (the engine appends at ``n_ins``, beyond any
-    released slot).  Returns the three updated arrays.
+    ``pop_q`` / ``app_q`` hold a queue id per lane, or ``Q`` (any id
+    >= Q) to skip that lane; popped slots revert to ``BIG_NS``, appended
+    slots receive ``(app_t, app_dest, app_inj)``.  The append lanes may
+    outnumber the pop lanes (L·K vs L when in-fabric multicast
+    replicates one pop into up to K child copies); every (queue, slot)
+    append target must be unique, and pop and append slots must be
+    disjoint (the engine appends at ``n_ins``, beyond any released
+    slot).  Returns the three updated arrays.
     """
     nq, ncols = q_time.shape
     assert nq % rows_per_block == 0, (nq, rows_per_block)
@@ -167,14 +175,16 @@ def fabric_queue_update_pallas(q_time, q_dest, q_inj,
 
     kernel = functools.partial(_update_kernel, rows_per_block=rows_per_block)
     tile = pl.BlockSpec((rows_per_block, ncols), lambda i: (i, 0))
-    whole = pl.BlockSpec((pop_q.shape[0],), lambda i: (0,))
+    whole_pop = pl.BlockSpec((pop_q.shape[0],), lambda i: (0,))
+    whole_app = pl.BlockSpec((app_q.shape[0],), lambda i: (0,))
     out_shape = [jax.ShapeDtypeStruct((nq, ncols), jnp.int32)
                  for _ in range(3)]
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[tile, tile, tile,
-                  whole, whole, whole, whole, whole, whole, whole],
+                  whole_pop, whole_pop,
+                  whole_app, whole_app, whole_app, whole_app, whole_app],
         out_specs=[tile, tile, tile],
         out_shape=out_shape,
         interpret=interpret,

@@ -158,8 +158,10 @@ def fabric_queue_update(q_time, q_dest, q_inj, pop_q, pop_slot,
                         rows_per_block: int = 8):
     """Fused pop-consume + forward-append scatter on the slot arrays.
 
-    Queue ids >= Q skip the link (no pop / dropped forward).  Returns the
-    updated ``(q_time, q_dest, q_inj)``.
+    Queue ids >= Q skip the lane (no pop / dropped forward); the append
+    lanes may outnumber the pop lanes (in-fabric multicast replication:
+    L·K candidate copies for L pops).  Returns the updated
+    ``(q_time, q_dest, q_inj)``.
     """
     if use_ref:
         return ref.fabric_queue_update(q_time, q_dest, q_inj, pop_q,

@@ -106,11 +106,14 @@ def fabric_queue_scan(q_time: jnp.ndarray, t_q: jnp.ndarray):
 
 def fabric_queue_update(q_time, q_dest, q_inj, pop_q, pop_slot,
                         app_q, app_slot, app_t, app_dest, app_inj):
-    """Consume popped slots (back to BIG_NS) and append forwarded events.
+    """Consume popped slots (back to BIG_NS) and append forwarded copies.
 
-    ``pop_q`` / ``app_q``: (Lk,) queue row per link, or any id >= Q to
-    skip that link (dropped indices).  Pop and append slots are disjoint
-    by construction (appends land at ``n_ins``, beyond released slots).
+    ``pop_q``: (Lp,) queue row per link; ``app_q``: (La,) queue row per
+    append lane — La may exceed Lp (L·K lanes when in-fabric multicast
+    replicates one pop into up to K child copies).  Any id >= Q skips
+    the lane (dropped indices).  Append targets are unique (queue, slot)
+    pairs, and pop and append slots are disjoint by construction
+    (appends land at ``n_ins``, beyond released slots).
     """
     q_time = q_time.at[pop_q, pop_slot].set(_QBIG, mode="drop")
     q_time = q_time.at[app_q, app_slot].set(app_t, mode="drop")

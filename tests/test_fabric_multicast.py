@@ -1,0 +1,324 @@
+"""In-fabric multicast replication (``MulticastPolicy("in_fabric")``).
+
+The tentpole contract, asserted here from three angles:
+
+* **Cross-engine matrix** — ``in_fabric`` mode is bit-exact across the
+  ``ring`` / ``reference`` / ``pallas`` engines (destinations, drops,
+  ordering — the full ``FabricResult`` field list), including the
+  weighted-drop path where one dropped copy forfeits a whole subtree.
+* **Mode equivalence** — ``in_fabric`` and ``source_expand`` deliver the
+  IDENTICAL destination multiset (per injected event), while
+  ``in_fabric`` uses strictly fewer link traversals whenever member
+  paths share links (the fanout-8 shared-path ring of the acceptance
+  criteria).
+* **Replication-tree invariants** — the Steiner-branching of the BFS
+  shortest paths is a tree (one in-edge per node), covers every member,
+  and its subtree weights sum consistently.
+
+Plus the satellite: the vectorized ``MulticastTable.expand_stream`` must
+reproduce the historical per-event Python loop bit-for-bit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import network as net
+from repro.core import traffic as tr
+from repro.core.fabric import (EngineSpec, Fabric, MulticastPolicy,
+                               QueuePolicy)
+from repro.core.router import (AddressSpec, MulticastTable, MulticastTree,
+                               RoutingTable, line_topology, mesh2d_topology,
+                               ring_topology)
+
+assert_bit_exact = net.assert_results_equal
+
+ADDR = AddressSpec()
+
+
+def _mcast_spec(src, t, tag):
+    """Tagged-event spec from plain arrays."""
+    return tr.TrafficSpec(
+        src=jnp.asarray(np.asarray(src, np.int32)),
+        t=jnp.asarray(np.asarray(t, np.int32)),
+        dest=jnp.asarray(ADDR.pack_multicast(np.asarray(tag, np.int64))))
+
+
+def _fanout8_ring():
+    """The acceptance-criteria fabric: a 16-ring whose tag spans chips
+    4..11 (fanout 8 from chip 0) — five clockwise members share the
+    0-1-2-3 path and three counter-clockwise ones share 0-15-14-13."""
+    topo = ring_topology(16)
+    members = np.zeros((1, 16), bool)
+    members[0, 4:12] = True
+    return topo, MulticastTable(members)
+
+
+_delivery_multiset = net.delivery_multiset
+
+
+def _run(topo, spec, mode, mc, engine="ring", **kw):
+    return Fabric(topo, addr=ADDR, engine=engine,
+                  mcast=MulticastPolicy(mode, mc), **kw).run(spec)
+
+
+class TestCrossEngineMatrix:
+    """in_fabric mode must be indistinguishable across all three
+    engines: same deliveries, same ordering, same drops."""
+
+    def test_fanout8_ring_all_engines(self):
+        topo, mc = _fanout8_ring()
+        spec = _mcast_spec(np.zeros(12), np.arange(12) * 400, np.zeros(12))
+        rs = {e: _run(topo, spec, "in_fabric", mc, engine=e)
+              for e in sorted(net.ENGINES)}
+        ref = rs["reference"]
+        assert int(ref.delivered) == ref.injected == 12 * 8
+        for e in sorted(net.ENGINES):
+            assert_bit_exact(ref, rs[e], f"in_fabric/{e}")
+
+    def test_mixed_unicast_multicast_mesh(self):
+        """Unicast and tagged events interleaved on a mesh (replication
+        branch factor up to 4), all engines."""
+        topo = mesh2d_topology(3, 3)
+        members = np.zeros((2, 9), bool)
+        members[0, [0, 2, 6, 8]] = True   # the corners
+        members[1, [1, 3, 5, 7]] = True   # the edge midpoints
+        mc = MulticastTable(members)
+        rng = np.random.default_rng(0)
+        n_u, n_m = 20, 12
+        u_src = rng.integers(0, 9, n_u)
+        u_dst = (u_src + rng.integers(1, 9, n_u)) % 9
+        m_src = rng.integers(0, 9, n_m)
+        src = np.concatenate([u_src, m_src]).astype(np.int32)
+        t = np.sort(rng.integers(0, 20_000, n_u + n_m)).astype(np.int32)
+        dest = np.concatenate([
+            ADDR.pack(u_dst.astype(np.int64)),
+            ADDR.pack_multicast(rng.integers(0, 2, n_m).astype(np.int64)),
+        ]).astype(np.int32)
+        spec = tr.TrafficSpec(src=jnp.asarray(src), t=jnp.asarray(t),
+                              dest=jnp.asarray(dest))
+        rs = {e: _run(topo, spec, "in_fabric", mc, engine=e)
+              for e in sorted(net.ENGINES)}
+        ref = rs["reference"]
+        assert int(ref.delivered) == ref.injected
+        for e in sorted(net.ENGINES):
+            assert_bit_exact(ref, rs[e], f"mesh-mixed/{e}")
+
+    @pytest.mark.parametrize("capacity", [16, 21])
+    def test_weighted_drops_identical(self, capacity):
+        """A dropped copy forfeits its whole subtree: the weighted drop
+        count keeps delivered + drops == expected on every engine, and
+        the engines agree bit-for-bit mid-overflow."""
+        # line 0-1-2-3, sources 0 AND 1 multicast to {2, 3}: the (1, 2)
+        # endpoint holds source-1 prefill plus source-0 forwards and
+        # overflows a one-source-sized capacity.
+        topo = line_topology(4)
+        mc = MulticastTable(np.array([[False, False, True, True]]))
+        n = 16
+        spec = _mcast_spec(np.concatenate([np.zeros(n), np.ones(n)]),
+                           np.zeros(2 * n), np.zeros(2 * n))
+        rs = {e: _run(topo, spec, "in_fabric", mc, engine=e,
+                      queues=QueuePolicy(capacity=capacity))
+              for e in sorted(net.ENGINES)}
+        ref = rs["reference"]
+        assert int(ref.drops) > 0
+        assert int(ref.delivered) + int(ref.drops) == ref.injected
+        for e in sorted(net.ENGINES):
+            assert_bit_exact(ref, rs[e], f"drops-cap{capacity}/{e}")
+
+    @pytest.mark.parametrize("max_steps", [7, 19, 33])
+    def test_binding_max_steps_exact(self, max_steps):
+        """A binding step bound interacts with mid-flight replication:
+        the chunked ring engine must still execute EXACTLY max_steps
+        micro-transactions and match the reference scan."""
+        topo, mc = _fanout8_ring()
+        spec = _mcast_spec(np.zeros(12), np.zeros(12), np.zeros(12))
+        a = Fabric(topo, addr=ADDR, engine="reference",
+                   mcast=MulticastPolicy("in_fabric", mc)).run(
+                       spec, max_steps=max_steps)
+        assert int(a.delivered) < a.injected  # the bound really binds
+        for chunk in (16, 256):
+            b = Fabric(topo, addr=ADDR,
+                       engine=EngineSpec("ring", chunk_size=chunk),
+                       mcast=MulticastPolicy("in_fabric", mc)).run(
+                           spec, max_steps=max_steps)
+            assert_bit_exact(a, b, f"ms{max_steps}/chunk{chunk}")
+
+
+class TestModeEquivalence:
+    """in_fabric and source_expand are the same *logical* multicast:
+    identical destination multiset, strictly cheaper transport."""
+
+    def test_fanout8_shared_path_ring(self):
+        """The acceptance criterion: same (injection, destination)
+        delivery multiset, strictly fewer link traversals on the
+        fanout-8 shared-path ring — and exactly one traversal per tree
+        edge (12 events x 13 edges) vs one per copy-hop (12 x 48)."""
+        topo, mc = _fanout8_ring()
+        spec = _mcast_spec(np.zeros(12), np.arange(12) * 400, np.zeros(12))
+        infab = _run(topo, spec, "in_fabric", mc)
+        source = _run(topo, spec, "source_expand", mc)
+        assert infab.injected == source.injected == 12 * 8
+        assert int(infab.delivered) == int(source.delivered)
+        assert _delivery_multiset(infab) == _delivery_multiset(source)
+        assert infab.traversals < source.traversals
+        rt = RoutingTable.build(topo)
+        tree = MulticastTree.build(topo, rt, 0, np.arange(4, 12))
+        assert infab.traversals == 12 * tree.n_edges
+        assert source.traversals == 12 * int(rt.hops[0, 4:12].sum())
+        assert infab.fanout == source.fanout == 8.0
+
+    def test_multisource_multitag_equivalence(self):
+        """Every (source, tag) pair gets its own tree; the delivery
+        multiset still matches source expansion exactly."""
+        topo = ring_topology(8)
+        members = np.zeros((2, 8), bool)
+        members[0, [1, 2, 3]] = True
+        members[1, [2, 5, 6, 7]] = True
+        mc = MulticastTable(members)
+        rng = np.random.default_rng(3)
+        n = 24
+        spec = _mcast_spec(rng.integers(0, 8, n),
+                           np.sort(rng.integers(0, 30_000, n)),
+                           rng.integers(0, 2, n))
+        infab = _run(topo, spec, "in_fabric", mc)
+        source = _run(topo, spec, "source_expand", mc)
+        assert int(infab.delivered) == infab.injected == source.injected
+        assert _delivery_multiset(infab) == _delivery_multiset(source)
+        assert infab.traversals <= source.traversals
+
+    def test_source_expand_is_default_and_unchanged(self):
+        """MulticastPolicy() defaults to source_expand and a bare
+        MulticastTable still means source expansion — bit-exact with
+        the explicit policy spelling."""
+        topo, mc = _fanout8_ring()
+        spec = _mcast_spec(np.zeros(6), np.arange(6) * 500, np.zeros(6))
+        legacy = Fabric(topo, addr=ADDR, mcast=mc).run(spec)
+        explicit = _run(topo, spec, "source_expand", mc)
+        assert_bit_exact(legacy, explicit, "legacy-table-vs-policy")
+        assert MulticastPolicy().mode == "source_expand"
+
+    def test_wrapper_accepts_policy(self):
+        """simulate_fabric passes a MulticastPolicy straight through."""
+        topo, mc = _fanout8_ring()
+        spec = _mcast_spec(np.zeros(4), np.arange(4) * 500, np.zeros(4))
+        a = net.simulate_fabric(topo, spec, addr=ADDR,
+                                mcast=MulticastPolicy("in_fabric", mc))
+        b = _run(topo, spec, "in_fabric", mc)
+        assert_bit_exact(a, b, "wrapper-policy")
+
+    def test_modes_share_ring_shape_bucket(self):
+        """The two modes of one workload land in the SAME ring-engine
+        shape bucket (replication dims are bucketed), so an A/B sweep
+        pays for one compilation."""
+        topo, mc = _fanout8_ring()
+        spec = _mcast_spec(np.zeros(6), np.arange(6) * 500, np.zeros(6))
+        f_se = Fabric(topo, addr=ADDR,
+                      mcast=MulticastPolicy("source_expand", mc))
+        f_if = Fabric(topo, addr=ADDR,
+                      mcast=MulticastPolicy("in_fabric", mc))
+        assert f_se._plan(spec, None).bucket == f_if._plan(spec, None).bucket
+
+
+class TestReplicationTree:
+    def test_tree_covers_members_once(self):
+        """One in-edge per node (tree), every member delivered, subtree
+        weights consistent with the member count."""
+        topo = mesh2d_topology(4, 4)
+        rt = RoutingTable.build(topo)
+        members = np.array([0, 3, 10, 12, 15])
+        tree = MulticastTree.build(topo, rt, 5, members)
+        v = tree.edges[:, 3]
+        assert len(np.unique(v)) == len(v)          # one in-edge per node
+        assert tree.fanout == len(members)          # src not a member here
+        assert bool(tree.deliver[members].all())
+        # root subtree weights account for every delivery exactly once
+        roots = tree.parent < 0
+        assert int(tree.subtree[roots].sum()) == tree.fanout
+
+    def test_tree_cheaper_than_paths(self):
+        topo = ring_topology(16)
+        rt = RoutingTable.build(topo)
+        tree = MulticastTree.build(topo, rt, 0, np.arange(4, 12))
+        assert tree.n_edges < int(rt.hops[0, 4:12].sum())
+
+    def test_source_member_excluded(self):
+        topo = ring_topology(4)
+        rt = RoutingTable.build(topo)
+        tree = MulticastTree.build(topo, rt, 0, np.array([0, 1, 2]))
+        assert not tree.deliver[0]
+        assert tree.fanout == 2
+
+    def test_unreachable_member_raises(self):
+        from repro.core.router import Topology
+        topo = Topology(4, np.array([(0, 1), (2, 3)], np.int32))
+        rt = RoutingTable.build(topo)
+        with pytest.raises(ValueError, match="unreachable"):
+            MulticastTree.build(topo, rt, 0, np.array([2]))
+
+    def test_unknown_mode_rejected(self):
+        with pytest.raises(ValueError, match="multicast mode"):
+            MulticastPolicy("broadcast")
+
+    def test_missing_table_rejected(self):
+        topo, _mc = _fanout8_ring()
+        spec = _mcast_spec(np.zeros(2), np.zeros(2), np.zeros(2))
+        with pytest.raises(ValueError, match="MulticastTable"):
+            _run(topo, spec, "in_fabric", None)
+
+
+class TestExpandStreamVectorized:
+    """Satellite: the vectorized expand_stream must reproduce the
+    historical per-event loop bit-for-bit (event order, then ascending
+    member chips, source excluded)."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_matches_reference_loop(self, seed):
+        rng = np.random.default_rng(seed)
+        n_tags, n_chips, n_ev = 5, 12, 200
+        mc = MulticastTable(rng.random((n_tags, n_chips)) < 0.4)
+        src = rng.integers(0, n_chips, n_ev).astype(np.int32)
+        t = np.sort(rng.integers(0, 50_000, n_ev)).astype(np.int32)
+        tag = rng.integers(0, n_tags, n_ev).astype(np.int32)
+        want_s, want_t, want_d = [], [], []
+        for s_, t_, g_ in zip(src, t, tag):
+            for d in mc.expand(int(g_), int(s_)):
+                want_s.append(s_)
+                want_t.append(t_)
+                want_d.append(d)
+        got = mc.expand_stream(src, t, tag)
+        np.testing.assert_array_equal(got[0], np.asarray(want_s, np.int32))
+        np.testing.assert_array_equal(got[1], np.asarray(want_t, np.int32))
+        np.testing.assert_array_equal(got[2], np.asarray(want_d, np.int32))
+
+    def test_empty_stream(self):
+        mc = MulticastTable(np.ones((1, 4), bool))
+        s, t, d = mc.expand_stream(np.zeros(0), np.zeros(0), np.zeros(0))
+        assert s.size == t.size == d.size == 0
+
+
+class TestMetrics:
+    def test_fanout_and_traversals_reported(self):
+        topo, mc = _fanout8_ring()
+        spec = _mcast_spec(np.zeros(6), np.arange(6) * 500, np.zeros(6))
+        res = _run(topo, spec, "in_fabric", mc)
+        st = net.latency_stats(res)
+        assert st["offered"] == 6
+        assert st["fanout"] == 8.0
+        assert st["traversals"] == res.traversals > 0
+        assert st["injected"] == 48
+
+    def test_energy_counts_actual_traversals(self):
+        """fabric_energy_pj bills per-link traversals: in_fabric pays
+        for tree edges, source_expand for every copy-hop."""
+        from repro.core.link import PAPER_TIMING
+        topo, mc = _fanout8_ring()
+        spec = _mcast_spec(np.zeros(6), np.arange(6) * 500, np.zeros(6))
+        infab = _run(topo, spec, "in_fabric", mc)
+        source = _run(topo, spec, "source_expand", mc)
+        e_if = float(net.fabric_energy_pj(infab, PAPER_TIMING))
+        e_se = float(net.fabric_energy_pj(source, PAPER_TIMING))
+        assert e_if == pytest.approx(11.0 * infab.traversals)
+        assert e_se == pytest.approx(11.0 * source.traversals)
+        assert e_if < e_se

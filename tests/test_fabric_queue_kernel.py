@@ -112,6 +112,40 @@ class TestQueueUpdateKernel:
                                    [7, BIG - 1, BIG - 2]]
             assert qd[1, 2] == 3 and qi[1, 2] == BIG - 7
 
+    @pytest.mark.parametrize("k", [2, 4])
+    def test_multi_append_lanes(self, k):
+        """In-fabric multicast replication: L·K append lanes against L
+        pop lanes (masked multi-column scatter), unique (queue, slot)
+        targets, oracle-exact."""
+        rng = np.random.default_rng(k)
+        nq, ncols, nlk = 8, 48, 4
+        q_time, _ = _random_queues(rng, nq, ncols)
+        q_dest = jnp.asarray(rng.integers(0, 9, (nq, ncols)), jnp.int32)
+        q_inj = jnp.asarray(rng.integers(0, 50_000, (nq, ncols)),
+                            jnp.int32)
+        pop_q = np.array([r if r % 3 else nq
+                          for r in rng.permutation(nq)[:nlk]], np.int32)
+        pop_slot = rng.integers(0, ncols // 2, (nlk,)).astype(np.int32)
+        # La = nlk * k lanes; unique (queue, slot) targets in the upper
+        # half of the slot range, some sentinel-dropped
+        la = nlk * k
+        app_q = rng.integers(0, nq, (la,)).astype(np.int32)
+        app_q[rng.random(la) < 0.3] = nq          # dropped lanes
+        app_slot = np.empty(la, np.int32)
+        for q in range(nq + 1):                    # unique slots per queue
+            idx = np.flatnonzero(app_q == q)
+            app_slot[idx] = ncols // 2 + np.arange(len(idx))
+        app_t = rng.integers(0, 50_000, (la,)).astype(np.int32)
+        app_d = rng.integers(0, 9, (la,)).astype(np.int32)
+        app_i = rng.integers(0, 50_000, (la,)).astype(np.int32)
+        args = [q_time, q_dest, q_inj] + [jnp.asarray(x) for x in
+                (pop_q, pop_slot, app_q, app_slot, app_t, app_d, app_i)]
+        want = ref.fabric_queue_update(*args)
+        got = ops.fabric_queue_update(*args)
+        for w, g, name in zip(want, got, ("q_time", "q_dest", "q_inj")):
+            np.testing.assert_array_equal(np.asarray(w), np.asarray(g),
+                                          err_msg=name)
+
     def test_direct_kernel_entry_points(self):
         """The raw pallas wrappers (bypassing ops) agree too."""
         rng = np.random.default_rng(3)
