@@ -7,7 +7,10 @@ path, plus one Poisson cell on the ``pallas`` fused-kernel engine
 field-for-field.  A multicast cell gates the in-fabric replication
 claim: ``in_fabric`` must deliver the identical destination multiset as
 ``source_expand`` while using STRICTLY fewer link traversals on a
-shared-path ring (and stay bit-exact across engines itself).  Then it
+shared-path ring (and stay bit-exact across engines itself).  An
+adaptive cell gates the congestion-control claim: epoch-based adaptive
+routing must strictly reduce drops AND p99 latency vs static routing on
+the benchmark hot-spot ring with zero recompiles across epochs.  Then it
 times the ring engine end-to-end (compile + run, the number a user
 feels) and fails if it regressed more than ``MAX_REGRESSION``x against
 the checked-in baseline in ``baselines/fabric_smoke.json``.
@@ -27,12 +30,14 @@ import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
 import numpy as np
 
 from repro.core import network as net
 from repro.core import traffic as tr
+from repro.core.adaptive import AdaptiveRouting
 from repro.core.fabric import Fabric, MulticastPolicy, QueuePolicy
 from repro.core.router import AddressSpec, MulticastTable, ring_topology
 
@@ -68,11 +73,13 @@ def run_smoke() -> dict:
                                       max_burst=mb)
             _assert_bit_exact(ref, pal, f"ring{N_CHIPS}/{name}/pallas")
     saved = run_multicast_gate()
+    adaptive = run_adaptive_gate()
     return {"ring_us": t_ring * 1e6,
             "cells": len(tr.PATTERNS),
             "n_chips": N_CHIPS,
             "events_per_chip": EVENTS_PER_CHIP,
-            "mcast_traversals_saved": saved}
+            "mcast_traversals_saved": saved,
+            **adaptive}
 
 
 def run_multicast_gate() -> int:
@@ -110,6 +117,47 @@ def run_multicast_gate() -> int:
     return source.traversals - infab.traversals
 
 
+def run_adaptive_gate() -> dict:
+    """Gate the congestion-control claim: on the benchmark hot-spot ring
+    workload (``fabric_sweep.ADAPTIVE_RING``), epoch-based adaptive
+    routing must STRICTLY reduce both drops and p99 latency vs static
+    shortest-path routing of the identical workload (identical epoch
+    partition, so the only difference is the tables), while keeping the
+    delivered + drops == injected accounting exact and running all
+    epochs through ONE engine compilation."""
+    from benchmarks.fabric_sweep import ADAPTIVE_RING as cfg
+    topo = ring_topology(cfg["n_chips"])
+    spec = tr.hot_spot(jax.random.PRNGKey(cfg["key"]), cfg["n_chips"],
+                       cfg["epc"])
+    queues = QueuePolicy(capacity=cfg["capacity"])
+    static = Fabric(topo, queues=queues)
+    res_s = static.run_epochs(spec, epochs=cfg["epochs"])
+    adaptive = Fabric(topo, routing=AdaptiveRouting(
+        policy=cfg["policy"], epochs=cfg["epochs"], alpha=cfg["alpha"],
+        ema=cfg["ema"]), queues=queues)
+    res_a = adaptive.run(spec)
+
+    for tag, res in (("static", res_s), ("adaptive", res_a)):
+        if int(res.delivered) + int(res.drops) != res.injected:
+            raise RuntimeError(f"{tag}: delivered + drops != injected")
+    report = adaptive.last_report
+    if report.recompiled:
+        raise RuntimeError(
+            f"adaptive epochs recompiled: buckets={report.buckets}, "
+            f"per-epoch cache sizes "
+            f"{[r.cache_size for r in report.records]} (expected one "
+            f"bucket and a flat jit cache after epoch 0)")
+    p99_s = net.latency_stats(res_s)["p99_ns"]
+    p99_a = net.latency_stats(res_a)["p99_ns"]
+    if not (int(res_a.drops) < int(res_s.drops) and p99_a < p99_s):
+        raise RuntimeError(
+            f"adaptive routing did not strictly beat static on the "
+            f"hot-spot ring: drops {int(res_a.drops)} vs "
+            f"{int(res_s.drops)}, p99 {p99_a:.0f} vs {p99_s:.0f} ns")
+    return {"adaptive_drops_saved": int(res_s.drops) - int(res_a.drops),
+            "adaptive_p99_saved_ns": float(p99_s - p99_a)}
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--update-baseline", action="store_true",
@@ -120,6 +168,9 @@ def main(argv=None) -> int:
     print(f"engines bit-exact on {result['cells']} ring{N_CHIPS} cells; "
           f"in-fabric multicast saves "
           f"{result['mcast_traversals_saved']} traversals; "
+          f"adaptive routing saves {result['adaptive_drops_saved']} "
+          f"drops / {result['adaptive_p99_saved_ns']:.0f} ns p99 on the "
+          f"hot-spot ring; "
           f"ring engine {result['ring_us'] / 1e3:.0f} ms total "
           f"(compile + run)")
 

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core import network as net
 from repro.core import traffic as tr
+from repro.core.adaptive import AdaptiveRouting
 from repro.core.fabric import Fabric, MulticastPolicy, QueuePolicy
 from repro.core.link import (PAPER_TIMING, SERIAL_LVDS_TIMING,
                              per_link_timing)
@@ -199,7 +200,7 @@ def sweep_heterogeneous(engine=DEFAULT_ENGINE):
         m = _metrics(cell.result)
         rows.append(_cell(f"fabric_{topo.name}_poisson_{tag}",
                           cell.us_per_call, _derived(m), engine, m,
-                          api="fabric"))
+                          api="fabric", tags=("hetero",)))
     return rows
 
 
@@ -236,6 +237,79 @@ def sweep_multicast(engine=DEFAULT_ENGINE):
     return rows
 
 
+# Adaptive hot-spot A/B configuration (shared with the CI smoke gate in
+# fabric_smoke.py: the gate asserts the ring row's strict win, the sweep
+# reports both rows' metrics).  Static rows run ``run_epochs`` with the
+# SAME epoch partition, so the only difference is the routing tables.
+ADAPTIVE_RING = dict(n_chips=16, key=3, epc=EVENTS_PER_CHIP, capacity=48,
+                     policy="min_backlog", epochs=4, alpha=4.0, ema=0.5)
+ADAPTIVE_MESH = dict(rows=4, cols=4, key=5, epc=EVENTS_PER_CHIP,
+                     hot_chip=5, capacity=40,
+                     policy="min_backlog", epochs=4, alpha=0.5, ema=0.3)
+
+
+def _hotspot_ab_rows(topo, spec, cfg, engine):
+    """One static / adaptive A/B pair on a hot-spot workload.
+
+    Both rows run the identical engine shape bucket (routing tables are
+    dynamic operands), so it is pre-warmed ONCE before either row is
+    timed — otherwise the first row would absorb the compile time and
+    skew the A/B comparison the rows exist for."""
+    from repro.core.adaptive import partition_epochs, shared_max_steps
+    routing = AdaptiveRouting(policy=cfg["policy"], epochs=cfg["epochs"],
+                              alpha=cfg["alpha"], ema=cfg["ema"])
+    queues = QueuePolicy(capacity=cfg["capacity"])
+    # warm with the first epoch slice UNDER THE SHARED STEP BOUND both
+    # rows run with (the slot engines key their bucket on it): ONE
+    # bucket for every epoch of both rows, the slice prefill fits the
+    # per-epoch capacity, and static/adaptive see the identical bound
+    parts = partition_epochs(spec, cfg["epochs"])
+    warm_fab = Fabric(topo, queues=queues, engine=engine)
+    ms = shared_max_steps(warm_fab, parts,
+                          detour_factor=1.0 + cfg["alpha"])
+    warm_fab.compile(parts[0], max_steps=ms)
+    rows = []
+    for tag, fab, runner in (
+            ("static", Fabric(topo, queues=queues, engine=engine),
+             lambda f: f.run_epochs(spec, epochs=cfg["epochs"],
+                                    max_steps=ms)),
+            ("adaptive", Fabric(topo, routing=routing, queues=queues,
+                                engine=engine),
+             lambda f: f.run(spec, max_steps=ms))):
+        t0 = time.perf_counter()
+        res = runner(fab)           # merge syncs: results land in numpy
+        us = (time.perf_counter() - t0) * 1e6
+        m = _metrics(res)
+        m.update(epochs=cfg["epochs"], policy=cfg["policy"],
+                 alpha=cfg["alpha"], ema=cfg["ema"],
+                 capacity=cfg["capacity"])
+        rows.append(_cell(f"fabric_{topo.name}_hotspot_{tag}", us,
+                          _derived(m), engine, m, api="fabric",
+                          tags=("adaptive",)))
+    return rows
+
+
+def sweep_adaptive(engine=DEFAULT_ENGINE):
+    """Congestion-control A/B rows: identical hot-spot workloads routed
+    statically (BFS shortest path, epoch-partitioned for a fair drain /
+    capacity comparison) vs adaptively (per-epoch telemetry re-weighting
+    the tables — ``core/adaptive.py``).  The adaptive ring row must
+    strictly reduce drops AND p99 latency; that assertion is the CI gate
+    in ``fabric_smoke.run_adaptive_gate``."""
+    r = ADAPTIVE_RING
+    ring_spec = tr.hot_spot(jax.random.PRNGKey(r["key"]), r["n_chips"],
+                            r["epc"])
+    rows = _hotspot_ab_rows(ring_topology(r["n_chips"]), ring_spec, r,
+                            engine)
+    m = ADAPTIVE_MESH
+    mesh_spec = tr.hot_spot(jax.random.PRNGKey(m["key"]),
+                            m["rows"] * m["cols"], m["epc"],
+                            hot_chip=m["hot_chip"])
+    rows += _hotspot_ab_rows(mesh2d_topology(m["rows"], m["cols"]),
+                             mesh_spec, m, engine)
+    return rows
+
+
 def enable_persistent_compile_cache():
     """Opt this process into a persistent XLA compile cache so repeat
     sweep runs (and CI with a cache action) skip the one shared engine
@@ -253,18 +327,48 @@ def enable_persistent_compile_cache():
         pass
 
 
-def run_structured(engine=DEFAULT_ENGINE, slow=False):
-    """All sweep cells as dicts (the ``BENCH_fabric.json`` payload)."""
+#: Every cell tag a sweep family can emit — the single source of truth
+#: the CLIs validate ``--tags`` against.
+KNOWN_TAGS = frozenset({"hetero", "mcast", "adaptive"})
+
+
+def run_structured(engine=DEFAULT_ENGINE, slow=False, tags=None):
+    """All sweep cells as dicts (the ``BENCH_fabric.json`` payload).
+
+    ``tags`` — optional iterable of tag names (``KNOWN_TAGS``): run only
+    the sweep families whose cells carry one of them, and keep only the
+    matching cells.  ``None`` runs everything (untagged families
+    included).  Unknown tags raise — a typo must not produce an empty
+    benchmark run that looks successful.
+    """
     enable_persistent_compile_cache()
-    return (sweep_anchor(engine) + sweep_rings(engine, slow)
-            + sweep_mesh(engine, slow) + sweep_heterogeneous(engine)
-            + sweep_multicast(engine))
+    wanted = frozenset(tags) if tags else None
+    families = (
+        (sweep_anchor, (engine,), frozenset()),
+        (sweep_rings, (engine, slow), frozenset()),
+        (sweep_mesh, (engine, slow), frozenset()),
+        (sweep_heterogeneous, (engine,), frozenset({"hetero"})),
+        (sweep_multicast, (engine,), frozenset({"mcast"})),
+        (sweep_adaptive, (engine,), frozenset({"adaptive"})),
+    )
+    if wanted is not None and wanted - KNOWN_TAGS:
+        raise ValueError(f"unknown sweep tags "
+                         f"{sorted(wanted - KNOWN_TAGS)}; known tags: "
+                         f"{sorted(KNOWN_TAGS)}")
+    cells = []
+    for fn, args, family_tags in families:
+        if wanted is not None and not (wanted & family_tags):
+            continue  # genuine selection: unselected families never run
+        cells.extend(fn(*args))
+    if wanted is not None:
+        cells = [c for c in cells if wanted & set(c["tags"])]
+    return cells
 
 
-def run(engine=DEFAULT_ENGINE, slow=False):
+def run(engine=DEFAULT_ENGINE, slow=False, tags=None):
     """Legacy row tuples for the CSV convention of ``benchmarks/run.py``."""
     return [(c["name"], c["us_per_call"], c["derived"])
-            for c in run_structured(engine, slow)]
+            for c in run_structured(engine, slow, tags)]
 
 
 if __name__ == "__main__":
@@ -274,7 +378,12 @@ if __name__ == "__main__":
                    choices=sorted(net.ENGINES))
     p.add_argument("--slow", action="store_true",
                    help="add the N in {32, 64} ring and 8x8 mesh rows")
+    p.add_argument("--tags", default=None,
+                   help="comma-separated cell-tag filter (e.g. "
+                        "'adaptive,mcast'): run only those families")
     args = p.parse_args()
+    sel = args.tags.split(",") if args.tags else None
     print("name,us_per_call,derived")
-    for name, us, derived in run(engine=args.engine, slow=args.slow):
+    for name, us, derived in run(engine=args.engine, slow=args.slow,
+                                 tags=sel):
         print(f"{name},{us:.1f},{derived}")

@@ -18,8 +18,18 @@ def main(argv=None) -> None:
     p.add_argument("--json", metavar="PATH", default=None,
                    help="write the fabric sweep cells as JSON (e.g. "
                         "BENCH_fabric.json)")
-    p.add_argument("--only", choices=("fabric",), default=None,
-                   help="run only the named bench family")
+    p.add_argument("--only", default=None, metavar="NAME",
+                   help="run only the fabric bench family; values other "
+                        "than 'fabric' additionally keep only cells "
+                        "whose name contains NAME as a substring "
+                        "(e.g. --only hotspot).  All fabric sweep "
+                        "families still execute — use --tags to skip "
+                        "whole families.  Errors if nothing matches.")
+    p.add_argument("--tags", default=None, metavar="TAG[,TAG...]",
+                   help="run only the fabric sweep families whose cells "
+                        "carry one of these tags (e.g. 'adaptive' or "
+                        "'mcast,hetero'); implies skipping the "
+                        "paper/roofline families")
     p.add_argument("--engine", default=fabric_sweep.DEFAULT_ENGINE,
                    choices=sorted(ENGINES),
                    help="fabric event-transport engine")
@@ -27,15 +37,28 @@ def main(argv=None) -> None:
                    help="include the slow-lane fabric rows (N=32/64, 8x8)")
     args = p.parse_args(argv)
 
+    fabric_only = args.only is not None or args.tags is not None
     rows = []
-    if args.only is None:
+    if not fabric_only:
         for fn in paper_benches.ALL:
             rows.extend(fn())
-    fabric_cells = fabric_sweep.run_structured(engine=args.engine,
-                                               slow=args.slow)
+    tag_sel = args.tags.split(",") if args.tags else None
+    try:
+        fabric_cells = fabric_sweep.run_structured(engine=args.engine,
+                                                   slow=args.slow,
+                                                   tags=tag_sel)
+    except ValueError as e:   # unknown --tags: fail loudly, not empty
+        p.error(str(e))
+    if args.only not in (None, "fabric"):
+        all_names = [c["name"] for c in fabric_cells]
+        fabric_cells = [c for c in fabric_cells if args.only in c["name"]]
+        if not fabric_cells:
+            # a typo must not silently produce an empty CSV/JSON
+            p.error(f"--only {args.only!r} matched no fabric cells; "
+                    f"available: {', '.join(all_names)}")
     rows.extend((c["name"], c["us_per_call"], c["derived"])
                 for c in fabric_cells)
-    if args.only is None:
+    if not fabric_only:
         rows.extend(roofline.run())
 
     print("name,us_per_call,derived")

@@ -1,0 +1,115 @@
+"""Adaptive routing on a hot-spot ring: telemetry finds the saturated
+link, epochs spread the load.
+
+A 16-chip ring where every chip fires mostly at chip 0 (the convergecast
+/ hot-spot regime of ``traffic.hot_spot``).  Static BFS routing sends
+each source down its shorter arc, so the two links next to the hot chip
+saturate — the per-link telemetry shows link 0 at ~100% bus occupancy
+while the antipodal link idles — and with bounded queues the hot arcs
+drop events while parallel capacity sits unused.
+
+The congestion control plane (``core/adaptive.py``) fixes what routing
+*can* fix: it splits the run into epochs, reads each epoch's per-link
+``LinkLoad`` (occupancy / backlog / drops — ``core/telemetry.py``), and
+re-weights the next epoch's shortest-path tables with the congestion
+signal.  Marginal sources shift to the lighter arc, the two hot queues
+even out, and both drops and p99 latency strictly improve vs static
+routing of the identical workload under the identical epoch partition
+(the CI-gated claim of ``benchmarks/fabric_smoke.run_adaptive_gate``).
+
+    PYTHONPATH=src python examples/adaptive_hotspot.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.core import network as net
+from repro.core import traffic as tr
+from repro.core.adaptive import AdaptiveRouting
+from repro.core.fabric import Fabric, QueuePolicy
+from repro.core.telemetry import link_load
+from repro.core.router import ring_topology
+
+N_CHIPS = 16
+EVENTS_PER_CHIP = 48
+MEAN_GAP_NS = 100.0      # saturating arrival rate at the hot links
+CAPACITY = 48            # per-endpoint budget: the hot arcs will drop
+EPOCHS = 4
+POLICY = AdaptiveRouting(policy="min_backlog", epochs=EPOCHS, alpha=4.0,
+                         ema=0.5)
+
+
+def stats_line(tag, res):
+    st = net.latency_stats(res)
+    return (f"  {tag:<9} delivered={st['delivered']}/{st['injected']} "
+            f"drops={int(res.drops)} p50={st['p50_ns']:5.0f}ns "
+            f"p99={st['p99_ns']:6.0f}ns max={st['max_ns']:6d}ns")
+
+
+def main():
+    topo = ring_topology(N_CHIPS)
+    spec = tr.hot_spot(jax.random.PRNGKey(3), N_CHIPS, EVENTS_PER_CHIP,
+                       mean_gap_ns=MEAN_GAP_NS)
+
+    # --- 1. diagnose: telemetry of one lossless static run --------------
+    print(f"=== static routing, lossless queues: per-link telemetry "
+          f"(ring{N_CHIPS}, hot chip 0) ===")
+    diag = Fabric(topo).run(spec)
+    ll = link_load(diag)
+    print(ll.table(topo.links))
+    occ = np.asarray(ll.occupancy)
+    print(f"  -> link 0 carries {100 * occ.max():.0f}% bus occupancy; "
+          f"the antipodal link sits at {100 * occ.min():.0f}% — the "
+          f"shared-arc bottleneck, not link bandwidth, is the limit")
+    assert occ.max() > 0.9, "expected a saturated hot link"
+    assert occ.min() < 0.3, "expected idle capacity on the far arc"
+
+    # --- 2. act: epoch-adaptive routing vs static, bounded queues -------
+    queues = QueuePolicy(capacity=CAPACITY)
+    static = Fabric(topo, queues=queues)
+    res_s = static.run_epochs(spec, epochs=EPOCHS)
+    adaptive = Fabric(topo, routing=POLICY, queues=queues)
+    res_a = adaptive.run(spec)
+
+    print(f"\n=== bounded queues (capacity {CAPACITY}/endpoint), "
+          f"{EPOCHS} epochs: static vs adaptive ===")
+    print(stats_line("static", res_s))
+    print(stats_line("adaptive", res_a))
+
+    report = adaptive.last_report
+    print(f"\n=== epoch by epoch: telemetry-reweighted tables vs the "
+          f"same epochs on static tables ===")
+    print(f"  {'epoch':<7}{'s.drops':>8}{'a.drops':>8}{'s.p99':>8}"
+          f"{'a.p99':>8}  note")
+    for e, (rs, ra) in enumerate(zip(static.last_report.records,
+                                     report.records)):
+        note = ("identical tables (epoch 0 IS static)" if e == 0 else
+                "tables re-weighted by epoch %d telemetry" % (e - 1))
+        print(f"  {e:<7}{int(rs.load.drops.sum()):>8}"
+              f"{int(ra.load.drops.sum()):>8}"
+              f"{net.latency_stats(rs.result)['p99_ns']:>8.0f}"
+              f"{net.latency_stats(ra.result)['p99_ns']:>8.0f}  {note}")
+
+    # --- CI-gated claims -------------------------------------------------
+    # identical workload + epoch partition: only the tables differ, and
+    # adaptive must strictly win on both drops and tail latency
+    assert int(res_a.delivered) + int(res_a.drops) == res_a.injected
+    assert int(res_a.drops) < int(res_s.drops)
+    p99_s = net.latency_stats(res_s)["p99_ns"]
+    p99_a = net.latency_stats(res_a)["p99_ns"]
+    assert p99_a < p99_s
+    # one engine compilation served every epoch (tables are dynamic)
+    assert not report.recompiled
+    print(f"\nadaptive saved {int(res_s.drops) - int(res_a.drops)} drops "
+          f"and {p99_s - p99_a:.0f} ns of p99 with "
+          f"{len(report.buckets)} engine compilation(s) for "
+          f"{report.n_epochs} epochs")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

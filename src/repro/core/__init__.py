@@ -1,7 +1,8 @@
 """Core: the paper's contribution — bi-directional AE transceiver protocol,
 its timing/energy contract, the N-chip fabric built from it (routing,
-traffic, network), and the TPU-scale adaptations (event-sparse collectives
-+ half-duplex link scheduling)."""
+traffic, network), the congestion control plane on top (telemetry +
+epoch-based adaptive routing), and the TPU-scale adaptations
+(event-sparse collectives + half-duplex link scheduling)."""
 
-from . import (events, fabric, fifo, link, network,  # noqa: F401
-               protocol_sim, router, traffic, transceiver)
+from . import (adaptive, events, fabric, fifo, link, network,  # noqa: F401
+               protocol_sim, router, telemetry, traffic, transceiver)

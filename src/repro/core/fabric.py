@@ -4,9 +4,12 @@
 redesigned front door.  A :class:`Fabric` is a *declaration* — topology
 plus four orthogonal policies:
 
-* ``routing`` — a :class:`RoutingPolicy` (``StaticShortestPath`` wraps the
-  BFS table builder and exposes a ``table_override`` hook, the landing pad
-  for adaptive/congestion-aware routing), or a prebuilt ``RoutingTable``.
+* ``routing`` — a :class:`RoutingPolicy`: ``StaticShortestPath`` (BFS
+  tables + a ``table_override`` hook), a prebuilt ``RoutingTable``, or
+  :class:`repro.core.adaptive.AdaptiveRouting` — the congestion control
+  plane, which splits each ``run`` into epochs and re-weights the tables
+  from per-link telemetry between them (``Fabric.run_epochs`` runs the
+  same partition under static tables as the A/B baseline).
 * ``timing``  — one scalar ``LinkTiming`` shared by every link, or a
   structure-of-arrays ``LinkTiming`` of shape (L,) mixing link classes
   (fast parallel on-board buses next to slow bit-serial LVDS inter-board
@@ -57,6 +60,7 @@ from .network import (DEFAULT_CHUNK_SIZE, ENGINES, FabricResult, _BIG,
                       _tree_stream_quota, _unicast_routes)
 from .router import (AddressSpec, MulticastTable, MulticastTree,
                      RoutingTable, Topology)
+from .telemetry import Telemetry
 from .traffic import TrafficSpec
 
 __all__ = ["Fabric", "CompiledFabric", "QueuePolicy", "EngineSpec",
@@ -302,6 +306,8 @@ class Fabric:
             np.asarray(self.queues.initial_tx, np.int32), (L,))
         self._compiled: dict[tuple, "CompiledFabric"] = {}
         self._plan_memo: tuple | None = None  # (spec, max_steps, plan)
+        #: per-epoch breakdown of the last epoched run (AdaptiveReport)
+        self.last_report = None
         # in-fabric multicast setup caches: trees are a pure function of
         # (routing table, multicast table, src, tag) — all fixed per
         # Fabric — and the unicast replication tables of the routing
@@ -348,9 +354,53 @@ class Fabric:
 
     def run(self, spec: TrafficSpec, *,
             max_steps: int | None = None) -> FabricResult:
-        """Simulate one traffic spec (compiling its bucket on first use)."""
+        """Simulate one traffic spec (compiling its bucket on first use).
+
+        Under an :class:`~repro.core.adaptive.AdaptiveRouting` policy the
+        run is automatically split into the policy's epochs, telemetry
+        re-weights the tables between them, and the merged result comes
+        back (per-epoch breakdown on ``self.last_report``)."""
+        from .adaptive import AdaptiveRouting, run_epoched
+        if isinstance(self.routing_policy, AdaptiveRouting):
+            return run_epoched(self, spec,
+                               epochs=self.routing_policy.epochs,
+                               max_steps=max_steps,
+                               policy=self.routing_policy)
+        return self._run_single(spec, max_steps=max_steps)
+
+    def run_epochs(self, spec: TrafficSpec, *, epochs: int,
+                   max_steps: int | None = None) -> FabricResult:
+        """Epoch-partitioned run under this fabric's own routing policy.
+
+        With a static policy every epoch reuses the same tables — the
+        fair A/B baseline for adaptive runs (identical partitioning,
+        per-epoch drain and merge; only the tables differ).  With an
+        adaptive policy, ``epochs`` overrides the policy's own epoch
+        count.  Per-epoch breakdown lands on ``self.last_report``."""
+        from .adaptive import AdaptiveRouting, run_epoched
+        pol = (self.routing_policy
+               if isinstance(self.routing_policy, AdaptiveRouting)
+               else None)
+        return run_epoched(self, spec, epochs=epochs,
+                           max_steps=max_steps, policy=pol)
+
+    def _run_single(self, spec: TrafficSpec, *,
+                    max_steps: int | None = None) -> FabricResult:
+        """One un-epoched simulation (the epoch loop's inner call)."""
         plan = self._plan(spec, max_steps)
         return self._get_compiled(plan.bucket)._execute(plan)
+
+    def _with_routing(self, table: RoutingTable) -> "Fabric":
+        """Clone with prebuilt routing tables — the adaptive control
+        plane's per-epoch rebuild path.  Unicast tables come straight
+        from ``table``; in-fabric multicast Steiner branchings regrow on
+        it too (the clone's tree cache starts empty).  Compilations are
+        shared process-wide by engine shape bucket, so a clone never
+        recompiles an engine the original already traced."""
+        return Fabric(self.topo, routing=PrebuiltRouting(table),
+                      timing=self.timing, queues=self.queues,
+                      engine=self.engine, addr=self.addr,
+                      mcast=self.mcast_policy)
 
     def run_many(self, specs, *,
                  max_steps: int | None = None) -> list[FabricResult]:
@@ -364,6 +414,40 @@ class Fabric:
         bucket first (unless ``warm=False``), then times each run — the
         benchmark-sweep pattern where compile time must not pollute
         per-cell numbers."""
+        from .adaptive import (AdaptiveRouting, partition_epochs,
+                               shared_max_steps)
+        if isinstance(self.routing_policy, AdaptiveRouting):
+            # the epoch loop owns execution: time whole epoched runs
+            # (merge already synchronises, so the clock is honest).
+            # warm=True honours the no-compile-in-cell contract here
+            # too: each spec's FIRST epoch slice is compiled untimed
+            # under the SAME shared step bound the epoched run will use
+            # (the slot engines key their bucket on max_steps), so the
+            # warmed bucket is exactly the one every epoch hits.
+            bounds = {}
+            if warm:
+                for i, s in enumerate(specs):
+                    parts = partition_epochs(
+                        s, self.routing_policy.epochs)
+                    if parts:
+                        bounds[i] = (max_steps if max_steps is not None
+                                     else shared_max_steps(
+                                         self, parts,
+                                         detour_factor=1.0 + float(
+                                             self.routing_policy.alpha)))
+                        self.compile(parts[0], max_steps=bounds[i])
+            cells = []
+            for i, s in enumerate(specs):
+                t0 = time.perf_counter()
+                # reuse the warm pass's step bound so the epoch loop
+                # does not recompute it (and provably runs the warmed
+                # bucket)
+                res = self.run(s, max_steps=bounds.get(i, max_steps))
+                us = (time.perf_counter() - t0) * 1e6
+                cells.append(SweepCell(
+                    result=res, us_per_call=us,
+                    bucket=self.last_report.buckets[0]))
+            return cells
         plans = [self._plan(s, max_steps) for s in specs]
         if warm:
             for b in dict.fromkeys(p.bucket for p in plans):
@@ -692,11 +776,13 @@ class CompiledFabric:
                 jnp.int32(plan.C), jnp.int32(E), jnp.int32(mb),
                 jnp.int32(plan.max_steps))
             (log_n, log_inj, log_del, log_dest, sent, n_sw, t_link,
-             drops) = out
+             drops, busy_ns, busy_steps, q_drops) = out
             # trim the shape-bucket padding back to the real fabric
             log_inj, log_del, log_dest = (log_inj[:E], log_del[:E],
                                           log_dest[:E])
             sent, n_sw, t_link = sent[:L], n_sw[:L], t_link[:L]
+            busy_ns, busy_steps, q_drops = (busy_ns[:L], busy_steps[:L],
+                                            q_drops[:L])
             t_end = jnp.max(t_link)
         else:
             C = plan.C
@@ -711,7 +797,7 @@ class CompiledFabric:
                            jnp.asarray(plan.route_wt),
                            tc_j, tv_j, ti_j)
             (log_n, log_inj, log_del, log_dest, sent, n_sw, t_link, t_end,
-             drops) = out
+             drops, busy_ns, busy_steps, q_drops) = out
         self.n_runs += 1
         self._warmed = True  # first real run compiles the bucket too
         return FabricResult(
@@ -719,4 +805,6 @@ class CompiledFabric:
             log_inj=log_inj, log_del=log_del, log_dest=log_dest,
             sent=sent, n_switches=n_sw,
             t_link=t_link, t_end=t_end, drops=drops,
-            offered=plan.offered)
+            offered=plan.offered,
+            telemetry=Telemetry(busy_ns=busy_ns, busy_steps=busy_steps,
+                                q_drops=q_drops))

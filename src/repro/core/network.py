@@ -117,7 +117,13 @@ times, switch counts and ``t_end`` bit-exactly (tested in
 
 Measurements: per-event latency log, per-link/direction transmission
 counts, direction-switch counts, energy roll-up (every hop is one paper
-event: ``e_event_pj``), aggregate + per-link throughput.
+event: ``e_event_pj``), aggregate + per-link throughput — plus the
+congestion telemetry plane (:mod:`repro.core.telemetry`): per-link
+``busy_ns`` / ``busy_steps`` / ``q_drops`` counters accumulated as scan
+carry state inside every engine (bit-exact across engines, zero extra
+compilation buckets), surfaced as ``FabricResult.telemetry`` and
+consumed by the epoch-based adaptive routing control plane
+(:mod:`repro.core.adaptive`).
 """
 
 from __future__ import annotations
@@ -133,6 +139,7 @@ from .link import LinkTiming, PAPER_TIMING
 from .protocol_sim import BIG_NS, LinkState, link_step_batch, reset_link
 from .router import (AddressSpec, MulticastTable, MulticastTree,
                      RoutingTable, Topology)
+from .telemetry import Telemetry
 from .traffic import TrafficSpec
 
 __all__ = ["FabricResult", "simulate_fabric", "reset_links",
@@ -182,6 +189,9 @@ class FabricResult(NamedTuple):
     #                          multicast: delivered + drops == injected)
     offered: int = -1        # static: events offered pre-fanout (-1 =
     #                          legacy result without the field)
+    telemetry: Telemetry | None = None  # per-link congestion counters
+    #                          (accumulated as engine carry state; None
+    #                          only on legacy hand-built results)
 
     @property
     def traversals(self) -> int:
@@ -216,6 +226,16 @@ def assert_results_equal(a: FabricResult, b: FabricResult, ctx: str = ""):
         if not np.array_equal(x, y):
             raise AssertionError(f"{ctx}: engines disagree on field {f}: "
                                  f"{x!r} != {y!r}")
+    # the telemetry plane is part of the contract too: when both results
+    # carry counters (every engine run does), they must agree bit-for-bit
+    if a.telemetry is not None and b.telemetry is not None:
+        for f in Telemetry._fields:
+            x = np.asarray(getattr(a.telemetry, f))
+            y = np.asarray(getattr(b.telemetry, f))
+            if not np.array_equal(x, y):
+                raise AssertionError(
+                    f"{ctx}: engines disagree on telemetry field {f}: "
+                    f"{x!r} != {y!r}")
 
 
 def reset_links(initial_tx: np.ndarray) -> LinkState:
@@ -549,6 +569,9 @@ class _SlotState(NamedTuple):
     log_dest: jnp.ndarray   # (E,) delivery log: destination chip
     log_n: jnp.ndarray      # scalar: deliveries so far
     drops: jnp.ndarray      # scalar: forwards lost to a full queue
+    busy_ns: jnp.ndarray    # (L,) telemetry: ns spent transmitting
+    busy_steps: jnp.ndarray  # (L, 2) telemetry: steps with backlog
+    q_drops: jnp.ndarray    # (L, 2) telemetry: weighted drops per queue
 
 
 @functools.lru_cache(maxsize=None)
@@ -594,6 +617,9 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
             log_dest=jnp.zeros((E,), jnp.int32),
             log_n=jnp.zeros((), jnp.int32),
             drops=jnp.zeros((), jnp.int32),
+            busy_ns=jnp.zeros((L,), jnp.int32),
+            busy_steps=jnp.zeros((L, 2), jnp.int32),
+            q_drops=jnp.zeros((L, 2), jnp.int32),
         )
 
         def body(s: _SlotState, step_i):
@@ -607,8 +633,10 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
             # for the sorted single-hop prefill is exactly simulate()'s
             # searchsorted count.
             t_q = jnp.repeat(t_now, 2)                           # (Q,)
-            pend_q, r_min_q, nxt_q, amin_q = scan_fn(s.q_time, t_q)
+            pend_q, r_min_q, nxt_q, amin_q, busy_q = scan_fn(s.q_time, t_q)
             pend = pend_q.reshape(L, 2)
+            # telemetry: backlog-present integral per endpoint queue
+            busy_steps = s.busy_steps + busy_q.reshape(L, 2)
             r_min = r_min_q.reshape(L, 2)
             t_next = jnp.min(nxt_q.reshape(L, 2), axis=1)        # (L,)
 
@@ -647,6 +675,9 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
 
             did = (out.tx_l + out.tx_r) > 0                      # (L,) bool
             did32 = did.astype(jnp.int32)
+            # telemetry: a transmitting link's clock advances by exactly
+            # the transmission cost, so the gated delta is bus-busy time
+            busy_ns = s.busy_ns + jnp.where(did, link.t - t_now, 0)
             send_side = jnp.where(out.tx_l == 1, 0, 1)           # (L,)
             qid = lidx * 2 + send_side                           # (L,)
             pop_slot = amin_q[qid]
@@ -678,7 +709,12 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
                 fq_s, slot, jnp.repeat(link.t, K),
                 jnp.repeat(ev_route, K), jnp.repeat(ev_inj, K))
             n_ins = n_ins_f.at[fq_s].add(1, mode="drop").reshape(L, 2)
-            drops = s.drops + jnp.sum(jnp.where(dropped, wt_f, 0))
+            drop_wt = jnp.where(dropped, wt_f, 0)
+            drops = s.drops + jnp.sum(drop_wt)
+            # telemetry: charge each weighted drop to its target queue
+            q_drops = s.q_drops.reshape(-1).at[
+                jnp.where(dropped, fq_g, Q)].add(
+                drop_wt, mode="drop").reshape(L, 2)
 
             # --- switch counting (matches SimResult.n_switches: mode_l
             # transitions between consecutive steps, reset excluded) -----
@@ -691,13 +727,15 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
                 n_ins=n_ins, sent=sent,
                 prev_mode_l=link.xl.mode, n_sw=n_sw,
                 log_inj=log_inj, log_del=log_del, log_dest=log_dest,
-                log_n=log_n, drops=drops)
+                log_n=log_n, drops=drops,
+                busy_ns=busy_ns, busy_steps=busy_steps, q_drops=q_drops)
             return ns, None
 
         final, _ = jax.lax.scan(body, init, jnp.arange(max_steps))
         return (final.log_n, final.log_inj, final.log_del, final.log_dest,
                 final.sent, final.n_sw, final.link.t,
-                jnp.max(final.link.t), final.drops)
+                jnp.max(final.link.t), final.drops,
+                final.busy_ns, final.busy_steps, final.q_drops)
 
     return _jit_cached(run, donate_argnums=(0, 1, 2))
 
@@ -724,6 +762,9 @@ class _RingState(NamedTuple):
     log_dest: jnp.ndarray     # (E,)
     log_n: jnp.ndarray        # scalar
     drops: jnp.ndarray        # scalar
+    busy_ns: jnp.ndarray      # (L,) telemetry: ns spent transmitting
+    busy_steps: jnp.ndarray   # (L, 2) telemetry: steps with backlog
+    q_drops: jnp.ndarray      # (L, 2) telemetry: weighted drops per queue
 
 
 @functools.lru_cache(maxsize=None)
@@ -771,6 +812,9 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
             log_dest=jnp.zeros((E,), jnp.int32),
             log_n=jnp.zeros((), jnp.int32),
             drops=jnp.zeros((), jnp.int32),
+            busy_ns=jnp.zeros((L,), jnp.int32),
+            busy_steps=jnp.zeros((L, 2), jnp.int32),
+            q_drops=jnp.zeros((L, 2), jnp.int32),
         )
 
         def body(s: _RingState, step_i):
@@ -821,6 +865,11 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
 
             did = (out.tx_l + out.tx_r) > 0                      # (L,) bool
             did32 = did.astype(jnp.int32)
+            # telemetry: backlog indicator + transmission-gated clock
+            # delta — head properties only, so the O(1)-per-step contract
+            # holds; bit-exact with the slot engines' (pend > 0) counter
+            busy_steps = s.busy_steps + pend_side.astype(jnp.int32)
+            busy_ns = s.busy_ns + jnp.where(did, link.t - t_now, 0)
             send_side = jnp.where(out.tx_l == 1, 0, 1)           # (L,)
 
             # --- pop the earliest (release, key) head on the send side --
@@ -909,7 +958,12 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
                 1, mode="drop").reshape(L, 2, D)
             n_ins = n_ins_f.at[jnp.where(app, fq_g, Q)].add(
                 1, mode="drop").reshape(L, 2)
-            drops = s.drops + jnp.sum(jnp.where(dropped, wt_f, 0))
+            drop_wt = jnp.where(dropped, wt_f, 0)
+            drops = s.drops + jnp.sum(drop_wt)
+            # telemetry: charge each weighted drop to its target queue
+            q_drops = s.q_drops.reshape(-1).at[
+                jnp.where(dropped, fq_g, Q)].add(
+                drop_wt, mode="drop").reshape(L, 2)
 
             # --- switch counting (reset step excluded) ------------------
             n_sw = s.n_sw + jnp.where(
@@ -922,7 +976,8 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
                 fq_key=fq_key, n_ins=n_ins, sent=sent,
                 prev_mode_l=link.xl.mode, n_sw=n_sw,
                 log_inj=log_inj, log_del=log_del, log_dest=log_dest,
-                log_n=log_n, drops=drops)
+                log_n=log_n, drops=drops,
+                busy_ns=busy_ns, busy_steps=busy_steps, q_drops=q_drops)
             return ns, None
 
         # --- chunked steps inside while_loop: exit within one chunk of
@@ -950,7 +1005,8 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
         final, _ = jax.lax.while_loop(cond, chunk_body,
                                       (init, jnp.int32(0)))
         return (final.log_n, final.log_inj, final.log_del, final.log_dest,
-                final.sent, final.n_sw, final.link.t, final.drops)
+                final.sent, final.n_sw, final.link.t, final.drops,
+                final.busy_ns, final.busy_steps, final.q_drops)
 
     # no donation: the prefill arrays are read-only gather sources here
     # (no same-shaped output exists to alias them into)

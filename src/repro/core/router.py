@@ -198,6 +198,82 @@ class RoutingTable:
         reach = self.hops[self.hops >= 0]
         return int(reach.max()) if reach.size else 0
 
+    @staticmethod
+    def build_weighted(topo: Topology,
+                       link_cost: np.ndarray) -> "RoutingTable":
+        """Shortest-path tables over positive per-link costs (Dijkstra
+        from every destination) — the congestion-weighted generalisation
+        of :meth:`build` the adaptive control plane recomputes per epoch.
+
+        ``link_cost`` is an (L,) array of integer costs >= 1 (integer so
+        route selection is exactly reproducible across platforms — the
+        adaptive policies quantise their congestion weights before
+        calling in).  Next hops minimise the total path cost; ties break
+        to the lowest (predecessor chip, link) pair, which makes the
+        choice deterministic AND makes uniform costs reproduce
+        :meth:`build`'s BFS tables bit-exactly (tested) — so a zero
+        congestion weight degenerates to static shortest-path routing.
+
+        ``hops`` still counts *links traversed* along the chosen route
+        (not cost): the step-bound and stream-quota estimators consume
+        path lengths.  Next hops strictly decrease the remaining cost,
+        so weighted routes can never cycle.
+        """
+        import heapq
+        cost = np.asarray(link_cost)
+        if cost.shape != (topo.n_links,):
+            raise ValueError(f"link_cost must have shape "
+                             f"({topo.n_links},), got {cost.shape}")
+        if cost.size and (np.any(cost < 1)
+                          or np.any(cost != np.floor(cost))):
+            raise ValueError("link costs must be integers >= 1")
+        cost = cost.astype(np.int64)
+        n = topo.n_chips
+        adj: list[list[tuple[int, int, int]]] = [[] for _ in range(n)]
+        for l, (a, b) in enumerate(topo.links):
+            adj[a].append((b, l, 0))
+            adj[b].append((a, l, 1))
+        for lst in adj:
+            lst.sort()
+
+        next_link = np.full((n, n), -1, np.int32)
+        out_side = np.full((n, n), -1, np.int32)
+        hops = np.full((n, n), -1, np.int32)
+        inf = np.iinfo(np.int64).max
+        for dst in range(n):
+            dist = np.full(n, inf, np.int64)
+            dist[dst] = 0
+            heap = [(0, dst)]
+            done = np.zeros(n, bool)
+            order = []
+            while heap:
+                d, u = heapq.heappop(heap)
+                if done[u]:
+                    continue
+                done[u] = True
+                order.append(u)
+                for v, l, _side_u in adj[u]:
+                    nd = d + cost[l]
+                    if nd < dist[v]:
+                        dist[v] = nd
+                        heapq.heappush(heap, (nd, v))
+            hops[dst, dst] = 0
+            # settle next hops in ascending (dist, chip) order: the
+            # chosen predecessor always has strictly smaller dist, so
+            # its hop count is final when we read it.  adj[v] entries
+            # are (neighbor u, link l, v's side of l), sorted — the min
+            # below is the deterministic (cost, chip, link) tie-break.
+            for v in order[1:]:
+                best = min((dist[u] + cost[l], u, l, side_v)
+                           for u, l, side_v in adj[v]
+                           if dist[u] < inf)
+                _, u, l, side_v = best
+                next_link[v, dst] = l
+                out_side[v, dst] = side_v
+                hops[v, dst] = hops[u, dst] + 1
+        return RoutingTable(next_link=next_link, out_side=out_side,
+                            hops=hops)
+
 
 # -----------------------------------------------------------------------
 # Multicast (Su et al.-style tag expansion)

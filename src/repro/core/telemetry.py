@@ -1,0 +1,127 @@
+"""Per-link congestion telemetry: the fabric's measurement plane.
+
+DYNAPs-scale systems (Moradi et al. 2017) and the core-interface
+optimization line of work (Su et al. 2023) both locate the multi-core
+throughput ceiling at *congestion on shared AER links*, not raw link
+bandwidth.  Acting on congestion needs a measurement plane first: this
+module defines the per-link counters every fabric engine accumulates
+while it simulates, and the load summary the adaptive routing control
+plane (:mod:`repro.core.adaptive`) feeds on.
+
+Design constraints (and why the counters look the way they do):
+
+* **Carry state, not shape state.**  Every counter is ordinary ``lax``
+  carry alongside the queues and FSMs — shapes keyed on the link count
+  already present in every engine's shape bucket — so telemetry adds
+  ZERO compilation buckets: a fabric with telemetry compiles exactly as
+  often as one without (asserted via ``cache_size()`` in the tests).
+* **O(1)-compatible.**  The ring engine reads only stream *heads* per
+  micro-transaction, so a counter may depend on "is there released work"
+  (a head property) but never on "how many entries are released" (an
+  O(C) scan).  ``busy_steps`` therefore counts *steps with backlog
+  present*, the boolean integral both slot and ring engines compute
+  identically.
+* **Bit-exact across engines.**  The counters are part of the engines'
+  equivalence contract (``network.assert_results_equal`` compares them
+  field-for-field), so "reference", "ring" and "pallas" transports of
+  one workload report the identical telemetry.
+
+The counters:
+
+``busy_ns (L,)``
+    Nanoseconds each link's clock advanced *while transmitting* — the
+    bus-driven time.  ``busy_ns / t_end`` is the link occupancy (a
+    saturated link sits near 1.0).
+``busy_steps (L, 2)``
+    Micro-transactions during which the endpoint queue had released
+    work pending (service backlog present) — the time-integral of
+    queue pressure, per link direction.
+``q_drops (L, 2)``
+    Capacity drops charged to the *target* endpoint queue, weighted by
+    the forfeited deliveries (an in-fabric multicast copy carries its
+    whole subtree), so ``q_drops.sum() == FabricResult.drops`` exactly.
+
+``LinkLoad`` is the per-link roll-up the routing policies consume.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Telemetry", "LinkLoad", "link_load", "merge_telemetry"]
+
+
+class Telemetry(NamedTuple):
+    """Per-link counters accumulated inside the engine scan (see module
+    docstring for exact semantics).  All int32, trimmed to the real link
+    count (shape-bucket padding removed)."""
+    busy_ns: jnp.ndarray     # (L,)  ns the link spent transmitting
+    busy_steps: jnp.ndarray  # (L, 2) steps with released backlog, per side
+    q_drops: jnp.ndarray     # (L, 2) weighted drops per endpoint queue
+
+
+def merge_telemetry(parts: list[Telemetry]) -> Telemetry:
+    """Sum counters across sub-runs (the epoch merge: counters are
+    extensive quantities, so a partitioned run's telemetry is the sum of
+    its parts)."""
+    return Telemetry(
+        busy_ns=sum(np.asarray(p.busy_ns, np.int64) for p in parts),
+        busy_steps=sum(np.asarray(p.busy_steps, np.int64) for p in parts),
+        q_drops=sum(np.asarray(p.q_drops, np.int64) for p in parts))
+
+
+class LinkLoad(NamedTuple):
+    """Per-link load roll-up of one run — what a routing policy reads.
+
+    ``traversals``    (L,) transmissions, both directions summed.
+    ``occupancy``     (L,) fraction of the run's wall-clock (``t_end``)
+                      the link bus was driven; ~1.0 = saturated.
+    ``backlog_steps`` (L,) micro-transactions with released work waiting
+                      behind either endpoint (queue-pressure integral).
+    ``drops``         (L,) weighted capacity drops charged to the link's
+                      endpoint queues.
+    """
+    traversals: np.ndarray
+    occupancy: np.ndarray
+    backlog_steps: np.ndarray
+    drops: np.ndarray
+
+    def table(self, links: np.ndarray | None = None) -> str:
+        """Human-readable per-link table (used by the examples)."""
+        lines = [f"  {'link':<8}{'trav':>6}{'occ':>7}{'backlog':>9}"
+                 f"{'drops':>7}"]
+        for l in range(len(self.traversals)):
+            name = (f"{l}:{links[l][0]}-{links[l][1]}"
+                    if links is not None else str(l))
+            lines.append(f"  {name:<8}{int(self.traversals[l]):>6}"
+                         f"{100.0 * self.occupancy[l]:>6.0f}%"
+                         f"{int(self.backlog_steps[l]):>9}"
+                         f"{int(self.drops[l]):>7}")
+        return "\n".join(lines)
+
+
+def link_load(result) -> LinkLoad:
+    """Roll one ``FabricResult``'s telemetry up to per-link loads.
+
+    Requires ``result.telemetry`` (every engine attaches it); raises
+    otherwise so a policy can never silently adapt on zeros.
+    """
+    tel = result.telemetry
+    if tel is None:
+        raise ValueError("FabricResult carries no telemetry (legacy "
+                         "result?); adaptive policies need an engine run")
+    traversals = np.asarray(result.sent, np.int64).sum(axis=1)
+    # occupancy denominator: the run's ACTIVE span (first injection to
+    # last clock), so an epoch slice whose events start late in absolute
+    # time is not diluted by its offset from t = 0
+    n = int(result.delivered)
+    t0 = int(np.asarray(result.log_inj)[:n].min()) if n else 0
+    span = max(int(result.t_end) - t0, 1)
+    occupancy = np.asarray(tel.busy_ns, np.float64) / float(span)
+    backlog = np.asarray(tel.busy_steps, np.int64).sum(axis=1)
+    drops = np.asarray(tel.q_drops, np.int64).sum(axis=1)
+    return LinkLoad(traversals=traversals, occupancy=occupancy,
+                    backlog_steps=backlog, drops=drops)

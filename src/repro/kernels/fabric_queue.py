@@ -64,7 +64,8 @@ from ..core.protocol_sim import BIG_NS
 _BIG = int(BIG_NS)
 
 
-def _scan_kernel(q_ref, t_ref, pend_ref, rmin_ref, nxt_ref, amin_ref):
+def _scan_kernel(q_ref, t_ref, pend_ref, rmin_ref, nxt_ref, amin_ref,
+                 busy_ref):
     q = q_ref[...]                       # (rows, C) int32 release times
     t = t_ref[...]                       # (rows,) int32 queue clocks
     rows, ncols = q.shape
@@ -72,14 +73,19 @@ def _scan_kernel(q_ref, t_ref, pend_ref, rmin_ref, nxt_ref, amin_ref):
     released = q <= t[:, None]
     val = jnp.where(released, q, _BIG)
     row_min = jnp.min(val, axis=1)
+    pend = jnp.sum(released.astype(jnp.int32), axis=1)
 
-    pend_ref[...] = jnp.sum(released.astype(jnp.int32), axis=1)
+    pend_ref[...] = pend
     rmin_ref[...] = row_min
     nxt_ref[...] = jnp.min(jnp.where(released, _BIG, q), axis=1)
     # first-minimum-index == jnp.argmin (all-BIG rows resolve to slot 0)
     iota_c = jax.lax.broadcasted_iota(jnp.int32, (rows, ncols), 1)
     amin_ref[...] = jnp.min(
         jnp.where(val == row_min[:, None], iota_c, ncols), axis=1)
+    # 0/1 backlog indicator: the released mask is already in VMEM, so the
+    # telemetry plane's per-step counter costs one more reduction of the
+    # same tile instead of a second O(Q*C) pass off-kernel
+    busy_ref[...] = (pend > 0).astype(jnp.int32)
 
 
 def fabric_queue_step_pallas(q_time: jnp.ndarray, t_q: jnp.ndarray, *,
@@ -91,13 +97,14 @@ def fabric_queue_step_pallas(q_time: jnp.ndarray, t_q: jnp.ndarray, *,
       q_time: (Q, C) int32 release times, ``BIG_NS`` = empty slot.
       t_q:    (Q,) int32 per-queue clock.
 
-    Returns ``(pend, r_min, nxt, amin)``, each (Q,) int32.
+    Returns ``(pend, r_min, nxt, amin, busy)``, each (Q,) int32
+    (``busy`` = 0/1 released-backlog indicator for the telemetry plane).
     """
     nq, _ = q_time.shape
     assert nq % rows_per_block == 0, (nq, rows_per_block)
     grid = (nq // rows_per_block,)
 
-    out_shape = [jax.ShapeDtypeStruct((nq,), jnp.int32) for _ in range(4)]
+    out_shape = [jax.ShapeDtypeStruct((nq,), jnp.int32) for _ in range(5)]
     row_spec = pl.BlockSpec((rows_per_block,), lambda i: (i,))
     return pl.pallas_call(
         _scan_kernel,
@@ -107,7 +114,7 @@ def fabric_queue_step_pallas(q_time: jnp.ndarray, t_q: jnp.ndarray, *,
                          lambda i: (i, 0)),
             row_spec,
         ],
-        out_specs=[row_spec, row_spec, row_spec, row_spec],
+        out_specs=[row_spec, row_spec, row_spec, row_spec, row_spec],
         out_shape=out_shape,
         interpret=interpret,
     )(q_time, t_q)

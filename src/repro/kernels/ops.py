@@ -138,9 +138,10 @@ def fabric_queue_scan(q_time: jnp.ndarray, t_q: jnp.ndarray, *,
                       interpret: bool | None = None, use_ref: bool = False,
                       rows_per_block: int = 8):
     """Fused per-queue released-count / min-release / next-arrival /
-    argmin-pop over (Q, C) slot arrays (the fabric engine's O(C) step).
+    argmin-pop / backlog-indicator over (Q, C) slot arrays (the fabric
+    engine's O(C) step).
 
-    Returns ``(pend, r_min, nxt, amin)``, each (Q,) int32.
+    Returns ``(pend, r_min, nxt, amin, busy)``, each (Q,) int32.
     """
     if use_ref:
         return ref.fabric_queue_scan(q_time, t_q)

@@ -89,11 +89,14 @@ from ..core.protocol_sim import BIG_NS as _QBIG  # noqa: E402
 
 
 def fabric_queue_scan(q_time: jnp.ndarray, t_q: jnp.ndarray):
-    """Per-queue released-count / min-release / next-arrival / argmin-pop.
+    """Per-queue released-count / min-release / next-arrival / argmin-pop
+    / backlog indicator.
 
-    Returns ``(pend, r_min, nxt, amin)``, each (Q,) int32; ``amin`` is
-    the slot a pop must consume (lowest released slot of the minimum
-    release time — FIFO among simultaneous arrivals; 0 for empty rows).
+    Returns ``(pend, r_min, nxt, amin, busy)``, each (Q,) int32; ``amin``
+    is the slot a pop must consume (lowest released slot of the minimum
+    release time — FIFO among simultaneous arrivals; 0 for empty rows);
+    ``busy`` is the 0/1 released-work indicator (``pend > 0``) the
+    telemetry plane accumulates per micro-transaction.
     """
     released = q_time <= t_q[:, None]
     pend = jnp.sum(released.astype(jnp.int32), axis=1)
@@ -101,7 +104,8 @@ def fabric_queue_scan(q_time: jnp.ndarray, t_q: jnp.ndarray):
     r_min = jnp.min(val, axis=1)
     nxt = jnp.min(jnp.where(released, _QBIG, q_time), axis=1)
     amin = jnp.argmin(val, axis=1).astype(jnp.int32)
-    return pend, r_min, nxt, amin
+    busy = (pend > 0).astype(jnp.int32)
+    return pend, r_min, nxt, amin, busy
 
 
 def fabric_queue_update(q_time, q_dest, q_inj, pop_q, pop_slot,

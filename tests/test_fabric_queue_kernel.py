@@ -31,7 +31,8 @@ class TestQueueScanKernel:
         q_time, t_q = _random_queues(rng, nq, ncols)
         want = ref.fabric_queue_scan(q_time, t_q)
         got = ops.fabric_queue_scan(q_time, t_q)
-        for w, g, name in zip(want, got, ("pend", "r_min", "nxt", "amin")):
+        for w, g, name in zip(want, got, ("pend", "r_min", "nxt", "amin",
+                                          "busy")):
             np.testing.assert_array_equal(np.asarray(w), np.asarray(g),
                                           err_msg=name)
 
@@ -50,12 +51,13 @@ class TestQueueScanKernel:
     def test_empty_and_all_released_rows(self):
         q_time = jnp.asarray([[BIG] * 6, [1, 2, 3, 4, 5, 6]], jnp.int32)
         t_q = jnp.asarray([0, 10], jnp.int32)
-        pend, r_min, nxt, amin = [np.asarray(x) for x in
-                                  ops.fabric_queue_scan(q_time, t_q)]
+        pend, r_min, nxt, amin, busy = [np.asarray(x) for x in
+                                        ops.fabric_queue_scan(q_time, t_q)]
         assert pend.tolist() == [0, 6]
         assert r_min.tolist() == [BIG, 1]
         assert nxt.tolist() == [BIG, BIG]
         assert amin.tolist() == [0, 0]
+        assert busy.tolist() == [0, 1]  # the telemetry plane's indicator
 
 
 class TestQueueUpdateKernel:
