@@ -1,0 +1,126 @@
+"""Bench-regression gate: current fabric sweep vs the checked-in baseline.
+
+Compares a ``BENCH_fabric.json`` produced by ``benchmarks/run.py --json``
+(or, with no ``--current``, a fresh in-process ``run_structured`` sweep)
+against ``benchmarks/baselines/BENCH_fabric.json`` and exits non-zero if
+any TAGGED cell's ``us_per_call`` regressed more than ``--max-regression``
+(default 1.5x), or if a baseline cell vanished from the current run —
+renaming or deleting a benchmark must be an explicit baseline refresh,
+not a silent gap in coverage.
+
+Only tagged cells (the ``Fabric``-API feature rows: hetero / mcast /
+adaptive / lossless) gate; the untagged ring/mesh grid is tracked but
+machine-noise-dominated at small N.  Cells whose baseline wall-clock is
+under ``--min-us`` are skipped outright: at tens of microseconds the
+comparison measures the allocator, not the engine.
+
+Refresh after an intentional perf change::
+
+    python benchmarks/run.py --tags hetero,mcast,adaptive,lossless \
+        --json benchmarks/baselines/BENCH_fabric.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "BENCH_fabric.json")
+MAX_REGRESSION = 1.5
+MIN_US = 500.0
+
+
+def _load_cells(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    return {c["name"]: c for c in payload["cells"]}
+
+
+def compare(current: dict[str, dict], baseline: dict[str, dict], *,
+            max_regression: float = MAX_REGRESSION,
+            min_us: float = MIN_US) -> list[str]:
+    """Return the list of failure messages (empty = gate passes)."""
+    failures = []
+    for name, base in sorted(baseline.items()):
+        if not base.get("tags"):
+            continue
+        cur = current.get(name)
+        if cur is None:
+            failures.append(f"{name}: present in baseline but missing "
+                            f"from the current sweep")
+            continue
+        b_us, c_us = float(base["us_per_call"]), float(cur["us_per_call"])
+        if b_us < min_us:
+            print(f"  skip {name}: baseline {b_us:.0f} us < {min_us:.0f} "
+                  f"us noise floor")
+            continue
+        ratio = c_us / b_us
+        status = "FAIL" if ratio > max_regression else "ok"
+        print(f"  {status:4s} {name}: {c_us:.0f} us vs baseline "
+              f"{b_us:.0f} us ({ratio:.2f}x, limit {max_regression:.1f}x)")
+        if ratio > max_regression:
+            failures.append(f"{name}: {ratio:.2f}x regression "
+                            f"({c_us:.0f} us vs {b_us:.0f} us)")
+    return failures
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--current", metavar="PATH", default=None,
+                   help="BENCH_fabric.json from benchmarks/run.py --json; "
+                        "omitted = run the tagged sweep in-process")
+    p.add_argument("--baseline", metavar="PATH", default=BASELINE)
+    p.add_argument("--max-regression", type=float, default=MAX_REGRESSION)
+    p.add_argument("--min-us", type=float, default=MIN_US)
+    p.add_argument("--update-baseline", action="store_true",
+                   help="overwrite the baseline with the current cells "
+                        "instead of comparing")
+    args = p.parse_args(argv)
+
+    if args.current:
+        current = _load_cells(args.current)
+        engine = "(from file)"
+    else:
+        from benchmarks import fabric_sweep
+        engine = fabric_sweep.DEFAULT_ENGINE
+        cells = fabric_sweep.run_structured(
+            engine=engine, tags=sorted(fabric_sweep.KNOWN_TAGS))
+        current = {c["name"]: c for c in cells}
+
+    if args.update_baseline:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump({"bench": "fabric_sweep", "engine": engine,
+                       "slow_lane": False,
+                       "cells": sorted(current.values(),
+                                       key=lambda c: c["name"])},
+                      f, indent=2)
+        print(f"baseline updated: {args.baseline} "
+              f"({len(current)} cells)")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; generate one with "
+              f"--update-baseline")
+        return 1
+    baseline = _load_cells(args.baseline)
+    failures = compare(current, baseline,
+                       max_regression=args.max_regression,
+                       min_us=args.min_us)
+    if failures:
+        print(f"\nFAIL: {len(failures)} benchmark regression(s):")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print(f"\nbench gate passed: {len(baseline)} baseline cells checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

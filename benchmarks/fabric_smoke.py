@@ -74,12 +74,13 @@ def run_smoke() -> dict:
             _assert_bit_exact(ref, pal, f"ring{N_CHIPS}/{name}/pallas")
     saved = run_multicast_gate()
     adaptive = run_adaptive_gate()
+    lossless = run_lossless_gate()
     return {"ring_us": t_ring * 1e6,
             "cells": len(tr.PATTERNS),
             "n_chips": N_CHIPS,
             "events_per_chip": EVENTS_PER_CHIP,
             "mcast_traversals_saved": saved,
-            **adaptive}
+            **adaptive, **lossless}
 
 
 def run_multicast_gate() -> int:
@@ -158,6 +159,140 @@ def run_adaptive_gate() -> dict:
             "adaptive_p99_saved_ns": float(p99_s - p99_a)}
 
 
+def _p99_loss_inclusive(res) -> float:
+    """p99 end-to-end latency over the OFFERED load: a dropped event
+    never arrives, so it counts as unbounded latency.  A lossy run
+    dropping more than 1% of its traffic therefore has an infinite
+    loss-inclusive p99 — the honest tail metric for an A/B against a
+    lossless transport."""
+    lat = np.asarray(res.log_del[:int(res.delivered)], np.float64) - \
+        np.asarray(res.log_inj[:int(res.delivered)], np.float64)
+    all_lat = np.sort(np.concatenate([lat, np.full(int(res.drops),
+                                                   np.inf)]))
+    # nearest-rank order statistic (linear interpolation between a
+    # finite value and inf is nan)
+    return float(all_lat[max(int(np.ceil(0.99 * all_lat.size)) - 1, 0)])
+
+
+def run_lossless_gate() -> dict:
+    """Gate the lossless-fabric claim end to end.
+
+    Two deterministic hot-spot ring-16 workloads
+    (``fabric_sweep.LOSSLESS_RING`` / ``LOSSLESS_RING_HOT``), identical
+    ``QueuePolicy`` capacity, only ``flow`` differs:
+
+    1. Mild overload — credit flow control must deliver every offered
+       event with ZERO drops while drop mode loses traffic, and credit
+       must STRICTLY beat drop mode on p99 even on the delivered-only
+       metric (which is survivorship-biased toward drop mode: its
+       survivors are the early, uncongested events).
+    2. Saturating flood — backpressure must demonstrably engage
+       (``stall_steps > 0``) and the fabric must STILL deliver 100%;
+       drop mode loses most of the load, so its loss-inclusive p99 is
+       infinite while credit's stays finite.
+
+    Cross-engine: ring and reference must agree bit-for-bit on the
+    full-size credit run (pallas is gated at ring-4 size inside
+    ``run_smoke``'s per-pattern loop cost budget — here a reduced
+    ring-8 credit cell keeps interpret-mode cost bounded), and the
+    delivered + drops == injected accounting must hold in every mode.
+    The three flow modes must also share ONE engine compilation (flow
+    mode, capacity and xon are dynamic operands — zero new shape
+    buckets, flat jit cache)."""
+    from benchmarks.fabric_sweep import (LOSSLESS_RING, LOSSLESS_RING_HOT,
+                                         _lossless_spec)
+    topo = ring_topology(LOSSLESS_RING["n_chips"])
+    spec = _lossless_spec(LOSSLESS_RING)
+    cap = LOSSLESS_RING["capacity"]
+
+    def run(flow, engine="ring", cfg_spec=None, capacity=cap, t=topo):
+        res = Fabric(t, queues=QueuePolicy(capacity=capacity, flow=flow),
+                     engine=engine).run(cfg_spec if cfg_spec is not None
+                                        else spec)
+        if int(res.delivered) + int(res.drops) != res.injected:
+            raise RuntimeError(
+                f"lossless gate [{flow}/{engine}]: delivered + drops != "
+                f"injected ({int(res.delivered)} + {int(res.drops)} != "
+                f"{res.injected})")
+        return res
+
+    # -- 1. mild overload: lossless AND a strict survivor-p99 win ------
+    res_d, res_c = run("drop"), run("credit")
+    if int(res_c.drops) != 0 or int(res_c.delivered) != res_c.injected:
+        raise RuntimeError(
+            f"credit flow control dropped events: delivered "
+            f"{int(res_c.delivered)}/{res_c.injected}, "
+            f"drops {int(res_c.drops)}")
+    if int(res_d.drops) == 0:
+        raise RuntimeError("lossless gate workload no longer congests: "
+                           "drop mode dropped nothing (gate is vacuous)")
+    p99_d = net.latency_stats(res_d)["p99_ns"]
+    p99_c = net.latency_stats(res_c)["p99_ns"]
+    if not p99_c < p99_d:
+        raise RuntimeError(
+            f"credit flow control did not strictly beat drop mode on "
+            f"delivered-events p99: {p99_c:.0f} vs {p99_d:.0f} ns "
+            f"(drop mode lost {int(res_d.drops)} events)")
+
+    # -- 2. saturating flood: backpressure engages, still 100% ---------
+    hot_spec = _lossless_spec(LOSSLESS_RING_HOT)
+    hot_cap = LOSSLESS_RING_HOT["capacity"]
+    res_hd = run("drop", cfg_spec=hot_spec, capacity=hot_cap)
+    res_hc = run("credit", cfg_spec=hot_spec, capacity=hot_cap)
+    stalls = int(np.asarray(res_hc.telemetry.stall_steps).sum())
+    if int(res_hc.drops) != 0 or stalls == 0:
+        raise RuntimeError(
+            f"saturating lossless cell: drops={int(res_hc.drops)} "
+            f"stall_steps={stalls} (want zero drops with backpressure "
+            f"demonstrably engaged)")
+    p99_all_d, p99_all_c = (_p99_loss_inclusive(res_hd),
+                            _p99_loss_inclusive(res_hc))
+    if not p99_all_c < p99_all_d:
+        raise RuntimeError(
+            f"loss-inclusive p99 did not favor credit under saturation: "
+            f"{p99_all_c:.0f} vs {p99_all_d}")
+
+    # -- cross-engine bit-exactness ------------------------------------
+    for flow, full in (("credit", res_c), ("onoff", None)):
+        got = run(flow, engine="reference")
+        if full is not None:
+            _assert_bit_exact(full, got, f"lossless/{flow} ring-vs-ref")
+        else:
+            _assert_bit_exact(run(flow), got,
+                              f"lossless/{flow} ring-vs-ref")
+    small = ring_topology(8)
+    small_spec = tr.hot_spot(jax.random.PRNGKey(2), 8, 12,
+                             mean_gap_ns=200.0, hot_frac=0.75)
+    _assert_bit_exact(
+        run("credit", cfg_spec=small_spec, capacity=12, t=small),
+        run("credit", engine="pallas", cfg_spec=small_spec, capacity=12,
+            t=small),
+        "lossless/credit ring-vs-pallas (ring8)")
+
+    # -- one compilation serves all three flow modes -------------------
+    fab = Fabric(topo, queues=QueuePolicy(capacity=cap), engine="ring")
+    cf = fab.compile(spec)
+    fab.run(spec)
+    size0 = cf.cache_size()
+    for flow in ("credit", "onoff"):
+        other = Fabric(topo, queues=QueuePolicy(capacity=cap, flow=flow),
+                       engine="ring")
+        cf2 = other.compile(spec, warm=False)
+        if cf2.bucket != cf.bucket:
+            raise RuntimeError(
+                f"flow={flow} split the engine shape bucket: "
+                f"{cf2.bucket} vs {cf.bucket}")
+        other.run(spec)
+    if cf.cache_size() != size0:
+        raise RuntimeError(
+            f"flow modes grew the jit cache: {cf.cache_size()} vs "
+            f"{size0} entries (capacity/flow/xon must stay dynamic)")
+
+    return {"lossless_p99_saved_ns": float(p99_d - p99_c),
+            "lossless_drop_mode_drops": int(res_d.drops),
+            "lossless_stall_steps": stalls}
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--update-baseline", action="store_true",
@@ -171,6 +306,11 @@ def main(argv=None) -> int:
           f"adaptive routing saves {result['adaptive_drops_saved']} "
           f"drops / {result['adaptive_p99_saved_ns']:.0f} ns p99 on the "
           f"hot-spot ring; "
+          f"credit flow control recovers "
+          f"{result['lossless_drop_mode_drops']} dropped events and "
+          f"{result['lossless_p99_saved_ns']:.0f} ns p99 "
+          f"({result['lossless_stall_steps']} stall steps under "
+          f"saturation); "
           f"ring engine {result['ring_us'] / 1e3:.0f} ms total "
           f"(compile + run)")
 

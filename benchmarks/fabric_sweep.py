@@ -102,6 +102,10 @@ def _metrics(res) -> dict:
         "switches": int(np.asarray(res.n_switches).sum()),
         "energy_nj": float(net.fabric_energy_pj(res, PAPER_TIMING)) * 1e-3,
         "drops": int(res.drops),
+        "stall_steps": (int(np.asarray(res.telemetry.stall_steps).sum())
+                        if res.telemetry is not None else 0),
+        "credit_waits": (int(np.asarray(res.telemetry.credit_waits).sum())
+                         if res.telemetry is not None else 0),
     }
 
 
@@ -310,6 +314,75 @@ def sweep_adaptive(engine=DEFAULT_ENGINE):
     return rows
 
 
+# Lossless flow-control A/B configurations (shared with the CI gate in
+# fabric_smoke.run_lossless_gate and examples/lossless_hotspot.py).  The
+# engines are deterministic, so these fixed (key, config) points
+# reproduce bit-for-bit in CI:
+#
+# - LOSSLESS_RING: mild overload.  Drop mode exhausts its one-shot
+#   per-endpoint budget (hundreds of drops) while credit mode delivers
+#   everything AND strictly wins the delivered-events p99 — the wasted
+#   transmissions of doomed events in drop mode starve live traffic
+#   under the max_burst=0 grant rule.
+# - LOSSLESS_RING_HOT: saturating flood at the smallest drop-legal
+#   capacity.  Credit backpressure demonstrably engages (stall_steps
+#   > 0) and still delivers 100%; drop mode loses most of the offered
+#   load, so its loss-inclusive p99 (a dropped event never arrives =
+#   unbounded latency) is infinite.
+LOSSLESS_RING = dict(n_chips=16, key=2, epc=EVENTS_PER_CHIP,
+                     mean_gap_ns=300.0, hot_frac=0.65, capacity=64)
+LOSSLESS_RING_HOT = dict(n_chips=16, key=0, epc=EVENTS_PER_CHIP,
+                         mean_gap_ns=150.0, hot_frac=0.85, capacity=48)
+
+
+def _lossless_spec(cfg):
+    return tr.hot_spot(jax.random.PRNGKey(cfg["key"]), cfg["n_chips"],
+                       cfg["epc"], mean_gap_ns=cfg["mean_gap_ns"],
+                       hot_frac=cfg["hot_frac"])
+
+
+def sweep_lossless(engine=DEFAULT_ENGINE):
+    """Flow-control A/B rows: the identical hot-spot workload transported
+    under every ``QueuePolicy.flow`` mode.  All modes share ONE engine
+    shape bucket (the flow mode, capacity and xon threshold are dynamic
+    operands), so the bucket is pre-warmed once and no row absorbs the
+    compile.  The strict-win assertions live in
+    ``fabric_smoke.run_lossless_gate``; the sweep reports the metrics
+    (including the stall/credit-wait telemetry unique to the lossless
+    modes)."""
+    topo = ring_topology(LOSSLESS_RING["n_chips"])
+    spec = _lossless_spec(LOSSLESS_RING)
+    cap = LOSSLESS_RING["capacity"]
+    Fabric(topo, queues=QueuePolicy(capacity=cap),
+           engine=engine).compile(spec)
+    rows = []
+    for flow in ("drop", "credit", "onoff"):
+        fab = Fabric(topo, queues=QueuePolicy(capacity=cap, flow=flow),
+                     engine=engine)
+        (cell,) = fab.sweep([spec], warm=False)
+        m = _metrics(cell.result)
+        m.update(flow=flow, capacity=cap)
+        rows.append(_cell(f"fabric_{topo.name}_hotspot_{flow}",
+                          cell.us_per_call,
+                          _derived(m) + f" stalls={m['stall_steps']}",
+                          engine, m, api="fabric", tags=("lossless",)))
+    # the saturating point: credit backpressure engages (stalls > 0)
+    # and the fabric still delivers 100% of a flood drop mode mostly
+    # loses
+    hot = LOSSLESS_RING_HOT
+    spec_hot = _lossless_spec(hot)
+    fab = Fabric(topo, queues=QueuePolicy(capacity=hot["capacity"],
+                                          flow="credit"), engine=engine)
+    (cell,) = fab.sweep([spec_hot], warm=False)
+    m = _metrics(cell.result)
+    m.update(flow="credit", capacity=hot["capacity"])
+    rows.append(_cell(f"fabric_{topo.name}_hotspot_credit_hot",
+                      cell.us_per_call,
+                      _derived(m) + f" stalls={m['stall_steps']}",
+                      engine, m, api="fabric", tags=("lossless",)))
+    return rows
+
+
 def enable_persistent_compile_cache():
     """Opt this process into a persistent XLA compile cache so repeat
     sweep runs (and CI with a cache action) skip the one shared engine
@@ -329,7 +402,7 @@ def enable_persistent_compile_cache():
 
 #: Every cell tag a sweep family can emit — the single source of truth
 #: the CLIs validate ``--tags`` against.
-KNOWN_TAGS = frozenset({"hetero", "mcast", "adaptive"})
+KNOWN_TAGS = frozenset({"hetero", "mcast", "adaptive", "lossless"})
 
 
 def run_structured(engine=DEFAULT_ENGINE, slow=False, tags=None):
@@ -350,6 +423,7 @@ def run_structured(engine=DEFAULT_ENGINE, slow=False, tags=None):
         (sweep_heterogeneous, (engine,), frozenset({"hetero"})),
         (sweep_multicast, (engine,), frozenset({"mcast"})),
         (sweep_adaptive, (engine,), frozenset({"adaptive"})),
+        (sweep_lossless, (engine,), frozenset({"lossless"})),
     )
     if wanted is not None and wanted - KNOWN_TAGS:
         raise ValueError(f"unknown sweep tags "
@@ -383,7 +457,10 @@ if __name__ == "__main__":
                         "'adaptive,mcast'): run only those families")
     args = p.parse_args()
     sel = args.tags.split(",") if args.tags else None
+    try:
+        rows = run(engine=args.engine, slow=args.slow, tags=sel)
+    except ValueError as e:   # unknown --tags: fail loudly, not a trace
+        p.error(str(e))
     print("name,us_per_call,derived")
-    for name, us, derived in run(engine=args.engine, slow=args.slow,
-                                 tags=sel):
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,113 @@
+"""Lossless fabric on a hot-spot ring: credit backpressure instead of
+drops.
+
+A 16-chip ring where most traffic converges on chip 0 and every endpoint
+queue has a bounded budget.  Under the default ``flow="drop"`` policy an
+overflowing queue discards the arriving event — the transmitter has
+already burned bus time carrying it to a full queue, and under the
+``max_burst=0`` grant rule those doomed transmissions also starve the
+reverse-direction traffic that WOULD have been delivered.  Credit-based
+flow control (``flow="credit"``) instead stalls the upstream pop in
+place until the downstream queue returns a credit: head-of-line blocking
+propagates backpressure toward the sources, the bus carries only events
+with somewhere to go, and the fabric delivers 100% of the offered load.
+
+Two operating points (both deterministic, both CI-gated by
+``benchmarks/fabric_smoke.run_lossless_gate``):
+
+1. Mild overload (``fabric_sweep.LOSSLESS_RING``): drop mode loses
+   hundreds of events AND has the worse delivered-events p99 — a strict
+   loss for lossy transport even on its own survivorship-biased metric.
+2. Saturating flood (``fabric_sweep.LOSSLESS_RING_HOT``): the per-link
+   stall telemetry shows WHERE backpressure engaged, and the fabric
+   still delivers everything while drop mode loses most of the load.
+
+    PYTHONPATH=src python examples/lossless_hotspot.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import numpy as np
+
+from benchmarks.fabric_sweep import (LOSSLESS_RING, LOSSLESS_RING_HOT,
+                                     _lossless_spec)
+from repro.core import network as net
+from repro.core.fabric import Fabric, QueuePolicy
+from repro.core.router import ring_topology
+from repro.core.telemetry import link_load
+
+
+def stats_line(tag, res):
+    st = net.latency_stats(res)
+    stalls = int(np.asarray(res.telemetry.stall_steps).sum())
+    return (f"  {tag:<7} delivered={st['delivered']:4d}/{st['injected']} "
+            f"drops={int(res.drops):3d} p50={st['p50_ns']:5.0f}ns "
+            f"p99={st['p99_ns']:6.0f}ns stalls={stalls}")
+
+
+def run_modes(topo, cfg):
+    spec = _lossless_spec(cfg)
+    out = {}
+    for flow in ("drop", "credit", "onoff"):
+        fab = Fabric(topo, queues=QueuePolicy(capacity=cfg["capacity"],
+                                              flow=flow), engine="ring")
+        out[flow] = fab.run(spec)
+        # conservation holds in every mode: nothing is lost silently
+        assert (int(out[flow].delivered) + int(out[flow].drops)
+                == out[flow].injected)
+    return out
+
+
+def main():
+    topo = ring_topology(LOSSLESS_RING["n_chips"])
+
+    # --- 1. mild overload: lossless AND faster tails --------------------
+    print(f"=== mild overload (capacity "
+          f"{LOSSLESS_RING['capacity']}/endpoint): drop vs credit vs "
+          f"onoff ===")
+    mild = run_modes(topo, LOSSLESS_RING)
+    for flow, res in mild.items():
+        print(stats_line(flow, res))
+    p99_d = net.latency_stats(mild["drop"])["p99_ns"]
+    p99_c = net.latency_stats(mild["credit"])["p99_ns"]
+    print(f"  -> drop mode lost {int(mild['drop'].drops)} events and "
+          f"still has the worse p99 ({p99_d:.0f} vs {p99_c:.0f} ns): "
+          f"transmitting doomed events starves deliverable ones")
+
+    # --- 2. saturating flood: where did backpressure engage? ------------
+    print(f"\n=== saturating flood (capacity "
+          f"{LOSSLESS_RING_HOT['capacity']}/endpoint): per-link stall "
+          f"telemetry, credit mode ===")
+    hot = run_modes(topo, LOSSLESS_RING_HOT)
+    ll = link_load(hot["credit"])
+    print(ll.table(topo.links))
+    stalls = np.asarray(ll.stalls)
+    hot_links = np.flatnonzero(stalls > 0)
+    print(f"  -> {len(hot_links)} of {topo.n_links} links stalled "
+          f"(links {hot_links.tolist()}): backpressure concentrated on "
+          f"the hot arcs, the far arc never blocked")
+    for flow, res in hot.items():
+        print(stats_line(flow, res))
+
+    # --- CI-gated claims -------------------------------------------------
+    # mild point: credit is lossless and strictly beats drop on p99
+    assert int(mild["credit"].drops) == 0
+    assert int(mild["drop"].drops) > 0
+    assert p99_c < p99_d
+    # onoff with the default threshold is lossless too
+    assert int(mild["onoff"].drops) == 0
+    # hot point: backpressure engaged, still zero drops
+    assert int(hot["credit"].drops) == 0
+    assert int(np.asarray(hot["credit"].telemetry.stall_steps).sum()) > 0
+    assert int(hot["drop"].drops) > 0
+    print(f"\ncredit flow control recovered "
+          f"{int(mild['drop'].drops)} + {int(hot['drop'].drops)} dropped "
+          f"events across both operating points with zero loss")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -92,13 +92,27 @@ class AdaptiveRouting:
     signal``.  1.0 reacts instantly but can flip-flop all flows between
     alternatives epoch over epoch (the classic stale-signal
     oscillation); smaller values damp the swing and settle on a split.
+    ``trigger`` — when tables are rebuilt between epochs.  ``"epoch"``
+    (default): after every epoch, unconditionally.  ``"backlog_burst"``:
+    event-driven — only when one link's congestion (backlog + stall +
+    drop integral) bursts past ``threshold ×`` the fabric mean;
+    quiescent or evenly-loaded epochs keep their tables, so a fabric
+    under benign load never churns routes (and never pays the
+    tree-regrow setup) while a hot-spot burst still reroutes within one
+    epoch.  The EMA signal keeps folding every epoch either way, so a
+    slow-building burst is judged on its full history when it crosses.
+    ``threshold`` — the burst factor for ``trigger="backlog_burst"``;
+    ``0`` rebuilds whenever any congestion exists at all.
     """
     policy: str = "min_backlog"
     epochs: int = 4
     alpha: float = 2.0
     ema: float = 0.5
+    trigger: str = "epoch"
+    threshold: float = 4.0
 
     POLICIES = ("min_backlog", "weighted_bfs")
+    TRIGGERS = ("epoch", "backlog_burst")
 
     def __post_init__(self):
         if self.policy not in self.POLICIES:
@@ -110,6 +124,12 @@ class AdaptiveRouting:
             raise ValueError(f"alpha must be >= 0, got {self.alpha}")
         if not 0.0 < float(self.ema) <= 1.0:
             raise ValueError(f"ema must be in (0, 1], got {self.ema}")
+        if self.trigger not in self.TRIGGERS:
+            raise ValueError(f"unknown trigger {self.trigger!r}; "
+                             f"expected one of {self.TRIGGERS}")
+        if float(self.threshold) < 0:
+            raise ValueError(f"threshold must be >= 0, got "
+                             f"{self.threshold}")
 
     # --- RoutingPolicy protocol: epoch-0 tables ARE the static tables --
     def build(self, topo: Topology) -> RoutingTable:
@@ -123,11 +143,30 @@ class AdaptiveRouting:
             return ll.traversals.astype(np.float64)
         backlog = ll.backlog_steps.astype(np.float64)
         drops = ll.drops.astype(np.float64)
+        stalls = ll.stalls.astype(np.float64)
         if backlog.max(initial=0) > 0:
             backlog = backlog / backlog.max()
         if drops.max(initial=0) > 0:
             drops = drops / drops.max()
-        return backlog + drops
+        # flow-control stalls mark the links the lossless modes throttle
+        # on — the congestion drops used to flag; zero in drop mode, so
+        # historical drop-mode signals are untouched
+        if stalls.max(initial=0) > 0:
+            stalls = stalls / stalls.max()
+        return backlog + drops + stalls
+
+    def should_rebuild(self, load: LinkLoad) -> bool:
+        """Event-driven rebuild gate: does this epoch's telemetry warrant
+        new tables?  Always true under ``trigger="epoch"``; under
+        ``"backlog_burst"``, true only when the hottest link's congestion
+        integral bursts past ``threshold ×`` the fabric-wide mean."""
+        if self.trigger == "epoch":
+            return True
+        hot = (load.backlog_steps.astype(np.float64)
+               + load.stalls.astype(np.float64)
+               + load.drops.astype(np.float64))
+        mx = float(hot.max(initial=0.0))
+        return mx > 0.0 and mx > float(self.threshold) * float(hot.mean())
 
     def next_table(self, topo: Topology, load: np.ndarray) -> RoutingTable:
         """Congestion-weighted shortest-path tables for the next epoch."""
@@ -149,6 +188,7 @@ class EpochRecord(NamedTuple):
     load: LinkLoad              # the epoch's telemetry roll-up
     bucket: tuple               # engine shape bucket the epoch used
     cache_size: int             # jit entries in that bucket's engine
+    rebuilt: bool = True        # tables rebuilt AFTER this epoch?
 
 
 class AdaptiveReport(NamedTuple):
@@ -317,17 +357,24 @@ def run_epoched(fabric, spec: TrafficSpec, *, epochs: int,
         bucket = epoch_fab._plan(part, shared_ms).bucket
         cf = epoch_fab._get_compiled(bucket)
         load = link_load(res)
+        rebuild = (policy is not None and e + 1 < len(parts)
+                   and policy.should_rebuild(load))
         records.append(EpochRecord(result=res, table=table, load=load,
                                    bucket=bucket,
-                                   cache_size=cf.cache_size()))
+                                   cache_size=cf.cache_size(),
+                                   rebuilt=rebuild))
         results.append(res)
         if policy is not None and e + 1 < len(parts):
+            # the EMA signal folds every epoch (a slow-building burst is
+            # judged on its history); the table rebuild itself waits for
+            # the policy's trigger
             raw = policy.load_signal(res)
             signal = raw if signal is None else (
                 float(policy.ema) * raw
                 + (1.0 - float(policy.ema)) * signal)
-            table = policy.next_table(fabric.topo, signal)
-            epoch_fab = fabric._with_routing(table)
+            if rebuild:
+                table = policy.next_table(fabric.topo, signal)
+                epoch_fab = fabric._with_routing(table)
     merged = merge_results(results, offered=spec.n_events)
     fabric.last_report = AdaptiveReport(
         records=tuple(records),

@@ -63,7 +63,8 @@ from .router import (AddressSpec, MulticastTable, MulticastTree,
 from .telemetry import Telemetry
 from .traffic import TrafficSpec
 
-__all__ = ["Fabric", "CompiledFabric", "QueuePolicy", "EngineSpec",
+__all__ = ["Fabric", "CompiledFabric", "QueuePolicy", "FLOW_MODES",
+           "EngineSpec",
            "MulticastPolicy", "RoutingPolicy", "StaticShortestPath",
            "PrebuiltRouting", "SweepCell"]
 
@@ -72,6 +73,11 @@ __all__ = ["Fabric", "CompiledFabric", "QueuePolicy", "EngineSpec",
 # Policies
 # -----------------------------------------------------------------------
 
+#: flow-control modes, in engine encoding order (index = the dynamic
+#: ``fc_mode`` scalar the engines receive)
+FLOW_MODES = ("drop", "credit", "onoff")
+
+
 @dataclass(frozen=True)
 class QueuePolicy:
     """Per-endpoint queue behaviour of every link in the fabric.
@@ -79,17 +85,34 @@ class QueuePolicy:
     ``capacity``   — one-shot slot budget per endpoint (bounds the events
                      routed *through* an endpoint, not instantaneous
                      depth); ``None`` = lossless (the expanded event
-                     count).  Overflowing forwards are dropped and
-                     counted in ``FabricResult.drops``.
+                     count).  What happens when a forward would overflow
+                     it is ``flow``'s call.
     ``max_burst``  — 0 = paper-faithful grant rule; B > 0 = bounded-burst
                      fairness (transmitter yields after B events when the
                      peer requests).
     ``initial_tx`` — scalar or (L,): which side of each link resets into
                      TX mode (the paper's chip-level global reset).
+    ``flow``       — ``"drop"`` (default): overflowing forwards are
+                     dropped and counted in ``FabricResult.drops``.
+                     ``"credit"``: per-link credit counters — a sender
+                     whose head would forward into a full downstream
+                     queue *stalls in place* (no drop; credits return as
+                     the downstream queue pops).  ``"onoff"``: threshold
+                     xon/xoff — a queue crossing ``capacity`` asserts
+                     xoff and releases it at ``xon``.  Both lossless
+                     modes require ``capacity``; see the ``network``
+                     module docstring for the exact gate semantics and
+                     the cyclic-route deadlock caveat.
+    ``xon``        — on/off mode's resume threshold (occupancy at or
+                     below it deasserts xoff).  Default ``capacity // 2``;
+                     ``xon = capacity - 1`` makes on/off coincide with
+                     credit mode exactly.
     """
     capacity: int | None = None
     max_burst: int = 0
     initial_tx: int | np.ndarray = 1
+    flow: str = "drop"
+    xon: int | None = None
 
     def __post_init__(self):
         if self.capacity is not None and int(self.capacity) < 1:
@@ -97,6 +120,20 @@ class QueuePolicy:
                              f"{self.capacity}")
         if int(self.max_burst) < 0:
             raise ValueError(f"max_burst must be >= 0, got {self.max_burst}")
+        if self.flow not in FLOW_MODES:
+            raise ValueError(f"unknown flow mode {self.flow!r}; expected "
+                             f"one of {FLOW_MODES}")
+        if self.flow != "drop" and self.capacity is None:
+            raise ValueError(f"flow={self.flow!r} needs a finite queue "
+                             f"capacity (capacity=None is already "
+                             f"lossless)")
+        if self.xon is not None:
+            if self.flow != "onoff":
+                raise ValueError("xon only applies to flow='onoff'")
+            if not 0 <= int(self.xon) < int(self.capacity):
+                raise ValueError(f"xon must satisfy 0 <= xon < capacity, "
+                                 f"got xon={self.xon} with "
+                                 f"capacity={self.capacity}")
 
 
 @dataclass(frozen=True)
@@ -225,7 +262,10 @@ class _Plan(NamedTuple):
     queues, replication tables, dynamic scalars and the static shape
     bucket they fit.  ``E`` is the EXPECTED delivery count (fanout
     applied); ``offered`` the pre-fanout event count the ``fanout``
-    metric reports against."""
+    metric reports against.  ``C`` is the *physical* slot width the
+    engines allocate; ``cap``/``fc``/``xon`` the dynamic flow-control
+    scalars (logical capacity, mode index into ``FLOW_MODES``, resume
+    threshold) they receive as operands."""
     E: int
     C: int
     max_steps: int
@@ -238,6 +278,9 @@ class _Plan(NamedTuple):
     route_wt: np.ndarray    # (N, R, K) subtree delivery weights (drops)
     offered: int
     bucket: tuple
+    cap: int = 1            # logical per-endpoint budget (dynamic scalar)
+    fc: int = 0             # FLOW_MODES index (dynamic scalar)
+    xon: int = 0            # on/off resume threshold (dynamic scalar)
 
 
 class SweepCell(NamedTuple):
@@ -581,8 +624,24 @@ class Fabric:
         if L == 0 or E == 0:
             raise ValueError("need at least one link and one event")
 
-        cap = self.queues.capacity
-        C = int(cap) if cap is not None else max(E, 1)
+        # flow-control scalars: all dynamic operands, so switching between
+        # drop/credit/onoff (or sweeping the capacity) NEVER adds a
+        # compilation bucket for a fixed fabric shape
+        cap_opt = self.queues.capacity
+        cap = int(cap_opt) if cap_opt is not None else max(E, 1)
+        fc = FLOW_MODES.index(self.queues.flow)
+        xon = (int(self.queues.xon) if self.queues.xon is not None
+               else (cap // 2 if fc == 2 else 0))
+        # prefill overflow check: in drop mode the logical budget binds
+        # the initial backlog too; the lossless modes legitimately buffer
+        # above ``cap`` at the source (the gate throttles draining, not
+        # buffering), so only the physical width binds there
+        chk = cap if fc == 0 else max(E, 1)
+        # physical slot width: always the expanded event count, so the
+        # capacity stays OUT of the slot engines' shape bucket (extra
+        # columns beyond the logical budget hold the BIG_NS sentinel —
+        # semantically inert in drop mode, headroom in stall modes)
+        C = max(E, 1)
         if max_steps is None:
             max_steps = 4 * total_tx + 2 * E + 64 * (rt.diameter + 2)
         _overflow_guard(int(copy_t.max(initial=0)), total_tx,
@@ -598,7 +657,7 @@ class Fabric:
                                                    self._in_rank, L,
                                                    self._D)
             qt, qd, qi, sizes = _prefill(L, grp, copy_t, copy_route,
-                                         copy_inj, C, width="auto")
+                                         copy_inj, chk, width="auto")
             # Bucketed shapes (+1 = always-BIG_NS pad column for
             # head/tail gathers); logical E / C / max_burst / max_steps
             # and the timing vectors stay dynamic so cells share
@@ -626,7 +685,7 @@ class Fabric:
                       int(self.engine.chunk_size))
         else:
             qt, qd, qi, sizes = _prefill(L, grp, copy_t, copy_route,
-                                         copy_inj, C)
+                                         copy_inj, chk, width=C)
             # the slot engines bake max_steps/max_burst into the scan, so
             # they key the bucket too (R/K only shape the table operands)
             bucket = (eng, L, E, C, int(max_steps),
@@ -635,7 +694,7 @@ class Fabric:
                      q_dest=qd, q_inj=qi, sizes=sizes,
                      route_out=route_out, route_del=route_del,
                      route_wt=route_wt, offered=spec.n_events,
-                     bucket=bucket)
+                     bucket=bucket, cap=cap, fc=fc, xon=xon)
 
 
 class CompiledFabric:
@@ -750,7 +809,7 @@ class CompiledFabric:
             route_out=np.full((N, R, K), -1, np.int32),
             route_del=np.zeros((N, R), np.int32),
             route_wt=np.zeros((N, R, K), np.int32),
-            offered=0, bucket=self.bucket))
+            offered=0, bucket=self.bucket, cap=width, fc=0, xon=0))
         jax.block_until_ready(res.drops)
         self.n_runs = n_runs  # the dummy run is not a user run
         self._warmed = True
@@ -773,16 +832,19 @@ class CompiledFabric:
                 jnp.asarray(_pad_to(plan.route_del, (Np, Rp), 0)),
                 jnp.asarray(_pad_to(plan.route_wt, (Np, Rp, Kp), 0)),
                 in_rank_j, tc_j, tv_j, ti_j,
-                jnp.int32(plan.C), jnp.int32(E), jnp.int32(mb),
-                jnp.int32(plan.max_steps))
+                jnp.int32(plan.cap), jnp.int32(E), jnp.int32(mb),
+                jnp.int32(plan.max_steps), jnp.int32(plan.fc),
+                jnp.int32(plan.xon))
             (log_n, log_inj, log_del, log_dest, sent, n_sw, t_link,
-             drops, busy_ns, busy_steps, q_drops) = out
+             drops, busy_ns, busy_steps, q_drops, stall_steps,
+             credit_waits) = out
             # trim the shape-bucket padding back to the real fabric
             log_inj, log_del, log_dest = (log_inj[:E], log_del[:E],
                                           log_dest[:E])
             sent, n_sw, t_link = sent[:L], n_sw[:L], t_link[:L]
             busy_ns, busy_steps, q_drops = (busy_ns[:L], busy_steps[:L],
                                             q_drops[:L])
+            stall_steps, credit_waits = stall_steps[:L], credit_waits[:L]
             t_end = jnp.max(t_link)
         else:
             C = plan.C
@@ -795,9 +857,12 @@ class CompiledFabric:
                            jnp.asarray(plan.route_out),
                            jnp.asarray(plan.route_del),
                            jnp.asarray(plan.route_wt),
-                           tc_j, tv_j, ti_j)
+                           tc_j, tv_j, ti_j,
+                           jnp.int32(plan.cap), jnp.int32(plan.fc),
+                           jnp.int32(plan.xon))
             (log_n, log_inj, log_del, log_dest, sent, n_sw, t_link, t_end,
-             drops, busy_ns, busy_steps, q_drops) = out
+             drops, busy_ns, busy_steps, q_drops, stall_steps,
+             credit_waits) = out
         self.n_runs += 1
         self._warmed = True  # first real run compiles the bucket too
         return FabricResult(
@@ -807,4 +872,5 @@ class CompiledFabric:
             t_link=t_link, t_end=t_end, drops=drops,
             offered=plan.offered,
             telemetry=Telemetry(busy_ns=busy_ns, busy_steps=busy_steps,
-                                q_drops=q_drops))
+                                q_drops=q_drops, stall_steps=stall_steps,
+                                credit_waits=credit_waits))

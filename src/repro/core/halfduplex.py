@@ -21,7 +21,6 @@ host devices) and are selectable as the gradient-reduction schedule in
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

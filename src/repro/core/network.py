@@ -40,9 +40,52 @@ An entry only *enters* the physical FIFO at its release time, so service
 order is release-time order (FIFO among equal times): a forward that has
 already arrived is never blocked behind a pre-routed injection that has
 not happened yet.  Slots are one-shot (consumed entries are not reused),
-so ``queue_capacity`` bounds the total events *through* an endpoint, not
-its instantaneous depth; the lossless default (= expanded event count)
-can never drop.
+so in the default ``"drop"`` flow mode ``queue_capacity`` bounds the
+total events *through* an endpoint, not its instantaneous depth; the
+lossless default (= expanded event count) can never drop.
+
+Flow control (``fabric.QueuePolicy(flow=...)``)
+-----------------------------------------------
+The paper's four-phase req/ack handshake is inherently lossless — a
+sender stalls until the receiver acks, it never silently discards an
+event.  Three flow modes reproduce the design space (all three are a
+*dynamic* scalar operand, so they share one compilation per shape):
+
+``"drop"`` (default)
+    Today's semantics: a forward into a full queue is discarded and
+    counted (``FabricResult.drops``), weighted by the forfeited
+    deliveries under in-fabric multicast.
+
+``"credit"``
+    Per-link credit counters: every endpoint queue tracks its occupancy
+    ``n_ins - n_pop``; a pop whose head would forward into a queue at or
+    above ``capacity`` *stalls in place* (the event stays at the stream
+    head / slot, backlog telemetry keeps accruing, head-of-line blocking
+    is modeled) until a downstream pop returns a credit.  Delivery-only
+    pops (all replication targets local) are never gated, so
+    convergecast sinks always drain and an acyclic route set cannot
+    deadlock.  ``delivered == injected`` with ``drops == 0``.
+
+``"onoff"``
+    Threshold xon/xoff: the queue raises ``xoff`` when occupancy
+    reaches ``capacity`` and clears it when occupancy falls back to
+    ``xon`` (hysteresis) — senders gate on the latched bit rather than
+    the instantaneous count.  ``xon = capacity - 1`` degenerates to
+    credit mode exactly.
+
+Because several upstream links can pop into one queue in the same
+micro-transaction, instantaneous occupancy may transiently overshoot
+``capacity`` by at most the chip in-degree; the overshoot is
+deterministic and bit-exact across engines.  A *stalled* link is
+excluded from the conservative horizon (its next insert is causally
+gated on a downstream pop, which the downstream link's own ``na`` term
+already bounds) and its parked clock rides the fabric-wide floor
+upward, so the eventual transmit time — and therefore the event's
+end-to-end latency — includes the full backpressure wait.  Cyclic
+route dependency chains (e.g. all-clockwise ring traffic with tiny
+capacities) can genuinely deadlock, exactly like real credit-based
+fabrics; the step bound then binds and the run reports
+``delivered + drops < injected`` instead of hanging.
 
 Clocks are link-local, exactly as in ``protocol_sim.simulate``: a link
 whose queues are empty *parks* (its clock holds) and wakes when a forward
@@ -551,6 +594,43 @@ def _replicate(route_out_j, route_wt_j, rx_chip, ev_route, did):
     return fwd, jnp.maximum(out_qk, 0).reshape(-1), wt_k.reshape(-1)
 
 
+def _flow_gate(fc_mode, cap, xon, occ, xoff, cand_route, rx_chip_cand,
+               route_out_j):
+    """Flow-control admission gate for one micro-transaction.
+
+    For every endpoint queue, looks up the downstream queues its head
+    event would replicate onto (``route_out_j[rx_chip, route]``) and
+    decides whether a pop must stall: in credit mode when any real
+    target's occupancy ``n_ins - n_pop`` has reached ``cap``, in on/off
+    mode when any real target has its latched ``xoff`` bit raised.
+    Delivery-only heads (all targets -1) are never gated — destination
+    sinks always drain, so acyclic route sets cannot deadlock.  The
+    xon/xoff hysteresis state advances first (set at ``occ >= cap``,
+    cleared at ``occ <= xon``) so both engines latch from the identical
+    start-of-step occupancy.
+
+    ``fc_mode`` / ``cap`` / ``xon`` are *dynamic* int32 scalars (0 =
+    drop, 1 = credit, 2 = onoff) — the gate adds no compilation
+    buckets, and in drop mode it is the constant ``False`` mask, which
+    keeps the PR 5 semantics bit-exact.
+
+    Shapes: ``occ`` / ``xoff`` / ``cand_route`` / ``rx_chip_cand`` are
+    (L, 2); returns ``(blocked (L, 2) bool, xoff' (L, 2) int32)``.
+    """
+    xoff2 = jnp.where(occ >= cap, jnp.int32(1),
+                      jnp.where(occ <= xon, jnp.int32(0), xoff))
+    tgt = route_out_j[rx_chip_cand, cand_route]          # (L, 2, K)
+    real = tgt >= 0
+    tgt_g = jnp.maximum(tgt, 0)
+    occ_t = occ.reshape(-1)[tgt_g]
+    xoff_t = xoff2.reshape(-1)[tgt_g]
+    full = jnp.any(real & (occ_t >= cap), axis=2)
+    off = jnp.any(real & (xoff_t > 0), axis=2)
+    blocked = jnp.where(fc_mode == 1, full,
+                        jnp.where(fc_mode == 2, off, False))
+    return blocked, xoff2
+
+
 # -----------------------------------------------------------------------
 # Slot engines ("reference" and "pallas"): flat one-shot (Q, C) arrays
 # -----------------------------------------------------------------------
@@ -572,6 +652,11 @@ class _SlotState(NamedTuple):
     busy_ns: jnp.ndarray    # (L,) telemetry: ns spent transmitting
     busy_steps: jnp.ndarray  # (L, 2) telemetry: steps with backlog
     q_drops: jnp.ndarray    # (L, 2) telemetry: weighted drops per queue
+    n_pop: jnp.ndarray      # (L, 2) entries ever popped (credit returns)
+    xoff: jnp.ndarray       # (L, 2) latched on/off backpressure bit
+    in_stall: jnp.ndarray   # (L, 2) stalled last step (episode edges)
+    stall_steps: jnp.ndarray  # (L, 2) telemetry: flow-control stalls
+    credit_waits: jnp.ndarray  # (L, 2) telemetry: stall episodes
 
 
 @functools.lru_cache(maxsize=None)
@@ -587,6 +672,13 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
     one pop can deliver locally AND spawn up to K child copies, which
     for unicast-only tables (K = 1, identity deliver) reproduces the
     historical next-hop gather bit-exactly.
+
+    ``C`` is the *physical* slot width (the expanded event count — every
+    queue can always hold everything ever routed through it); the
+    logical per-endpoint budget arrives as the dynamic scalar ``cap``
+    together with the flow-control mode ``fc_mode`` and on/off low-water
+    mark ``xon``, so drop, credit and on/off runs of every capacity
+    share ONE compilation per shape signature.
     """
     from ..kernels import ops as kops
     from ..kernels import ref as kref
@@ -602,9 +694,12 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
 
     def run(q_time, q_dest, q_inj, sizes, init_tx,
             links_j, route_out_j, route_del_j, route_wt_j,
-            t_cycle_v, t_rev_v, t_idle_v):
+            t_cycle_v, t_rev_v, t_idle_v, cap, fc_mode, xon):
         K = route_out_j.shape[2]
         link0 = reset_links(init_tx)
+        # the chip a pop over (link, side) would deliver into — the gate
+        # needs it for both sides before the FSM picks a direction
+        rx_chip_cand = jnp.stack([links_j[:, 1], links_j[:, 0]], axis=1)
         init = _SlotState(
             link=link0,
             q_time=q_time, q_dest=q_dest, q_inj=q_inj,
@@ -620,6 +715,11 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
             busy_ns=jnp.zeros((L,), jnp.int32),
             busy_steps=jnp.zeros((L, 2), jnp.int32),
             q_drops=jnp.zeros((L, 2), jnp.int32),
+            n_pop=jnp.zeros((L, 2), jnp.int32),
+            xoff=jnp.zeros((L, 2), jnp.int32),
+            in_stall=jnp.zeros((L, 2), jnp.int32),
+            stall_steps=jnp.zeros((L, 2), jnp.int32),
+            credit_waits=jnp.zeros((L, 2), jnp.int32),
         )
 
         def body(s: _SlotState, step_i):
@@ -633,12 +733,28 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
             # for the sorted single-hop prefill is exactly simulate()'s
             # searchsorted count.
             t_q = jnp.repeat(t_now, 2)                           # (Q,)
-            pend_q, r_min_q, nxt_q, amin_q, busy_q = scan_fn(s.q_time, t_q)
+            pend_q, r_min_q, nxt_q, amin_q, busy_q, route_q = scan_fn(
+                s.q_time, s.q_dest, t_q)
             pend = pend_q.reshape(L, 2)
             # telemetry: backlog-present integral per endpoint queue
             busy_steps = s.busy_steps + busy_q.reshape(L, 2)
             r_min = r_min_q.reshape(L, 2)
-            t_next = jnp.min(nxt_q.reshape(L, 2), axis=1)        # (L,)
+            nxt2 = nxt_q.reshape(L, 2)                           # (L, 2)
+
+            # --- flow-control admission gate ----------------------------
+            # Would this queue's head pop into a backpressured queue?
+            # Gated BEFORE the FSM step so a stalled head simply presents
+            # no pending work (the event stays in its slot, the link
+            # idles — the 4-phase "receiver withholds ack" behaviour).
+            occ = s.n_ins - s.n_pop
+            cand_route = route_q.reshape(L, 2)
+            blocked, xoff = _flow_gate(fc_mode, cap, xon, occ, s.xoff,
+                                       cand_route, rx_chip_cand,
+                                       route_out_j)
+            stalled = (pend > 0) & blocked
+            stall_steps = s.stall_steps + stalled.astype(jnp.int32)
+            credit_waits = s.credit_waits + (
+                stalled & (s.in_stall == 0)).astype(jnp.int32)
 
             # --- conservative clock synchronization ---------------------
             # A link acts no earlier than its clock (work pending) or its
@@ -660,12 +776,38 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
             # With one link both guards are vacuous (its own bound is
             # always the loosest), so simulate() semantics are preserved
             # bit-exactly.
-            pend_any = (pend[:, 0] + pend[:, 1]) > 0
-            na = jnp.where(pend_any, t_now, t_next)
+            #
+            # Flow control refines the ``na`` term, per SIDE: a side with
+            # ANY released entry is head-of-line gated by its earliest
+            # released head (a shadowed later arrival can never act
+            # before the head pops), so its next-action bound is the
+            # clock when the head may pop — and when the head is *gated*,
+            # the downstream chain instead: the stall only breaks after a
+            # downstream pop, which that link's own ``na`` already
+            # bounds, so the stalled side is excluded from the horizon
+            # (else its parked clock would pin the fabric and a deep
+            # stall chain could false-deadlock).  Its clock then rides
+            # the fabric floor upward via the idle jump, so the eventual
+            # post-stall transmit time (and the event's latency) includes
+            # the backpressure wait.  Only sides with NO released work
+            # contribute their future-arrival minimum — which is why the
+            # idle-jump target ``t_next_g`` masks released sides too:
+            # behind a released head the engines legitimately disagree on
+            # shadowed arrival times (the ring engine sees only stream
+            # heads), and head-of-line gating makes those times
+            # irrelevant anyway.  In drop mode ``blocked`` is constant
+            # False and every expression below collapses bit-exactly to
+            # the historical link-level form.
+            pend_b = pend > 0                                    # (L, 2)
+            na_side = jnp.where(
+                pend_b, jnp.where(blocked, _BIG, t_now[:, None]), nxt2)
+            na = jnp.min(na_side, axis=1)                        # (L,)
+            t_next_g = jnp.min(jnp.where(pend_b, _BIG, nxt2), axis=1)
             horizon = jnp.min(na)
-            t_next_eff = jnp.minimum(t_next, jnp.maximum(horizon, t_now))
+            t_next_eff = jnp.minimum(t_next_g,
+                                     jnp.maximum(horizon, t_now))
             safe = r_min <= jnp.min(na + t_cycle_v)              # (L,2)
-            pend_safe = jnp.where(safe, pend, 0)
+            pend_safe = jnp.where(safe & ~blocked, pend, 0)
 
             # --- one micro-transaction on every link, batched -----------
             link, out = link_step_batch(
@@ -681,11 +823,13 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
             send_side = jnp.where(out.tx_l == 1, 0, 1)           # (L,)
             qid = lidx * 2 + send_side                           # (L,)
             pop_slot = amin_q[qid]
-            ev_route = s.q_dest[qid, pop_slot]
+            ev_route = cand_route[lidx, send_side]  # == q_dest[qid, slot]
             ev_inj = s.q_inj[qid, pop_slot]
-            # consume the popped slot (one-shot slots; no reuse)
+            # consume the popped slot (one-shot slots; no reuse) and
+            # return its credit (occupancy = n_ins - n_pop drops by one)
             pop_q = jnp.where(did, qid, Q)
             sent = s.sent.at[lidx, send_side].add(did32)
+            n_pop = s.n_pop.at[lidx, send_side].add(did32)
 
             # --- deliver and/or replicate -------------------------------
             # The receiving chip's replication-table row decides both: a
@@ -701,8 +845,13 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
             fwd_f, fqk_f, wt_f = _replicate(route_out_j, route_wt_j,
                                             rx_chip, ev_route, did)
             n_ins_f = s.n_ins.reshape(-1)
+            # drop mode enforces the logical budget at append time (the
+            # historical one-shot total-through bound); the stall modes
+            # never discard — physical width C always fits (cap == C in
+            # the unbounded default, so this is bit-exactly PR 5 there)
+            app_cap = jnp.where(fc_mode == 0, jnp.minimum(cap, C), C)
             fq_g, slot, app, dropped = _forward_slots(
-                fwd_f, fqk_f, n_ins_f, C, Q)
+                fwd_f, fqk_f, n_ins_f, app_cap, Q)
             fq_s = jnp.where(app, fq_g, Q)         # drop non-appends
             q_time, q_dest, q_inj = update_fn(
                 s.q_time, s.q_dest, s.q_inj, pop_q, pop_slot,
@@ -728,14 +877,18 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
                 prev_mode_l=link.xl.mode, n_sw=n_sw,
                 log_inj=log_inj, log_del=log_del, log_dest=log_dest,
                 log_n=log_n, drops=drops,
-                busy_ns=busy_ns, busy_steps=busy_steps, q_drops=q_drops)
+                busy_ns=busy_ns, busy_steps=busy_steps, q_drops=q_drops,
+                n_pop=n_pop, xoff=xoff,
+                in_stall=stalled.astype(jnp.int32),
+                stall_steps=stall_steps, credit_waits=credit_waits)
             return ns, None
 
         final, _ = jax.lax.scan(body, init, jnp.arange(max_steps))
         return (final.log_n, final.log_inj, final.log_del, final.log_dest,
                 final.sent, final.n_sw, final.link.t,
                 jnp.max(final.link.t), final.drops,
-                final.busy_ns, final.busy_steps, final.q_drops)
+                final.busy_ns, final.busy_steps, final.q_drops,
+                final.stall_steps, final.credit_waits)
 
     return _jit_cached(run, donate_argnums=(0, 1, 2))
 
@@ -765,6 +918,11 @@ class _RingState(NamedTuple):
     busy_ns: jnp.ndarray      # (L,) telemetry: ns spent transmitting
     busy_steps: jnp.ndarray   # (L, 2) telemetry: steps with backlog
     q_drops: jnp.ndarray      # (L, 2) telemetry: weighted drops per queue
+    n_pop: jnp.ndarray        # (L, 2) entries ever popped (credit returns)
+    xoff: jnp.ndarray         # (L, 2) latched on/off backpressure bit
+    in_stall: jnp.ndarray     # (L, 2) stalled last step (episode edges)
+    stall_steps: jnp.ndarray  # (L, 2) telemetry: flow-control stalls
+    credit_waits: jnp.ndarray  # (L, 2) telemetry: stall episodes
 
 
 @functools.lru_cache(maxsize=None)
@@ -775,9 +933,10 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
     padding): ``L`` links, ``E`` delivery-log slots, ``C0``/``Cf``
     prefill/stream widths (each with one always-``BIG_NS`` pad column so
     head/tail gathers never need bounds checks), ``D`` streams per
-    endpoint.  The logical capacity, event count and burst bound arrive
-    as dynamic scalars (``cap``, ``real_e``, ``max_burst`` — the FSM's
-    burst guard is pure arithmetic) and the timing contract as dynamic
+    endpoint.  The logical capacity, event count, burst bound and flow
+    control arrive as dynamic scalars (``cap``, ``real_e``,
+    ``max_burst``, ``fc_mode``, ``xon`` — the FSM's burst guard and the
+    admission gate are pure arithmetic) and the timing contract as dynamic
     (L,) cost vectors (``t_cycle_v`` / ``t_rev_v`` / ``t_idle_v``,
     padded with zeros on dummy links — which park forever, so their
     ``na + t_cycle`` term is the inert ``BIG_NS``), so every fabric that
@@ -791,9 +950,15 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
     def run(q0_time, q0_dest, q0_inj, sizes, init_tx,
             links_j, route_out_j, route_del_j, route_wt_j, in_rank_j,
             t_cycle_v, t_rev_v, t_idle_v,
-            cap, real_e, max_burst, max_steps):
+            cap, real_e, max_burst, max_steps, fc_mode, xon):
         K = route_out_j.shape[2]
         link0 = reset_links(init_tx)
+        # per-(link, side) delivery chip, both sides — the flow gate
+        # inspects both heads before the FSM picks a direction.  Dummy
+        # padded links point at chip 0 with empty queues: inert.
+        rx_chip_cand = jnp.stack([links_j[:, 1], links_j[:, 0]], axis=1)
+        si2 = jnp.arange(2)[None, :]
+        li2 = lidx[:, None]
         init = _RingState(
             link=link0,
             h0=jnp.zeros((L, 2), jnp.int32),
@@ -815,6 +980,11 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
             busy_ns=jnp.zeros((L,), jnp.int32),
             busy_steps=jnp.zeros((L, 2), jnp.int32),
             q_drops=jnp.zeros((L, 2), jnp.int32),
+            n_pop=jnp.zeros((L, 2), jnp.int32),
+            xoff=jnp.zeros((L, 2), jnp.int32),
+            in_stall=jnp.zeros((L, 2), jnp.int32),
+            stall_steps=jnp.zeros((L, 2), jnp.int32),
+            credit_waits=jnp.zeros((L, 2), jnp.int32),
         )
 
         def body(s: _RingState, step_i):
@@ -839,23 +1009,72 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
                 jnp.min(jnp.where(f_rel, f_t, _BIG), axis=2))
             nxt = jnp.minimum(
                 jnp.where(p_rel, _BIG, p_t),
-                jnp.min(jnp.where(f_rel, _BIG, f_t), axis=2))
-            t_next = jnp.min(nxt, axis=1)                        # (L,)
+                jnp.min(jnp.where(f_rel, _BIG, f_t), axis=2))    # (L, 2)
+
+            # --- the earliest (release, key) head, BOTH sides -----------
+            # (release, insertion_key) lexicographic minimum in two int32
+            # stages (keys are unique reference slot ids per queue, so the
+            # key argmin over release ties is exact and matches the
+            # reference argmin's lowest-slot rule).  Computed before the
+            # FSM step because the flow-control gate must inspect each
+            # head's downstream targets; the send side's values are
+            # gathered out after the FSM picks a direction — identical
+            # math to a post-step send-side-only selection.
+            fk = jnp.take_along_axis(
+                s.fq_key, s.fh[..., None], axis=3)[..., 0]       # (L, 2, D)
+            cand_t = jnp.concatenate(
+                [p_t[:, :, None], f_t], axis=2)                  # (L,2,1+D)
+            cand_k = jnp.concatenate(
+                [s.h0[:, :, None], fk], axis=2)
+            rel_c = cand_t <= t_now[:, None, None]
+            t_best = jnp.min(jnp.where(rel_c, cand_t, _BIG), axis=2)
+            tie = rel_c & (cand_t == t_best[..., None])
+            best = jnp.argmin(jnp.where(tie, cand_k, no_key),
+                              axis=2).astype(jnp.int32)          # (L, 2)
+            from_pre = best == 0
+            d_best = jnp.maximum(best - 1, 0)
+            slot_f = s.fh[li2, si2, d_best]                      # (L, 2)
+            p_route = jnp.take_along_axis(
+                q0_dest, s.h0[:, :, None], axis=2)[..., 0]
+            p_inj = jnp.take_along_axis(
+                q0_inj, s.h0[:, :, None], axis=2)[..., 0]
+            cand_route = jnp.where(
+                from_pre, p_route, s.fq_dest[li2, si2, d_best, slot_f])
+            cand_inj = jnp.where(
+                from_pre, p_inj, s.fq_inj[li2, si2, d_best, slot_f])
+
+            # --- flow-control admission gate ----------------------------
+            # Identical inputs and formulas to the slot engines: the
+            # occupancy n_ins - n_pop is O(1) carry state, and the head
+            # route is exactly the slot engines' q_dest[q, amin] gather.
+            occ = s.n_ins - s.n_pop
+            blocked, xoff = _flow_gate(fc_mode, cap, xon, occ, s.xoff,
+                                       cand_route, rx_chip_cand,
+                                       route_out_j)
+            stalled = pend_side & blocked
+            stall_steps = s.stall_steps + stalled.astype(jnp.int32)
+            credit_waits = s.credit_waits + (
+                stalled & (s.in_stall == 0)).astype(jnp.int32)
 
             # --- conservative clock synchronization ---------------------
             # Identical contract to the reference engine (see
             # _slot_engine, including the per-link ``min(na + t_cycle)``
-            # insert bound); head releases are exact stand-ins: with any
-            # work pending the effective next-arrival collapses to the
-            # clock, and with none pending every head is the stream
-            # minimum.  The FSM only tests pending > 0, so the 0/1
-            # pending indicator transmits identically.
-            pend_any = pend_side[:, 0] | pend_side[:, 1]
-            na = jnp.where(pend_any, t_now, t_next)
+            # insert bound and the per-side head-of-line/stall rules);
+            # head releases are exact stand-ins: a side with work pending
+            # contributes the clock (gated: excluded), and a side with
+            # none has every head unreleased, so the head minimum IS the
+            # stream minimum — the one state where arrival times behind
+            # heads would be invisible here is exactly the state the
+            # head-of-line rule makes them irrelevant in.
+            na_side = jnp.where(
+                pend_side, jnp.where(blocked, _BIG, t_now[:, None]), nxt)
+            na = jnp.min(na_side, axis=1)                        # (L,)
+            t_next_g = jnp.min(jnp.where(pend_side, _BIG, nxt), axis=1)
             horizon = jnp.min(na)
-            t_next_eff = jnp.minimum(t_next, jnp.maximum(horizon, t_now))
+            t_next_eff = jnp.minimum(t_next_g,
+                                     jnp.maximum(horizon, t_now))
             safe = r_min <= jnp.min(na + t_cycle_v)              # (L, 2)
-            pend_safe = (pend_side & safe).astype(jnp.int32)
+            pend_safe = (pend_side & safe & ~blocked).astype(jnp.int32)
 
             # --- one micro-transaction on every link, batched -----------
             link, out = link_step_batch(
@@ -872,46 +1091,17 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
             busy_ns = s.busy_ns + jnp.where(did, link.t - t_now, 0)
             send_side = jnp.where(out.tx_l == 1, 0, 1)           # (L,)
 
-            # --- pop the earliest (release, key) head on the send side --
-            h_sel = s.h0[lidx, send_side]                        # (L,)
-            fh_sel = s.fh[lidx, send_side]                       # (L, D)
-            fk_sel = jnp.take_along_axis(
-                s.fq_key[lidx, send_side],
-                fh_sel[..., None], axis=2)[..., 0]               # (L, D)
-            cand_t = jnp.concatenate(
-                [p_t[lidx, send_side][:, None],
-                 f_t[lidx, send_side]], axis=1)                  # (L, 1+D)
-            cand_k = jnp.concatenate(
-                [h_sel[:, None], fk_sel], axis=1)
-            # (release, insertion_key) lexicographic minimum in two int32
-            # stages (keys are unique reference slot ids per queue, so the
-            # key argmin over release ties is exact and matches the
-            # reference argmin's lowest-slot rule).
-            rel = cand_t <= t_now[:, None]
-            t_best = jnp.min(jnp.where(rel, cand_t, _BIG), axis=1)
-            tie = rel & (cand_t == t_best[:, None])
-            best = jnp.argmin(jnp.where(tie, cand_k, no_key),
-                              axis=1).astype(jnp.int32)          # (L,)
-            from_pre = best == 0
-            d_best = jnp.maximum(best - 1, 0)
-            slot_f = fh_sel[lidx, d_best]
-            ev_route = jnp.where(
-                from_pre,
-                jnp.take_along_axis(
-                    q0_dest, s.h0[:, :, None],
-                    axis=2)[..., 0][lidx, send_side],
-                s.fq_dest[lidx, send_side, d_best, slot_f])
-            ev_inj = jnp.where(
-                from_pre,
-                jnp.take_along_axis(
-                    q0_inj, s.h0[:, :, None],
-                    axis=2)[..., 0][lidx, send_side],
-                s.fq_inj[lidx, send_side, d_best, slot_f])
+            # --- pop the send side's head, return its credit ------------
+            fp_s = from_pre[lidx, send_side]                     # (L,)
+            db_s = d_best[lidx, send_side]
+            ev_route = cand_route[lidx, send_side]
+            ev_inj = cand_inj[lidx, send_side]
             h0 = s.h0.at[lidx, send_side].add(
-                (did & from_pre).astype(jnp.int32))
-            fh = s.fh.at[lidx, send_side, d_best].add(
-                (did & ~from_pre).astype(jnp.int32))
+                (did & fp_s).astype(jnp.int32))
+            fh = s.fh.at[lidx, send_side, db_s].add(
+                (did & ~fp_s).astype(jnp.int32))
             sent = s.sent.at[lidx, send_side].add(did32)
+            n_pop = s.n_pop.at[lidx, send_side].add(did32)
 
             # --- deliver and/or replicate -------------------------------
             # The replication-table row of (rx_chip, route) decides both:
@@ -932,9 +1122,12 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
             fwd_f, fqk_f, wt_f = _replicate(route_out_j, route_wt_j,
                                             rx_chip, ev_route, did)
             n_ins_f = s.n_ins.reshape(-1)
-            # ``key`` is the reference slot id: the pop tie-break key
+            # ``key`` is the reference slot id: the pop tie-break key.
+            # Only drop mode discards at append time; the stall modes
+            # are lossless and the stream quotas already bound storage.
+            app_cap = jnp.where(fc_mode == 0, cap, jnp.int32(_BIG))
             fq_g, key, app, dropped = _forward_slots(
-                fwd_f, fqk_f, n_ins_f, cap, Q)
+                fwd_f, fqk_f, n_ins_f, app_cap, Q)
             d_ins = jnp.repeat(in_rank_j[lidx, rx_side], K)      # (L·K,)
             stream = fq_g * D + d_ins          # flat stream id
             stream_s = jnp.where(app, stream, Q * D)
@@ -977,7 +1170,10 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
                 prev_mode_l=link.xl.mode, n_sw=n_sw,
                 log_inj=log_inj, log_del=log_del, log_dest=log_dest,
                 log_n=log_n, drops=drops,
-                busy_ns=busy_ns, busy_steps=busy_steps, q_drops=q_drops)
+                busy_ns=busy_ns, busy_steps=busy_steps, q_drops=q_drops,
+                n_pop=n_pop, xoff=xoff,
+                in_stall=stalled.astype(jnp.int32),
+                stall_steps=stall_steps, credit_waits=credit_waits)
             return ns, None
 
         # --- chunked steps inside while_loop: exit within one chunk of
@@ -1006,7 +1202,8 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
                                       (init, jnp.int32(0)))
         return (final.log_n, final.log_inj, final.log_del, final.log_dest,
                 final.sent, final.n_sw, final.link.t, final.drops,
-                final.busy_ns, final.busy_steps, final.q_drops)
+                final.busy_ns, final.busy_steps, final.q_drops,
+                final.stall_steps, final.credit_waits)
 
     # no donation: the prefill arrays are read-only gather sources here
     # (no same-shaped output exists to alias them into)
@@ -1028,6 +1225,8 @@ def simulate_fabric(topo: Topology,
                     initial_tx: int | np.ndarray = 1,
                     max_steps: int | None = None,
                     queue_capacity: int | None = None,
+                    flow_control: str = "drop",
+                    xon: int | None = None,
                     engine: str = "auto",
                     chunk_size: int = DEFAULT_CHUNK_SIZE) -> FabricResult:
     """Simulate an N-chip fabric of bi-directional AER links.
@@ -1059,11 +1258,21 @@ def simulate_fabric(topo: Topology,
       initial_tx:  scalar or (L,) — which side of each link resets into TX.
       max_steps:   global micro-transaction count; default scales with the
                    total hop-transmissions the traffic needs.
-      queue_capacity: per-endpoint slot budget — slots are one-shot, so
-                   this bounds the total events routed *through* an
-                   endpoint, not instantaneous depth.  Defaults to the
-                   expanded event count (lossless).  Smaller values may
-                   drop forwards, counted in ``FabricResult.drops``.
+      queue_capacity: per-endpoint budget.  In drop mode slots are
+                   one-shot, so this bounds the total events routed
+                   *through* an endpoint (defaults to the expanded event
+                   count — lossless); smaller values may drop forwards,
+                   counted in ``FabricResult.drops``.  In the stall
+                   modes it bounds instantaneous occupancy instead.
+      flow_control: ``"drop"`` (default, discard at full queues) |
+                   ``"credit"`` (stall the upstream pop until occupancy
+                   falls below ``queue_capacity``) | ``"onoff"``
+                   (xon/xoff hysteresis on the latched threshold bit).
+                   See the module docstring; the stall modes require a
+                   finite ``queue_capacity`` and guarantee
+                   ``drops == 0``.
+      xon:         on/off low-water mark (``"onoff"`` only); defaults
+                   to ``queue_capacity // 2``.
       engine:      ``"ring"`` (O(1)-per-step streams, early exit, the
                    default via ``"auto"``), ``"reference"`` (PR 1 flat
                    slot scan, the semantics oracle) or ``"pallas"``
@@ -1076,7 +1285,8 @@ def simulate_fabric(topo: Topology,
     fab = Fabric(topo, routing=routing, timing=timing,
                  queues=QueuePolicy(capacity=queue_capacity,
                                     max_burst=max_burst,
-                                    initial_tx=initial_tx),
+                                    initial_tx=initial_tx,
+                                    flow=flow_control, xon=xon),
                  engine=EngineSpec(name=engine, chunk_size=chunk_size),
                  addr=addr, mcast=mcast)
     return fab.run(spec, max_steps=max_steps)

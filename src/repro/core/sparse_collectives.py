@@ -22,7 +22,6 @@ baselines and the wire-volume accounting used by benchmarks/tables.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

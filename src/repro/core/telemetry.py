@@ -40,6 +40,15 @@ The counters:
     Capacity drops charged to the *target* endpoint queue, weighted by
     the forfeited deliveries (an in-fabric multicast copy carries its
     whole subtree), so ``q_drops.sum() == FabricResult.drops`` exactly.
+``stall_steps (L, 2)``
+    Flow-control stalls: micro-transactions during which the endpoint
+    queue had released work but was *gated* by a full (credit) or
+    xoff'd (on/off) downstream queue.  Always zero in drop mode — the
+    handshake never withholds an ack there.
+``credit_waits (L, 2)``
+    Number of distinct stall *episodes* (transitions into the stalled
+    state) per endpoint queue — how often the sender had to park and
+    wait for a credit return, as opposed to how long (``stall_steps``).
 
 ``LinkLoad`` is the per-link roll-up the routing policies consume.
 """
@@ -61,16 +70,18 @@ class Telemetry(NamedTuple):
     busy_ns: jnp.ndarray     # (L,)  ns the link spent transmitting
     busy_steps: jnp.ndarray  # (L, 2) steps with released backlog, per side
     q_drops: jnp.ndarray     # (L, 2) weighted drops per endpoint queue
+    stall_steps: jnp.ndarray  # (L, 2) steps gated by flow control
+    credit_waits: jnp.ndarray  # (L, 2) stall episodes (edges into stall)
 
 
 def merge_telemetry(parts: list[Telemetry]) -> Telemetry:
     """Sum counters across sub-runs (the epoch merge: counters are
     extensive quantities, so a partitioned run's telemetry is the sum of
-    its parts)."""
-    return Telemetry(
-        busy_ns=sum(np.asarray(p.busy_ns, np.int64) for p in parts),
-        busy_steps=sum(np.asarray(p.busy_steps, np.int64) for p in parts),
-        q_drops=sum(np.asarray(p.q_drops, np.int64) for p in parts))
+    its parts).  Generic over ``Telemetry._fields`` so a new counter can
+    never be silently dropped from the merge."""
+    return Telemetry(*(
+        sum(np.asarray(getattr(p, f), np.int64) for p in parts)
+        for f in Telemetry._fields))
 
 
 class LinkLoad(NamedTuple):
@@ -83,23 +94,27 @@ class LinkLoad(NamedTuple):
                       behind either endpoint (queue-pressure integral).
     ``drops``         (L,) weighted capacity drops charged to the link's
                       endpoint queues.
+    ``stalls``        (L,) flow-control stall steps charged to the
+                      link's endpoint queues (zero in drop mode).
     """
     traversals: np.ndarray
     occupancy: np.ndarray
     backlog_steps: np.ndarray
     drops: np.ndarray
+    stalls: np.ndarray
 
     def table(self, links: np.ndarray | None = None) -> str:
         """Human-readable per-link table (used by the examples)."""
         lines = [f"  {'link':<8}{'trav':>6}{'occ':>7}{'backlog':>9}"
-                 f"{'drops':>7}"]
+                 f"{'drops':>7}{'stalls':>8}"]
         for l in range(len(self.traversals)):
             name = (f"{l}:{links[l][0]}-{links[l][1]}"
                     if links is not None else str(l))
             lines.append(f"  {name:<8}{int(self.traversals[l]):>6}"
                          f"{100.0 * self.occupancy[l]:>6.0f}%"
                          f"{int(self.backlog_steps[l]):>9}"
-                         f"{int(self.drops[l]):>7}")
+                         f"{int(self.drops[l]):>7}"
+                         f"{int(self.stalls[l]):>8}")
         return "\n".join(lines)
 
 
@@ -123,5 +138,6 @@ def link_load(result) -> LinkLoad:
     occupancy = np.asarray(tel.busy_ns, np.float64) / float(span)
     backlog = np.asarray(tel.busy_steps, np.int64).sum(axis=1)
     drops = np.asarray(tel.q_drops, np.int64).sum(axis=1)
+    stalls = np.asarray(tel.stall_steps, np.int64).sum(axis=1)
     return LinkLoad(traversals=traversals, occupancy=occupancy,
-                    backlog_steps=backlog, drops=drops)
+                    backlog_steps=backlog, drops=drops, stalls=stalls)

@@ -64,8 +64,8 @@ from ..core.protocol_sim import BIG_NS
 _BIG = int(BIG_NS)
 
 
-def _scan_kernel(q_ref, t_ref, pend_ref, rmin_ref, nxt_ref, amin_ref,
-                 busy_ref):
+def _scan_kernel(q_ref, qd_ref, t_ref, pend_ref, rmin_ref, nxt_ref,
+                 amin_ref, busy_ref, route_ref):
     q = q_ref[...]                       # (rows, C) int32 release times
     t = t_ref[...]                       # (rows,) int32 queue clocks
     rows, ncols = q.shape
@@ -80,44 +80,51 @@ def _scan_kernel(q_ref, t_ref, pend_ref, rmin_ref, nxt_ref, amin_ref,
     nxt_ref[...] = jnp.min(jnp.where(released, _BIG, q), axis=1)
     # first-minimum-index == jnp.argmin (all-BIG rows resolve to slot 0)
     iota_c = jax.lax.broadcasted_iota(jnp.int32, (rows, ncols), 1)
-    amin_ref[...] = jnp.min(
+    amin = jnp.min(
         jnp.where(val == row_min[:, None], iota_c, ncols), axis=1)
+    amin_ref[...] = amin
     # 0/1 backlog indicator: the released mask is already in VMEM, so the
     # telemetry plane's per-step counter costs one more reduction of the
     # same tile instead of a second O(Q*C) pass off-kernel
     busy_ref[...] = (pend > 0).astype(jnp.int32)
+    # head route = q_dest[row, amin] as a one-hot select (no gather
+    # lowering needed): amin matches exactly one column per row, so the
+    # masked sum IS the gather.  Feeds the flow-control admission gate.
+    route_ref[...] = jnp.sum(
+        jnp.where(iota_c == amin[:, None], qd_ref[...], 0), axis=1)
 
 
-def fabric_queue_step_pallas(q_time: jnp.ndarray, t_q: jnp.ndarray, *,
+def fabric_queue_step_pallas(q_time: jnp.ndarray, q_dest: jnp.ndarray,
+                             t_q: jnp.ndarray, *,
                              rows_per_block: int = 8,
                              interpret: bool = True):
     """Fused queue-step reductions.
 
     Args:
       q_time: (Q, C) int32 release times, ``BIG_NS`` = empty slot.
+      q_dest: (Q, C) int32 route ids riding the slots.
       t_q:    (Q,) int32 per-queue clock.
 
-    Returns ``(pend, r_min, nxt, amin, busy)``, each (Q,) int32
-    (``busy`` = 0/1 released-backlog indicator for the telemetry plane).
+    Returns ``(pend, r_min, nxt, amin, busy, head_route)``, each (Q,)
+    int32 (``busy`` = 0/1 released-backlog indicator for the telemetry
+    plane; ``head_route`` = the would-pop slot's route id for the
+    flow-control gate).
     """
     nq, _ = q_time.shape
     assert nq % rows_per_block == 0, (nq, rows_per_block)
     grid = (nq // rows_per_block,)
 
-    out_shape = [jax.ShapeDtypeStruct((nq,), jnp.int32) for _ in range(5)]
+    out_shape = [jax.ShapeDtypeStruct((nq,), jnp.int32) for _ in range(6)]
     row_spec = pl.BlockSpec((rows_per_block,), lambda i: (i,))
+    tile = pl.BlockSpec((rows_per_block, q_time.shape[1]), lambda i: (i, 0))
     return pl.pallas_call(
         _scan_kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((rows_per_block, q_time.shape[1]),
-                         lambda i: (i, 0)),
-            row_spec,
-        ],
-        out_specs=[row_spec, row_spec, row_spec, row_spec, row_spec],
+        in_specs=[tile, tile, row_spec],
+        out_specs=[row_spec] * 6,
         out_shape=out_shape,
         interpret=interpret,
-    )(q_time, t_q)
+    )(q_time, q_dest, t_q)
 
 
 def _update_kernel(qt_ref, qd_ref, qi_ref, popq_ref, pops_ref,

@@ -134,19 +134,21 @@ def _rows_per_block_for(nq: int, rows_per_block: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=("interpret", "use_ref",
                                              "rows_per_block"))
-def fabric_queue_scan(q_time: jnp.ndarray, t_q: jnp.ndarray, *,
+def fabric_queue_scan(q_time: jnp.ndarray, q_dest: jnp.ndarray,
+                      t_q: jnp.ndarray, *,
                       interpret: bool | None = None, use_ref: bool = False,
                       rows_per_block: int = 8):
     """Fused per-queue released-count / min-release / next-arrival /
-    argmin-pop / backlog-indicator over (Q, C) slot arrays (the fabric
-    engine's O(C) step).
+    argmin-pop / backlog-indicator / head-route over (Q, C) slot arrays
+    (the fabric engine's O(C) step).
 
-    Returns ``(pend, r_min, nxt, amin, busy)``, each (Q,) int32.
+    Returns ``(pend, r_min, nxt, amin, busy, head_route)``, each (Q,)
+    int32.
     """
     if use_ref:
-        return ref.fabric_queue_scan(q_time, t_q)
+        return ref.fabric_queue_scan(q_time, q_dest, t_q)
     return fabric_queue_step_pallas(
-        q_time, t_q,
+        q_time, q_dest, t_q,
         rows_per_block=_rows_per_block_for(q_time.shape[0], rows_per_block),
         interpret=_auto_interpret(interpret))
 

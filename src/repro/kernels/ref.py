@@ -88,15 +88,21 @@ def lif_step(v: jnp.ndarray, i_syn: jnp.ndarray, decay: float, v_th: float,
 from ..core.protocol_sim import BIG_NS as _QBIG  # noqa: E402
 
 
-def fabric_queue_scan(q_time: jnp.ndarray, t_q: jnp.ndarray):
+def fabric_queue_scan(q_time: jnp.ndarray, q_dest: jnp.ndarray,
+                      t_q: jnp.ndarray):
     """Per-queue released-count / min-release / next-arrival / argmin-pop
-    / backlog indicator.
+    / backlog indicator / head route.
 
-    Returns ``(pend, r_min, nxt, amin, busy)``, each (Q,) int32; ``amin``
-    is the slot a pop must consume (lowest released slot of the minimum
-    release time — FIFO among simultaneous arrivals; 0 for empty rows);
-    ``busy`` is the 0/1 released-work indicator (``pend > 0``) the
-    telemetry plane accumulates per micro-transaction.
+    Returns ``(pend, r_min, nxt, amin, busy, head_route)``, each (Q,)
+    int32; ``amin`` is the slot a pop must consume (lowest released slot
+    of the minimum release time — FIFO among simultaneous arrivals; 0
+    for empty rows); ``busy`` is the 0/1 released-work indicator
+    (``pend > 0``) the telemetry plane accumulates per
+    micro-transaction; ``head_route`` is ``q_dest[q, amin[q]]`` — the
+    route id a pop of this queue would dispatch, read here so the
+    flow-control gate can inspect each head's downstream targets
+    *before* the FSM step without a second O(C) pass (garbage-but-valid
+    for empty rows, exactly like the engines' post-step gather).
     """
     released = q_time <= t_q[:, None]
     pend = jnp.sum(released.astype(jnp.int32), axis=1)
@@ -105,7 +111,8 @@ def fabric_queue_scan(q_time: jnp.ndarray, t_q: jnp.ndarray):
     nxt = jnp.min(jnp.where(released, _QBIG, q_time), axis=1)
     amin = jnp.argmin(val, axis=1).astype(jnp.int32)
     busy = (pend > 0).astype(jnp.int32)
-    return pend, r_min, nxt, amin, busy
+    head_route = jnp.take_along_axis(q_dest, amin[:, None], axis=1)[:, 0]
+    return pend, r_min, nxt, amin, busy, head_route
 
 
 def fabric_queue_update(q_time, q_dest, q_inj, pop_q, pop_slot,

@@ -20,7 +20,6 @@ production chunked-associative-scan path (tests/test_kernels_scan.py).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

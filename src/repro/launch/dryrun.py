@@ -41,7 +41,7 @@ from ..models.model import build_model
 from ..optim import adamw
 from ..parallel.compat import set_mesh
 from ..parallel.sharding import make_rules, partition_params, use_rules
-from ..runtime.train_loop import TrainState, init_state, make_train_step
+from ..runtime.train_loop import TrainState, make_train_step
 from .mesh import make_production_mesh
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",

@@ -21,7 +21,6 @@ once (reported in ``unknown_loops``).
 
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 

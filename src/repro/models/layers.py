@@ -13,9 +13,6 @@ Conventions:
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ Block kinds:
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

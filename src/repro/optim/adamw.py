@@ -16,8 +16,8 @@ class AdamWState(NamedTuple):
 
 
 def init(params) -> AdamWState:
-    zeros = lambda t: jax.tree.map(
-        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    def zeros(t):
+        return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
     return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
                       nu=zeros(params))
 

@@ -19,7 +19,6 @@ microbatch's backward (the TX/RX-FIFO double-buffering analogue).
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -29,8 +28,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..core import sparse_collectives as sc
 from ..optim import adamw
 from ..parallel.compat import shard_map
-from ..parallel.sharding import (Rules, partition_params, shard_activation,
-                                 use_rules)
+from ..parallel.sharding import Rules, partition_params, use_rules
 
 
 METRIC_KEYS = ("nll", "aux_loss", "z_loss", "drop_frac", "loss",

@@ -88,12 +88,14 @@ print("AER-OK", err0, errT)
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_ring_schedules_equal_psum():
     out = run_with_devices(RING_CODE, 8)
     assert "RING-OK" in out
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_aer_allreduce_conservation_and_convergence():
     out = run_with_devices(AER_CODE, 8)
     assert "AER-OK" in out

@@ -62,6 +62,7 @@ print("ELASTIC-OK", losses[7], losses[-1])
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_elastic_resume_on_smaller_mesh():
     out = run_with_devices(CODE, 4, timeout=1800)
     assert "ELASTIC-OK" in out

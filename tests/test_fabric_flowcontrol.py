@@ -1,0 +1,257 @@
+"""Credit-based flow control: lossless transport, bit-exact engines.
+
+``QueuePolicy.flow`` selects what a full downstream queue does to an
+arriving event: ``"drop"`` (the paper's lossy default) discards it,
+``"credit"`` stalls the upstream pop in place until the queue returns a
+credit, ``"onoff"`` stalls once occupancy reaches capacity and resumes
+only when it drains to the ``xon`` threshold.  The contracts under test:
+
+- every mode keeps ``delivered + drops == injected`` exact, and the
+  lossless modes keep ``drops == 0`` under arbitrary overload;
+- the three engines agree bit-for-bit in every mode, telemetry included
+  (stalling changes WHEN pops happen, so any divergence in the
+  head-of-line gating shows up immediately);
+- ``onoff`` with ``xon = capacity - 1`` IS credit flow control;
+- a never-binding capacity makes all three modes identical — flow
+  control must cost nothing when it never engages;
+- flow mode / capacity / xon travel as dynamic operands: switching
+  modes must not grow the engine's shape-bucket or jit cache.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from tests._hypothesis_compat import given, settings, st
+
+from repro.core import network as net
+from repro.core import traffic as tr
+from repro.core.adaptive import AdaptiveRouting
+from repro.core.fabric import FLOW_MODES, Fabric, MulticastPolicy, QueuePolicy
+from repro.core.router import (AddressSpec, MulticastTable, line_topology,
+                               ring_topology)
+
+EQ = net.assert_results_equal
+
+
+def _hot(key, n_chips, epc, gap=100.0, hf=0.9):
+    return tr.hot_spot(jax.random.PRNGKey(key), n_chips, epc,
+                       mean_gap_ns=gap, hot_frac=hf)
+
+
+def _run(topo, spec, flow, capacity, engine="ring", xon=None, **kw):
+    return Fabric(topo, queues=QueuePolicy(capacity=capacity, flow=flow,
+                                           xon=xon),
+                  engine=engine, **kw).run(spec)
+
+
+class TestPolicyValidation:
+    def test_flow_modes_constant_matches_engine_encoding(self):
+        assert FLOW_MODES == ("drop", "credit", "onoff")
+
+    def test_unknown_flow_mode(self):
+        with pytest.raises(ValueError, match="flow"):
+            QueuePolicy(capacity=4, flow="xonxoff")
+
+    def test_lossless_flow_requires_capacity(self):
+        with pytest.raises(ValueError, match="capacity"):
+            QueuePolicy(flow="credit")
+
+    def test_xon_only_with_onoff(self):
+        with pytest.raises(ValueError, match="xon"):
+            QueuePolicy(capacity=4, flow="credit", xon=2)
+
+    @pytest.mark.parametrize("xon", [-1, 4, 7])
+    def test_xon_range(self, xon):
+        with pytest.raises(ValueError, match="xon"):
+            QueuePolicy(capacity=4, flow="onoff", xon=xon)
+
+
+class TestLosslessContract:
+    def test_destination_drain_returns_credits(self):
+        """2-chip line, capacity far below the traffic volume: the
+        delivery queue keeps draining, credits keep returning, and every
+        event lands despite the tiny budget."""
+        n = 24
+        spec = tr.TrafficSpec(src=jnp.zeros(n, jnp.int32),
+                              t=jnp.arange(n, dtype=jnp.int32) * 30,
+                              dest=jnp.ones(n, jnp.int32))
+        res = _run(line_topology(2), spec, "credit", capacity=4)
+        assert int(res.delivered) == n and int(res.drops) == 0
+
+    @pytest.mark.parametrize("flow", ["credit", "onoff"])
+    def test_overload_is_lossless_and_stalls(self, flow):
+        """Saturating hot-spot with a binding capacity: zero drops, and
+        the backpressure telemetry proves the cap actually bound."""
+        res = _run(ring_topology(8), _hot(0, 8, 12), flow, capacity=4)
+        assert int(res.delivered) == res.injected
+        assert int(res.drops) == 0
+        assert int(np.asarray(res.telemetry.stall_steps).sum()) > 0
+
+    def test_conservation_every_mode(self):
+        spec = _hot(1, 8, 12)
+        for flow in FLOW_MODES:
+            res = _run(ring_topology(8), spec, flow, capacity=12)
+            assert (int(res.delivered) + int(res.drops)
+                    == res.injected), flow
+
+    def test_drop_mode_matches_legacy_and_never_stalls(self):
+        """flow="drop" with a binding capacity is the pre-flow-control
+        fabric bit-for-bit, with zeroed stall counters."""
+        topo, spec = ring_topology(8), _hot(2, 8, 12)
+        legacy = Fabric(topo, queues=QueuePolicy(capacity=12)).run(spec)
+        res = _run(topo, spec, "drop", capacity=12)
+        EQ(legacy, res, "drop-vs-legacy")
+        assert int(res.drops) > 0  # the capacity binds in this workload
+        assert not np.asarray(res.telemetry.stall_steps).any()
+        assert not np.asarray(res.telemetry.credit_waits).any()
+
+
+class TestCrossEngine:
+    @pytest.mark.parametrize("flow", ["credit", "onoff"])
+    @pytest.mark.parametrize("pattern", ["hot", "bursty"])
+    def test_ring_vs_reference(self, flow, pattern):
+        spec = (_hot(3, 8, 12) if pattern == "hot" else
+                tr.bursty(jax.random.PRNGKey(3), 8, 3))
+        a = _run(ring_topology(8), spec, flow, capacity=5)
+        b = _run(ring_topology(8), spec, flow, capacity=5,
+                 engine="reference")
+        EQ(a, b, f"{flow}/{pattern}")
+
+    @pytest.mark.parametrize("flow", ["credit", "onoff"])
+    def test_pallas_engine(self, flow):
+        spec = _hot(4, 4, 8)
+        a = _run(ring_topology(4), spec, flow, capacity=4)
+        b = _run(ring_topology(4), spec, flow, capacity=4,
+                 engine="pallas")
+        EQ(a, b, f"{flow}/pallas")
+
+
+class TestModeEquivalences:
+    def test_onoff_at_cap_minus_one_is_credit(self):
+        """xon = capacity - 1 resumes on every returned credit — the
+        on/off policy degenerates to credit flow control exactly."""
+        topo, spec = ring_topology(8), _hot(5, 8, 12)
+        EQ(_run(topo, spec, "credit", capacity=5),
+           _run(topo, spec, "onoff", capacity=5, xon=4),
+           "onoff(xon=cap-1)-vs-credit")
+
+    def test_never_binding_capacity_makes_modes_identical(self):
+        """With capacity above any occupancy the fabric reaches, flow
+        control never engages and all three modes are the same run."""
+        topo, spec = ring_topology(8), _hot(6, 8, 12)
+        runs = [_run(topo, spec, flow, capacity=512)
+                for flow in FLOW_MODES]
+        for flow, res in zip(FLOW_MODES[1:], runs[1:]):
+            EQ(runs[0], res, f"unbounded/{flow}")
+            assert not np.asarray(res.telemetry.stall_steps).any()
+        assert int(runs[0].drops) == 0
+
+
+class TestMulticastInteraction:
+    def test_in_fabric_multicast_lossless_multiset(self):
+        """Credit flow control composes with in-fabric replication: the
+        tagged workload delivers the identical destination multiset as
+        source expansion, with zero drops despite a binding capacity."""
+        topo = ring_topology(8)
+        addr = AddressSpec()
+        mc = MulticastTable(np.ones((1, 8), bool))
+        n = 24
+        spec = tr.TrafficSpec(
+            src=jnp.asarray(np.arange(n) % 8, jnp.int32),
+            t=jnp.asarray(np.arange(n) * 300, jnp.int32),
+            dest=jnp.asarray(addr.pack_multicast(np.zeros(n, np.int64))))
+
+        def run(mode, engine="ring"):
+            return Fabric(topo, addr=addr, engine=engine,
+                          queues=QueuePolicy(capacity=16, flow="credit"),
+                          mcast=MulticastPolicy(mode, mc)).run(spec)
+
+        infab, source = run("in_fabric"), run("source_expand")
+        assert int(infab.drops) == 0 and int(source.drops) == 0
+        assert (net.delivery_multiset(infab)
+                == net.delivery_multiset(source))
+        EQ(infab, run("in_fabric", engine="reference"),
+           "mcast/credit ring-vs-ref")
+
+
+class TestCompileNeutrality:
+    def test_flow_modes_share_one_bucket_and_jit_entry(self):
+        topo, spec = ring_topology(8), _hot(7, 8, 12)
+        fab = Fabric(topo, queues=QueuePolicy(capacity=12), engine="ring")
+        cf = fab.compile(spec)
+        fab.run(spec)
+        size0 = cf.cache_size()
+        for flow in ("credit", "onoff"):
+            other = Fabric(topo, queues=QueuePolicy(capacity=12,
+                                                    flow=flow),
+                           engine="ring")
+            assert other.compile(spec, warm=False).bucket == cf.bucket
+            other.run(spec)
+        assert cf.cache_size() == size0
+
+
+class TestEventDrivenAdaptation:
+    def _cfg(self, **kw):
+        base = dict(policy="min_backlog", epochs=3, alpha=4.0, ema=0.5)
+        base.update(kw)
+        return AdaptiveRouting(**base)
+
+    def test_trigger_validation(self):
+        with pytest.raises(ValueError, match="trigger"):
+            self._cfg(trigger="load_spike")
+        with pytest.raises(ValueError, match="threshold"):
+            self._cfg(trigger="backlog_burst", threshold=-1.0)
+
+    def test_huge_threshold_never_rebuilds(self):
+        """An unreachable burst threshold keeps the static tables for
+        every epoch — the run IS the static epoched run, and the
+        per-epoch report says why (rebuilt=False throughout)."""
+        topo, spec = ring_topology(8), _hot(8, 8, 24)
+        queues = QueuePolicy(capacity=24)
+        fab = Fabric(topo, routing=self._cfg(trigger="backlog_burst",
+                                             threshold=1e9),
+                     queues=queues)
+        res = fab.run(spec)
+        assert [r.rebuilt for r in fab.last_report.records[:-1]] == \
+            [False, False]
+        static = Fabric(topo, queues=queues)
+        EQ(res, static.run_epochs(spec, epochs=3), "never-rebuild")
+
+    def test_zero_threshold_is_every_epoch(self):
+        """threshold=0 fires on any nonzero congestion signal: on a
+        congested workload it reproduces the unconditional per-epoch
+        rebuild bit-for-bit."""
+        topo, spec = ring_topology(8), _hot(9, 8, 24)
+        queues = QueuePolicy(capacity=24)
+        burst = Fabric(topo, routing=self._cfg(trigger="backlog_burst",
+                                               threshold=0.0),
+                       queues=queues)
+        res_b = burst.run(spec)
+        every = Fabric(topo, routing=self._cfg(), queues=queues)
+        EQ(res_b, every.run(spec), "zero-threshold-vs-epoch")
+        assert all(r.rebuilt for r in burst.last_report.records[:-1])
+        # the last epoch has no successor to rebuild for
+        assert burst.last_report.records[-1].rebuilt is False
+
+
+class TestTimeShiftInvariance:
+    @given(dt=st.integers(min_value=0, max_value=10**6))
+    @settings(max_examples=20, deadline=None)
+    def test_credit_latencies_shift_invariant(self, dt):
+        """Shifting every injection by a constant shifts every stall and
+        delivery by the same constant: latencies, drops and stall
+        telemetry are unchanged."""
+        topo = ring_topology(4)
+        spec = _hot(10, 4, 8)
+        shifted = tr.TrafficSpec(src=spec.src, t=spec.t + jnp.int32(dt),
+                                 dest=spec.dest)
+        a = _run(topo, spec, "credit", capacity=4)
+        b = _run(topo, shifted, "credit", capacity=4)
+        np.testing.assert_array_equal(
+            np.asarray(net.delivered_latencies(a)),
+            np.asarray(net.delivered_latencies(b)))
+        assert int(a.drops) == int(b.drops) == 0
+        np.testing.assert_array_equal(
+            np.asarray(a.telemetry.stall_steps),
+            np.asarray(b.telemetry.stall_steps))

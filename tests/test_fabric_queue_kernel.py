@@ -19,8 +19,12 @@ BIG = int(ref._QBIG)
 def _random_queues(rng, nq, ncols, empty_frac=0.4, t_hi=60_000):
     q_time = rng.integers(0, 50_000, (nq, ncols)).astype(np.int32)
     q_time[rng.random((nq, ncols)) < empty_frac] = BIG
+    q_dest = rng.integers(0, 9, (nq, ncols)).astype(np.int32)
     t_q = rng.integers(0, t_hi, (nq,)).astype(np.int32)
-    return jnp.asarray(q_time), jnp.asarray(t_q)
+    return jnp.asarray(q_time), jnp.asarray(q_dest), jnp.asarray(t_q)
+
+
+SCAN_OUTS = ("pend", "r_min", "nxt", "amin", "busy", "head_route")
 
 
 class TestQueueScanKernel:
@@ -28,11 +32,10 @@ class TestQueueScanKernel:
                                           (2, 5)])
     def test_matches_oracle(self, nq, ncols):
         rng = np.random.default_rng(nq * 1000 + ncols)
-        q_time, t_q = _random_queues(rng, nq, ncols)
-        want = ref.fabric_queue_scan(q_time, t_q)
-        got = ops.fabric_queue_scan(q_time, t_q)
-        for w, g, name in zip(want, got, ("pend", "r_min", "nxt", "amin",
-                                          "busy")):
+        q_time, q_dest, t_q = _random_queues(rng, nq, ncols)
+        want = ref.fabric_queue_scan(q_time, q_dest, t_q)
+        got = ops.fabric_queue_scan(q_time, q_dest, t_q)
+        for w, g, name in zip(want, got, SCAN_OUTS):
             np.testing.assert_array_equal(np.asarray(w), np.asarray(g),
                                           err_msg=name)
 
@@ -41,23 +44,32 @@ class TestQueueScanKernel:
         first slot, exactly like jnp.argmin."""
         q_time = jnp.asarray([[50, 10, 10, BIG], [BIG, BIG, BIG, BIG],
                               [7, 7, 7, 7], [BIG, 3, BIG, 3]], jnp.int32)
+        q_dest = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8],
+                              [4, 3, 2, 1], [8, 7, 6, 5]], jnp.int32)
         t_q = jnp.asarray([100, 100, 100, 100], jnp.int32)
-        want = ref.fabric_queue_scan(q_time, t_q)
-        got = ops.fabric_queue_scan(q_time, t_q)
+        want = ref.fabric_queue_scan(q_time, q_dest, t_q)
+        got = ops.fabric_queue_scan(q_time, q_dest, t_q)
         np.testing.assert_array_equal(np.asarray(got[3]), [1, 0, 0, 1])
+        # head_route rides the winning (tie-broken) slot
+        np.testing.assert_array_equal(np.asarray(got[5]), [2, 5, 4, 7])
         for w, g in zip(want, got):
             np.testing.assert_array_equal(np.asarray(w), np.asarray(g))
 
     def test_empty_and_all_released_rows(self):
         q_time = jnp.asarray([[BIG] * 6, [1, 2, 3, 4, 5, 6]], jnp.int32)
+        q_dest = jnp.asarray([[9, 8, 7, 6, 5, 4], [3, 1, 4, 1, 5, 9]],
+                             jnp.int32)
         t_q = jnp.asarray([0, 10], jnp.int32)
-        pend, r_min, nxt, amin, busy = [np.asarray(x) for x in
-                                        ops.fabric_queue_scan(q_time, t_q)]
+        pend, r_min, nxt, amin, busy, head_route = [
+            np.asarray(x) for x in
+            ops.fabric_queue_scan(q_time, q_dest, t_q)]
         assert pend.tolist() == [0, 6]
         assert r_min.tolist() == [BIG, 1]
         assert nxt.tolist() == [BIG, BIG]
         assert amin.tolist() == [0, 0]
         assert busy.tolist() == [0, 1]  # the telemetry plane's indicator
+        # empty rows resolve to slot 0: garbage-but-valid head route
+        assert head_route.tolist() == [9, 3]
 
 
 class TestQueueUpdateKernel:
@@ -65,8 +77,7 @@ class TestQueueUpdateKernel:
                                               (6, 17, 3)])
     def test_matches_oracle(self, nq, ncols, nlk):
         rng = np.random.default_rng(nq * 77 + nlk)
-        q_time, _ = _random_queues(rng, nq, ncols)
-        q_dest = jnp.asarray(rng.integers(0, 9, (nq, ncols)), jnp.int32)
+        q_time, q_dest, _ = _random_queues(rng, nq, ncols)
         q_inj = jnp.asarray(rng.integers(0, 50_000, (nq, ncols)),
                             jnp.int32)
         # unique pop rows, some sentinel-skipped; appends disjoint from
@@ -121,8 +132,7 @@ class TestQueueUpdateKernel:
         targets, oracle-exact."""
         rng = np.random.default_rng(k)
         nq, ncols, nlk = 8, 48, 4
-        q_time, _ = _random_queues(rng, nq, ncols)
-        q_dest = jnp.asarray(rng.integers(0, 9, (nq, ncols)), jnp.int32)
+        q_time, q_dest, _ = _random_queues(rng, nq, ncols)
         q_inj = jnp.asarray(rng.integers(0, 50_000, (nq, ncols)),
                             jnp.int32)
         pop_q = np.array([r if r % 3 else nq
@@ -151,9 +161,10 @@ class TestQueueUpdateKernel:
     def test_direct_kernel_entry_points(self):
         """The raw pallas wrappers (bypassing ops) agree too."""
         rng = np.random.default_rng(3)
-        q_time, t_q = _random_queues(rng, 8, 16)
-        want = ref.fabric_queue_scan(q_time, t_q)
-        got = fq.fabric_queue_step_pallas(q_time, t_q, rows_per_block=4,
+        q_time, q_dest, t_q = _random_queues(rng, 8, 16)
+        want = ref.fabric_queue_scan(q_time, q_dest, t_q)
+        got = fq.fabric_queue_step_pallas(q_time, q_dest, t_q,
+                                          rows_per_block=4,
                                           interpret=True)
         for w, g in zip(want, got):
             np.testing.assert_array_equal(np.asarray(w), np.asarray(g))

@@ -61,6 +61,7 @@ print("MODES-OK", l_psum[-1], l_aer[-1])
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_dp_reduce_modes_track_psum():
     out = run_with_devices(CODE, 4, timeout=1800)
     assert "MODES-OK" in out
