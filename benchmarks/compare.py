@@ -9,14 +9,14 @@ renaming or deleting a benchmark must be an explicit baseline refresh,
 not a silent gap in coverage.
 
 Only tagged cells (the ``Fabric``-API feature rows: hetero / mcast /
-adaptive / lossless) gate; the untagged ring/mesh grid is tracked but
+adaptive / lossless / batch) gate; the untagged ring/mesh grid is tracked but
 machine-noise-dominated at small N.  Cells whose baseline wall-clock is
 under ``--min-us`` are skipped outright: at tens of microseconds the
 comparison measures the allocator, not the engine.
 
 Refresh after an intentional perf change::
 
-    python benchmarks/run.py --tags hetero,mcast,adaptive,lossless \
+    python benchmarks/run.py --tags hetero,mcast,adaptive,lossless,batch \
         --json benchmarks/baselines/BENCH_fabric.json
 """
 

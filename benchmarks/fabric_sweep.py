@@ -383,6 +383,50 @@ def sweep_lossless(engine=DEFAULT_ENGINE):
     return rows
 
 
+BATCH_RING = dict(n_chips=16, key=7, epc=EVENTS_PER_CHIP,
+                  pattern="hot_spot")
+BATCH_SIZES = (1, 8, 32)
+
+
+def sweep_batched(engine=DEFAULT_ENGINE):
+    """Batched Monte-Carlo rows: B independently-seeded hot-spot ring-16
+    instances as ONE compiled dispatch (``Fabric.sweep_batch``).
+
+    The amortization curve is the row family's whole point:
+    ``us_per_call`` grows sub-linearly in B while ``us_per_instance``
+    falls — the per-dispatch overhead (argument marshalling, one XLA
+    launch) is paid once for the whole batch instead of once per seed.
+    Each row's bucket is pre-warmed (``warm=True``), so the timing is
+    the steady-state dispatch, matching the other tagged families; the
+    >= 3x per-instance strict win over the sequential loop is asserted
+    in ``fabric_smoke.run_batch_gate`` — the sweep reports the curve.
+    """
+    topo = ring_topology(BATCH_RING["n_chips"])
+    fab = Fabric(topo, engine=engine)
+    specs = tr.monte_carlo(BATCH_RING["pattern"],
+                           jax.random.PRNGKey(BATCH_RING["key"]),
+                           max(BATCH_SIZES), BATCH_RING["n_chips"],
+                           BATCH_RING["epc"])
+    rows = []
+    for b in BATCH_SIZES:
+        cell = fab.sweep_batch(specs[:b])
+        batch = cell.result
+        m = _metrics(batch.instance(0))
+        thr = np.asarray(net.batch_throughput_mev_s(batch))
+        m.update(batch=b, us_per_instance=cell.us_per_instance,
+                 delivered_total=int(np.asarray(batch.delivered).sum()),
+                 thr_mean_mev_s=float(thr.mean()),
+                 thr_min_mev_s=float(thr.min()))
+        rows.append(_cell(
+            f"fabric_{topo.name}_batch{b}", cell.us_per_call,
+            f"B={b} us/inst={cell.us_per_instance:.1f} "
+            f"delivered={m['delivered_total']} "
+            f"thr={m['thr_mean_mev_s']:.1f}MEv/s(mean) "
+            f"min={m['thr_min_mev_s']:.1f}MEv/s",
+            engine, m, api="fabric", tags=("batch",)))
+    return rows
+
+
 def enable_persistent_compile_cache():
     """Opt this process into a persistent XLA compile cache so repeat
     sweep runs (and CI with a cache action) skip the one shared engine
@@ -402,7 +446,8 @@ def enable_persistent_compile_cache():
 
 #: Every cell tag a sweep family can emit — the single source of truth
 #: the CLIs validate ``--tags`` against.
-KNOWN_TAGS = frozenset({"hetero", "mcast", "adaptive", "lossless"})
+KNOWN_TAGS = frozenset({"hetero", "mcast", "adaptive", "lossless",
+                        "batch"})
 
 
 def run_structured(engine=DEFAULT_ENGINE, slow=False, tags=None):
@@ -424,6 +469,7 @@ def run_structured(engine=DEFAULT_ENGINE, slow=False, tags=None):
         (sweep_multicast, (engine,), frozenset({"mcast"})),
         (sweep_adaptive, (engine,), frozenset({"adaptive"})),
         (sweep_lossless, (engine,), frozenset({"lossless"})),
+        (sweep_batched, (engine,), frozenset({"batch"})),
     )
     if wanted is not None and wanted - KNOWN_TAGS:
         raise ValueError(f"unknown sweep tags "

@@ -34,6 +34,16 @@ Contracts (all tested):
 * telemetry counters merge additively, and the merged result keeps
   ``delivered + drops == injected``.
 
+Batched execution (``Fabric.run_batch`` / ``fabric.run_batch``) refuses
+adaptive policies by design: the epoch loop is a *sequential feedback
+control loop* — epoch ``k``'s telemetry re-weights epoch ``k + 1``'s
+tables — so B adaptive instances cannot fuse into one feed-forward
+computation without changing semantics.  Batch the static baseline
+(``StaticShortestPath`` or prebuilt tables) instead, or run adaptive
+specs through ``Fabric.run`` / ``run_epochs`` one at a time; the epoch
+slices of those runs still share one compilation via the shape-bucketed
+jit cache.
+
 Policies (`AdaptiveRouting.policy`):
 
 ``"min_backlog"``

@@ -50,23 +50,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from .link import PAPER_TIMING, LinkTiming, link_timing_arrays
-from .network import (DEFAULT_CHUNK_SIZE, ENGINES, FabricResult, _BIG,
+from .network import (DEFAULT_CHUNK_SIZE, ENGINES, FabricBatchResult,
+                      FabricResult, _BIG,
                       _RING_D_FLOOR, _RING_E_FLOOR, _RING_K_FLOOR,
                       _RING_L_FLOOR, _RING_N_FLOOR, _RING_R_FLOOR,
                       _RING_STREAM_FLOOR, _check_reachable, _expand,
                       _first_hop_queues, _in_edge_ranks, _overflow_guard,
                       _pad_to, _pow2ceil, _prefill, _ring_engine,
-                      _routes_with_trees, _slot_engine, _stream_quota,
+                      _ring_engine_batch, _routes_with_trees, _slot_engine,
+                      _slot_engine_batch, _stream_quota,
                       _tree_stream_quota, _unicast_routes)
 from .router import (AddressSpec, MulticastTable, MulticastTree,
-                     RoutingTable, Topology)
+                     RoutingTable, Topology, find_route_cycles)
 from .telemetry import Telemetry
 from .traffic import TrafficSpec
 
 __all__ = ["Fabric", "CompiledFabric", "QueuePolicy", "FLOW_MODES",
            "EngineSpec",
            "MulticastPolicy", "RoutingPolicy", "StaticShortestPath",
-           "PrebuiltRouting", "SweepCell"]
+           "PrebuiltRouting", "SweepCell", "BatchSweepCell", "run_batch",
+           "batch_cache_size"]
 
 
 # -----------------------------------------------------------------------
@@ -289,6 +292,17 @@ class SweepCell(NamedTuple):
     bucket: tuple
 
 
+class BatchSweepCell(NamedTuple):
+    """Timing of one batched dispatch: ``us_per_call`` is the whole
+    batch's wall-clock, ``us_per_instance`` the amortised per-fabric
+    cost (the number the Monte-Carlo amortisation gate compares against
+    sequential ``run``)."""
+    result: FabricBatchResult
+    us_per_call: float
+    us_per_instance: float
+    bucket: tuple
+
+
 class Fabric:
     """A declarative N-chip AER fabric: topology + composable policies.
 
@@ -344,6 +358,23 @@ class Fabric:
         self._worst_cost = int((tc.astype(np.int64)
                                 + np.maximum(tv, ti)).max(initial=1))
         self.routing_table = policy.build(topo)
+        # Lossless flow control relies on every route making progress:
+        # a next-hop cycle (possible only through table_override hooks
+        # or prebuilt tables — BFS/Dijkstra tables are acyclic by
+        # construction) would deadlock the credit/on-off stall chain
+        # instead of merely truncating at the step bound, so it is
+        # refused eagerly here.  Drop mode keeps the historical
+        # behaviour (events on a cyclic route are dropped or truncated).
+        if self.queues.flow != "drop":
+            bad = find_route_cycles(topo, self.routing_table)
+            if len(bad):
+                shown = ", ".join(f"{c}->{d}" for c, d in bad[:4].tolist())
+                raise ValueError(
+                    f"routing table has {len(bad)} (chip, dest) pair(s) "
+                    f"whose route never reaches the destination (next-hop "
+                    f"cycle or dead-end), e.g. {shown}; "
+                    f"flow={self.queues.flow!r} would deadlock on them — "
+                    f"fix the table or use flow='drop'")
         self._in_rank, self._D = _in_edge_ranks(topo)
         self._init_tx = np.broadcast_to(
             np.asarray(self.queues.initial_tx, np.int32), (L,))
@@ -351,6 +382,8 @@ class Fabric:
         self._plan_memo: tuple | None = None  # (spec, max_steps, plan)
         #: per-epoch breakdown of the last epoched run (AdaptiveReport)
         self.last_report = None
+        #: execution path the last ``run_many`` chose: "batch" | "loop"
+        self.last_dispatch = None
         # in-fabric multicast setup caches: trees are a pure function of
         # (routing table, multicast table, src, tag) — all fixed per
         # Fabric — and the unicast replication tables of the routing
@@ -447,9 +480,88 @@ class Fabric:
 
     def run_many(self, specs, *,
                  max_steps: int | None = None) -> list[FabricResult]:
-        """Run a sequence of specs, amortising compiles across buckets
-        (specs that bucket alike share one compilation)."""
+        """Run a sequence of specs, amortising work across them.
+
+        Dispatch (recorded on ``self.last_dispatch``): when every spec
+        lands in ONE shape bucket and the routing policy is static, the
+        whole sequence executes as a single batched computation via
+        :meth:`run_batch` — one compilation AND one dispatch for the
+        entire sweep (``"batch"``).  Otherwise — mixed buckets, an
+        adaptive policy (a sequential feedback loop), or a single spec —
+        it falls back to the per-spec loop (``"loop"``), which still
+        amortises compiles across specs that bucket alike.
+
+        Batch-path caveat: with ``max_steps=None`` the batch shares the
+        max of the per-spec default step bounds.  That is bit-exact with
+        solo runs whenever each run drains (the bound does not bind) —
+        the universal case, since cyclic tables are refused for the
+        lossless modes at construction and drop-mode routes always
+        terminate.  Pass an explicit ``max_steps`` to pin the bound.
+        """
+        from .adaptive import AdaptiveRouting
+        specs = list(specs)
+        if (len(specs) > 1
+                and not isinstance(self.routing_policy, AdaptiveRouting)):
+            plans = [self._plan(s, max_steps) for s in specs]
+            if len(dict.fromkeys(p.bucket for p in plans)) == 1:
+                self.last_dispatch = "batch"
+                return self.run_batch(specs,
+                                      max_steps=max_steps).results()
+        self.last_dispatch = "loop"
         return [self.run(s, max_steps=max_steps) for s in specs]
+
+    def run_batch(self, specs, *, max_steps: int | None = None,
+                  devices: int | str | None = None) -> FabricBatchResult:
+        """Run B traffic specs as ONE batched computation on this fabric.
+
+        Every spec must land in the same shape bucket (same topology by
+        construction — one ``Fabric`` — and pow2-compatible event
+        counts); the batch compiles once per (bucket, B, devices) and
+        executes as a single device dispatch, with every per-instance
+        quantity (traffic, replication tables, capacity, flow mode, step
+        bound) travelling as a ``(B,)``-leading operand.  Results are
+        bit-exact with ``[self.run(s) for s in specs]`` per instance on
+        every engine.  To batch across *fabrics* (per-instance routing
+        tables / timing contracts on one topology), use the module-level
+        :func:`run_batch`.
+
+        ``devices`` shards the batch axis across local devices via
+        ``shard_map``: an int (count), ``"all"``, or ``None`` (no
+        sharding).  B must divide evenly.
+
+        With ``max_steps=None`` all instances share the max of their
+        default step bounds (the slot engines bake the bound into their
+        scan); a non-binding bound is invisible in the results, keeping
+        solo bit-exactness.  Adaptive routing policies are refused —
+        their epoch loop is sequential feedback (see ``run_epochs``).
+        """
+        return run_batch(self, specs, max_steps=max_steps,
+                         devices=devices)
+
+    def sweep_batch(self, specs, *, max_steps: int | None = None,
+                    warm: bool = True,
+                    devices: int | str | None = None) -> BatchSweepCell:
+        """:meth:`run_batch` with wall-clock: optionally pre-warms the
+        batched engine with a zero-event dummy batch of the same size
+        (so compile time stays out of the measurement), then times the
+        single batched dispatch.  ``us_per_instance`` is the amortised
+        per-fabric cost — the number to compare against a sequential
+        ``sweep``'s ``us_per_call``."""
+        specs = list(specs)
+        fabs = [self] * len(specs)
+        plans = _plan_batch(fabs, specs, max_steps)
+        n_dev = _resolve_devices(devices, len(plans))
+        if warm:
+            zero = _zero_event_plan(self, plans[0].bucket)
+            dummy = _execute_batch(fabs, [zero] * len(plans), n_dev)
+            jax.block_until_ready(dummy.drops)
+        t0 = time.perf_counter()
+        res = _execute_batch(fabs, plans, n_dev)
+        jax.block_until_ready(res.log_del)
+        us = (time.perf_counter() - t0) * 1e6
+        return BatchSweepCell(result=res, us_per_call=us,
+                              us_per_instance=us / max(len(plans), 1),
+                              bucket=plans[0].bucket)
 
     def sweep(self, specs, *, max_steps: int | None = None,
               warm: bool = True) -> list[SweepCell]:
@@ -874,3 +986,227 @@ class CompiledFabric:
             telemetry=Telemetry(busy_ns=busy_ns, busy_steps=busy_steps,
                                 q_drops=q_drops, stall_steps=stall_steps,
                                 credit_waits=credit_waits))
+
+
+# -----------------------------------------------------------------------
+# Batched execution: B fabric instances as ONE compiled computation
+# -----------------------------------------------------------------------
+
+def run_batch(fabrics, specs, *, max_steps: int | None = None,
+              devices: int | str | None = None) -> FabricBatchResult:
+    """Run B (fabric, spec) instances as one batched computation.
+
+    ``fabrics`` is a single :class:`Fabric` (replicated across the
+    batch — the Monte-Carlo-over-seeds case) or a sequence of B fabrics
+    sharing one topology shape and shape bucket but free to differ in
+    routing tables, timing contracts, queue policy scalars and initial
+    polarity — every one of those is already a dynamic engine operand,
+    so per-instance heterogeneity adds ZERO compilation buckets.  The
+    batch compiles once per (bucket, B, devices) signature and runs as
+    a single dispatch; each instance's result is bit-exact with its
+    solo ``fabric.run(spec)``.
+
+    ``devices``: shard the batch axis across this many local devices
+    (``"all"`` = every local device) via ``shard_map``; ``None`` = no
+    sharding.  B must be divisible by the device count.
+    """
+    specs = list(specs)
+    if isinstance(fabrics, Fabric):
+        fabs = [fabrics] * len(specs)
+    else:
+        fabs = list(fabrics)
+    if len(fabs) != len(specs):
+        raise ValueError(f"got {len(fabs)} fabrics for {len(specs)} "
+                         f"specs; they must pair 1:1 (or pass a single "
+                         f"Fabric to replicate)")
+    plans = _plan_batch(fabs, specs, max_steps)
+    return _execute_batch(fabs, plans,
+                          _resolve_devices(devices, len(plans)))
+
+
+def _plan_batch(fabs: list[Fabric], specs, max_steps: int | None):
+    """Per-instance plans under one shared step bound and ONE bucket.
+
+    With ``max_steps=None`` the shared bound is the max over the
+    per-spec defaults: the slot engines bake ``max_steps`` into their
+    static scan (it keys their bucket), and the ring engine's batch
+    drains by early exit anyway — a non-binding bound never changes
+    results, so solo bit-exactness survives the sharing.  Ring plans
+    just take the shared bound (their bucket ignores it); slot plans
+    with a different default are re-planned under it.
+    """
+    if not specs:
+        raise ValueError("run_batch needs at least one instance")
+    from .adaptive import AdaptiveRouting
+    for f in fabs:
+        if isinstance(f.routing_policy, AdaptiveRouting):
+            raise NotImplementedError(
+                "run_batch under AdaptiveRouting is refused: the epoch "
+                "loop is sequential feedback (epoch k's telemetry "
+                "re-weights epoch k+1's tables), so instances cannot "
+                "fuse into one computation. Run adaptive specs through "
+                "Fabric.run / run_epochs; batch the static baseline.")
+    L = fabs[0].topo.n_links
+    for f in fabs[1:]:
+        if f.topo.n_links != L:
+            raise ValueError(f"all fabrics in a batch must share the "
+                             f"link count, got {f.topo.n_links} vs {L}")
+    plans = [f._plan(s, max_steps) for f, s in zip(fabs, specs)]
+    if max_steps is None:
+        shared = max(p.max_steps for p in plans)
+        plans = [p._replace(max_steps=shared) if p.bucket[0] == "ring"
+                 else (p if p.max_steps == shared else f._plan(s, shared))
+                 for f, s, p in zip(fabs, specs, plans)]
+    buckets = dict.fromkeys(p.bucket for p in plans)
+    if len(buckets) != 1:
+        raise ValueError(
+            f"run_batch needs every instance in ONE shape bucket, got "
+            f"{list(buckets)}; Fabric.run_many loops mixed buckets")
+    return plans
+
+
+def _resolve_devices(devices: int | str | None, batch: int) -> int:
+    """Device count for the batch axis; validates divisibility."""
+    if devices is None:
+        return 1
+    n = jax.local_device_count() if devices == "all" else int(devices)
+    if n < 1:
+        raise ValueError(f"devices must be >= 1, got {devices!r}")
+    if n > jax.local_device_count():
+        raise ValueError(f"asked for {n} devices but only "
+                         f"{jax.local_device_count()} are local")
+    if batch % n:
+        raise ValueError(f"batch size {batch} is not divisible by "
+                         f"{n} devices (shard_map needs equal shards)")
+    return n
+
+
+def _zero_event_plan(fab: Fabric, bucket: tuple) -> _Plan:
+    """The zero-event dummy plan ``warmup`` runs (every queue slot holds
+    the ``BIG_NS`` sentinel, zero logical events) — here as a batch
+    pre-warm instance."""
+    L, N = fab.topo.n_links, fab.topo.n_chips
+    if bucket[0] == "ring":
+        width = bucket[4]
+        R, K = N, 1         # _execute_batch pads to the bucket's (Rp, Kp)
+    else:
+        width = bucket[3]
+        R, K = bucket[6], bucket[7]
+    qt = np.full((L, 2, width), int(_BIG), np.int32)
+    z = np.zeros((L, 2, width), np.int32)
+    return _Plan(E=0, C=width, max_steps=0, q_time=qt, q_dest=z, q_inj=z,
+                 sizes=np.zeros((L, 2), np.int32),
+                 route_out=np.full((N, R, K), -1, np.int32),
+                 route_del=np.zeros((N, R), np.int32),
+                 route_wt=np.zeros((N, R, K), np.int32),
+                 offered=0, bucket=bucket, cap=width, fc=0, xon=0)
+
+
+def _batch_engine_for(bucket: tuple, n_devices: int):
+    """The lru-cached batched engine bound to one shape bucket."""
+    if bucket[0] == "ring":
+        _, Lp, _Np, Ep, C0, Dp, Cf, _Rp, _Kp, chunk = bucket
+        return _ring_engine_batch(Lp, Ep, C0, Dp, Cf, chunk, n_devices)
+    eng, L, E, C, ms, mb, _R, _K = bucket
+    return _slot_engine_batch(L, E, C, ms, mb, eng == "pallas", n_devices)
+
+
+def batch_cache_size(bucket: tuple, n_devices: int = 1) -> int:
+    """Entries in the batched engine's jit cache for ``bucket`` (-1 when
+    unavailable) — the batch path's no-recompile audit: one entry per
+    traced (B, operand-shape) signature, so a repeated same-size batch
+    must leave it unchanged (asserted by tests and the CI batch gate)."""
+    fn = _batch_engine_for(bucket, n_devices)
+    try:
+        return int(fn._cache_size())
+    except AttributeError:  # pragma: no cover - older/newer jax
+        return -1
+
+
+def _execute_batch(fabs: list[Fabric], plans: list[_Plan],
+                   n_devices: int) -> FabricBatchResult:
+    """Marshal B plans into (B,)-leading operands and run the batched
+    engine — the batch mirror of ``CompiledFabric._execute``.  Static
+    per-bucket tables (polarity, link endpoints, in-edge ranks, timing
+    vectors) come from each instance's ``CompiledFabric`` (reusing its
+    padding work and keeping the solo and batch paths marshalling-
+    identical); stacking them per instance is what lets one batch mix
+    timing contracts and polarities across fabrics."""
+    bucket = plans[0].bucket
+    fn = _batch_engine_for(bucket, n_devices)
+    L = fabs[0].topo.n_links
+    tabs = [f._get_compiled(bucket)._tables for f in fabs]
+
+    def stk(i):
+        return jnp.stack([t[i] for t in tabs])
+
+    def vec(xs):
+        return jnp.asarray(np.asarray(list(xs), np.int32))
+
+    if bucket[0] == "ring":
+        _, Lp, Np, _Ep, C0, _Dp, _Cf, Rp, Kp, _chunk = bucket
+        out = fn(
+            jnp.stack([jnp.asarray(_pad_to(p.q_time, (Lp, 2, C0),
+                                           int(_BIG))) for p in plans]),
+            jnp.stack([jnp.asarray(_pad_to(p.q_dest, (Lp, 2, C0), 0))
+                       for p in plans]),
+            jnp.stack([jnp.asarray(_pad_to(p.q_inj, (Lp, 2, C0), 0))
+                       for p in plans]),
+            jnp.stack([jnp.asarray(_pad_to(p.sizes, (Lp, 2), 0))
+                       for p in plans]),
+            stk(0), stk(1),
+            jnp.stack([jnp.asarray(_pad_to(p.route_out, (Np, Rp, Kp), -1))
+                       for p in plans]),
+            jnp.stack([jnp.asarray(_pad_to(p.route_del, (Np, Rp), 0))
+                       for p in plans]),
+            jnp.stack([jnp.asarray(_pad_to(p.route_wt, (Np, Rp, Kp), 0))
+                       for p in plans]),
+            stk(2), stk(3), stk(4), stk(5),
+            vec(p.cap for p in plans), vec(p.E for p in plans),
+            vec(int(f.queues.max_burst) for f in fabs),
+            # shared scalar step bound (aligned by _plan_batch) — the
+            # batched runner keeps its chunk bookkeeping unbatched
+            jnp.int32(max(p.max_steps for p in plans)),
+            vec(p.fc for p in plans), vec(p.xon for p in plans))
+        (log_n, log_inj, log_del, log_dest, sent, n_sw, t_link, drops,
+         busy_ns, busy_steps, q_drops, stall_steps, credit_waits) = out
+        e_max = max((p.E for p in plans), default=0)
+        log_inj, log_del, log_dest = (log_inj[:, :e_max],
+                                      log_del[:, :e_max],
+                                      log_dest[:, :e_max])
+        sent, n_sw, t_link = sent[:, :L], n_sw[:, :L], t_link[:, :L]
+        busy_ns, busy_steps = busy_ns[:, :L], busy_steps[:, :L]
+        q_drops = q_drops[:, :L]
+        stall_steps, credit_waits = (stall_steps[:, :L],
+                                     credit_waits[:, :L])
+        t_end = jnp.max(t_link, axis=1)
+    else:
+        C = plans[0].C
+        out = fn(
+            jnp.stack([jnp.asarray(p.q_time).reshape(2 * L, C)
+                       for p in plans]),
+            jnp.stack([jnp.asarray(p.q_dest).reshape(2 * L, C)
+                       for p in plans]),
+            jnp.stack([jnp.asarray(p.q_inj).reshape(2 * L, C)
+                       for p in plans]),
+            jnp.stack([jnp.asarray(p.sizes) for p in plans]),
+            stk(0), stk(1),
+            jnp.stack([jnp.asarray(p.route_out) for p in plans]),
+            jnp.stack([jnp.asarray(p.route_del) for p in plans]),
+            jnp.stack([jnp.asarray(p.route_wt) for p in plans]),
+            stk(2), stk(3), stk(4),
+            vec(p.cap for p in plans), vec(p.fc for p in plans),
+            vec(p.xon for p in plans))
+        (log_n, log_inj, log_del, log_dest, sent, n_sw, t_link, t_end,
+         drops, busy_ns, busy_steps, q_drops, stall_steps,
+         credit_waits) = out
+    return FabricBatchResult(
+        delivered=log_n,
+        injected=np.asarray([p.E for p in plans], np.int64),
+        log_inj=log_inj, log_del=log_del, log_dest=log_dest,
+        sent=sent, n_switches=n_sw, t_link=t_link, t_end=t_end,
+        drops=drops,
+        offered=np.asarray([p.offered for p in plans], np.int64),
+        telemetry=Telemetry(busy_ns=busy_ns, busy_steps=busy_steps,
+                            q_drops=q_drops, stall_steps=stall_steps,
+                            credit_waits=credit_waits))

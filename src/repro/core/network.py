@@ -185,10 +185,12 @@ from .router import (AddressSpec, MulticastTable, MulticastTree,
 from .telemetry import Telemetry
 from .traffic import TrafficSpec
 
-__all__ = ["FabricResult", "simulate_fabric", "reset_links",
+__all__ = ["FabricResult", "FabricBatchResult", "simulate_fabric",
+           "reset_links",
            "fabric_throughput_mev_s", "fabric_energy_pj",
            "per_link_throughput_mev_s", "delivered_latencies",
-           "delivery_multiset", "latency_stats", "ENGINES",
+           "delivery_multiset", "latency_stats", "batch_latency_stats",
+           "batch_throughput_mev_s", "ENGINES",
            "DEFAULT_CHUNK_SIZE", "RESULT_FIELDS", "assert_results_equal"]
 
 _BIG = BIG_NS  # one sentinel shared with link_step's park/wake contract
@@ -279,6 +281,68 @@ def assert_results_equal(a: FabricResult, b: FabricResult, ctx: str = ""):
                 raise AssertionError(
                     f"{ctx}: engines disagree on telemetry field {f}: "
                     f"{x!r} != {y!r}")
+
+
+class FabricBatchResult(NamedTuple):
+    """Results of B fabric instances executed as ONE batched computation.
+
+    Every array field is the solo :class:`FabricResult` field with a
+    leading ``(B,)`` instance axis (telemetry leaves included); the
+    static per-instance counters (``injected`` / ``offered``) become
+    (B,) numpy vectors.  ``instance(i)`` materialises instance ``i`` as
+    an ordinary :class:`FabricResult` — bit-exact with the same spec run
+    solo on the same engine (the contract ``Fabric.run_batch`` tests and
+    the CI batch gate enforce), so every existing roll-up
+    (``latency_stats``, ``link_load``, ``fabric_throughput_mev_s``, ...)
+    applies per instance unchanged.  Conservation holds per instance:
+    ``delivered[i] + drops[i] == injected[i]``.
+    """
+    delivered: jnp.ndarray   # (B,) int32
+    injected: np.ndarray     # (B,) static: expected deliveries/instance
+    log_inj: jnp.ndarray     # (B, E) valid up to ``delivered[i]``
+    log_del: jnp.ndarray     # (B, E)
+    log_dest: jnp.ndarray    # (B, E)
+    sent: jnp.ndarray        # (B, L, 2)
+    n_switches: jnp.ndarray  # (B, L)
+    t_link: jnp.ndarray      # (B, L)
+    t_end: jnp.ndarray       # (B,)
+    drops: jnp.ndarray       # (B,)
+    offered: np.ndarray      # (B,) static: pre-fanout events/instance
+    telemetry: Telemetry     # (B,)-leading leaves
+
+    @property
+    def n_instances(self) -> int:
+        return int(self.injected.shape[0])
+
+    def instance(self, i: int) -> FabricResult:
+        """Instance ``i`` as a solo-shaped :class:`FabricResult` (log
+        arrays trimmed to the instance's own expected delivery count)."""
+        e = int(self.injected[i])
+        return FabricResult(
+            delivered=self.delivered[i], injected=e,
+            log_inj=self.log_inj[i, :e], log_del=self.log_del[i, :e],
+            log_dest=self.log_dest[i, :e],
+            sent=self.sent[i], n_switches=self.n_switches[i],
+            t_link=self.t_link[i], t_end=self.t_end[i],
+            drops=self.drops[i], offered=int(self.offered[i]),
+            telemetry=Telemetry(*(getattr(self.telemetry, f)[i]
+                                  for f in Telemetry._fields)))
+
+    def results(self) -> list[FabricResult]:
+        """All instances as solo-shaped results, batch order."""
+        return [self.instance(i) for i in range(self.n_instances)]
+
+
+def batch_throughput_mev_s(batch: FabricBatchResult) -> jnp.ndarray:
+    """(B,) delivered events per second per instance, MEvents/s."""
+    return jnp.where(batch.t_end > 0,
+                     1e3 * batch.delivered / batch.t_end, 0.0)
+
+
+def batch_latency_stats(batch: FabricBatchResult) -> list[dict]:
+    """Per-instance ``latency_stats`` dicts, batch order — the Monte-
+    Carlo view: the spread of p50/p99 across seeds of one scenario."""
+    return [latency_stats(r) for r in batch.results()]
 
 
 def reset_links(initial_tx: np.ndarray) -> LinkState:
@@ -659,10 +723,11 @@ class _SlotState(NamedTuple):
     credit_waits: jnp.ndarray  # (L, 2) telemetry: stall episodes
 
 
-@functools.lru_cache(maxsize=None)
-def _slot_engine(L: int, E: int, C: int, max_steps: int,
-                 max_burst: int, use_kernels: bool):
-    """Compile-once slot-scan simulation for one static shape signature.
+def _slot_run(L: int, E: int, C: int, max_steps: int,
+              max_burst: int, use_kernels: bool):
+    """Build the slot-scan ``run`` function for one static shape signature
+    (uncompiled — ``_slot_engine`` jits it solo, ``_slot_engine_batch``
+    vmaps it over a ``(B,)`` leading instance axis).
 
     Timing arrives as *dynamic* (L,) cost vectors (``t_cycle_v`` /
     ``t_rev_v`` / ``t_idle_v`` — see ``link.link_timing_arrays``), so one
@@ -890,7 +955,69 @@ def _slot_engine(L: int, E: int, C: int, max_steps: int,
                 final.busy_ns, final.busy_steps, final.q_drops,
                 final.stall_steps, final.credit_waits)
 
-    return _jit_cached(run, donate_argnums=(0, 1, 2))
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _slot_engine(L: int, E: int, C: int, max_steps: int,
+                 max_burst: int, use_kernels: bool):
+    """Compile-once slot-scan simulation for one static shape signature.
+
+    Timing arrives as *dynamic* (L,) cost vectors and routing as the
+    per-plan replication tables, so one compilation serves every timing
+    contract, routing table and flow-control setting that fits the shape
+    signature — see :func:`_slot_run` for the full operand contract.
+    """
+    return _jit_cached(_slot_run(L, E, C, max_steps, max_burst,
+                                 use_kernels), donate_argnums=(0, 1, 2))
+
+
+def _shard_over_batch(fn, n_devices: int, n_args: int | None = None,
+                      replicated: tuple = ()):
+    """Split a batched engine's leading ``(B,)`` instance axis across
+    devices via ``shard_map`` (through :mod:`repro.parallel.compat`, so
+    old and new jax spellings both work).  Every operand and output
+    carries the batch axis leading, so one ``PartitionSpec("batch")``
+    covers the whole tree — except the positional args named in
+    ``replicated`` (with ``n_args`` total), which are shared scalars
+    (the ring batch's ``max_steps`` bound) and get the empty spec.
+    Each shard runs its sub-batch independently — including the ring
+    engine's early-exit ``while_loop``, which drains per-shard (a
+    finished shard's devices idle instead of stepping the slowest
+    instance globally).  ``n_devices <= 1`` is the identity."""
+    if n_devices <= 1:
+        return fn
+    from jax.sharding import PartitionSpec
+
+    from ..parallel import compat
+    mesh = compat.make_mesh((int(n_devices),), ("batch",))
+    spec = PartitionSpec("batch")
+    in_specs = (spec if not replicated else
+                tuple(PartitionSpec() if i in replicated else spec
+                      for i in range(n_args)))
+    return compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=spec, check_vma=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _slot_engine_batch(L: int, E: int, C: int, max_steps: int,
+                       max_burst: int, use_kernels: bool,
+                       n_devices: int = 1):
+    """Batched slot engine: ONE compilation running B fabric instances.
+
+    ``jax.vmap`` of :func:`_slot_run` over a leading ``(B,)`` instance
+    axis on EVERY operand — traffic, routing/replication tables, timing
+    vectors and the flow-control scalars are all per-instance, so a batch
+    can mix seeds, tables and timing contracts freely within one shape
+    signature.  The scan length is static (as in the solo engine), so all
+    instances execute the same ``max_steps`` micro-transactions;
+    post-completion steps are exact no-ops, keeping every instance
+    bit-exact with its solo run.  The pallas variant batches through
+    ``pallas_call``'s batching rule (interpret mode included).  With
+    ``n_devices > 1`` the batch axis is additionally sharded across
+    devices (see :func:`_shard_over_batch`)."""
+    fn = jax.vmap(_slot_run(L, E, C, max_steps, max_burst, use_kernels))
+    return _jit_cached(_shard_over_batch(fn, n_devices))
 
 
 # -----------------------------------------------------------------------
@@ -902,17 +1029,27 @@ class _RingState(NamedTuple):
     h0: jnp.ndarray           # (L, 2) prefill head (also the pop tie key)
     fh: jnp.ndarray           # (L, 2, D) forward-stream heads
     ftl: jnp.ndarray          # (L, 2, D) forward-stream tails
-    fq_time: jnp.ndarray      # (L, 2, D, Cf) stream release times
-    fq_dest: jnp.ndarray      # (L, 2, D, Cf) route id (dest | mcast tree)
-    fq_inj: jnp.ndarray       # (L, 2, D, Cf) original injection time
-    fq_key: jnp.ndarray       # (L, 2, D, Cf) reference-slot tie key
+    fqs: jnp.ndarray          # (L, 2, D, Cf, 4) stream entries, packed
+    #                           channels: 0 release time, 1 route id
+    #                           (dest | mcast tree), 2 original injection
+    #                           time, 3 reference-slot tie key.  One array
+    #                           so each step is ONE head gather and ONE
+    #                           tail scatter instead of four of each —
+    #                           scatter/gather rows dominate the step on
+    #                           CPU, and under vmap they serialize per
+    #                           instance, so row count is the batch
+    #                           throughput limit.
     n_ins: jnp.ndarray        # (L, 2) entries ever inserted (capacity/key)
     sent: jnp.ndarray         # (L, 2)
     prev_mode_l: jnp.ndarray  # (L,)
     n_sw: jnp.ndarray         # (L,)
-    log_inj: jnp.ndarray      # (E,)
-    log_del: jnp.ndarray      # (E,)
-    log_dest: jnp.ndarray     # (E,)
+    log_pk: jnp.ndarray       # (E + L, 3) delivery log, packed (inj,
+    #                           t_del, dest).  Delivery slots are
+    #                           CONSECUTIVE (log_n + per-step cumsum), so
+    #                           the append is a dynamic_update_slice of
+    #                           one compacted (L, 3) block — a dense copy,
+    #                           not a scatter; the L-row slack holds each
+    #                           step's zeroed overhang rows.
     log_n: jnp.ndarray        # scalar
     drops: jnp.ndarray        # scalar
     busy_ns: jnp.ndarray      # (L,) telemetry: ns spent transmitting
@@ -925,9 +1062,10 @@ class _RingState(NamedTuple):
     credit_waits: jnp.ndarray  # (L, 2) telemetry: stall episodes
 
 
-@functools.lru_cache(maxsize=None)
-def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
-    """Compile-once ring simulation for one static shape signature.
+def _ring_run(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
+    """Build the ring-stream ``run`` function for one static shape
+    signature (uncompiled — ``_ring_engine`` jits it solo,
+    ``_ring_engine_batch`` vmaps it over a ``(B,)`` instance axis).
 
     All dimensions are the *bucketed* ones (``_RING_*_FLOOR`` pow2
     padding): ``L`` links, ``E`` delivery-log slots, ``C0``/``Cf``
@@ -947,10 +1085,14 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
     lidx = jnp.arange(L)
     no_key = jnp.int32(2 ** 31 - 1)  # tie-break sentinel (keys are < cap)
 
-    def run(q0_time, q0_dest, q0_inj, sizes, init_tx,
-            links_j, route_out_j, route_del_j, route_wt_j, in_rank_j,
-            t_cycle_v, t_rev_v, t_idle_v,
-            cap, real_e, max_burst, max_steps, fc_mode, xon):
+    def start(q0_time, q0_dest, q0_inj, sizes, init_tx,
+              links_j, route_out_j, route_del_j, route_wt_j, in_rank_j,
+              t_cycle_v, t_rev_v, t_idle_v,
+              cap, max_burst, fc_mode, xon):
+        """Build ``(init, body)`` from one instance's operands — shared
+        by the solo loop below and the batched loop
+        (:func:`_ring_run_batch`), which vmaps ``body`` ALONE so the
+        chunk bookkeeping stays scalar."""
         K = route_out_j.shape[2]
         link0 = reset_links(init_tx)
         # per-(link, side) delivery chip, both sides — the flow gate
@@ -959,22 +1101,26 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
         rx_chip_cand = jnp.stack([links_j[:, 1], links_j[:, 0]], axis=1)
         si2 = jnp.arange(2)[None, :]
         li2 = lidx[:, None]
+        # pack the prefill columns once per trace: the per-step head read
+        # becomes one gather of (time, route, inj) triples
+        q0_all = jnp.stack([q0_time, q0_dest, q0_inj], axis=-1)
+        didx = jnp.arange(D, dtype=jnp.int32)
+        qid = jnp.arange(Q, dtype=jnp.int32)[None, :]
         init = _RingState(
             link=link0,
             h0=jnp.zeros((L, 2), jnp.int32),
             fh=jnp.zeros((L, 2, D), jnp.int32),
             ftl=jnp.zeros((L, 2, D), jnp.int32),
-            fq_time=jnp.full((L, 2, D, Cf), _BIG, jnp.int32),
-            fq_dest=jnp.zeros((L, 2, D, Cf), jnp.int32),
-            fq_inj=jnp.zeros((L, 2, D, Cf), jnp.int32),
-            fq_key=jnp.zeros((L, 2, D, Cf), jnp.int32),
+            fqs=jnp.stack(
+                [jnp.full((L, 2, D, Cf), _BIG, jnp.int32),
+                 jnp.zeros((L, 2, D, Cf), jnp.int32),
+                 jnp.zeros((L, 2, D, Cf), jnp.int32),
+                 jnp.zeros((L, 2, D, Cf), jnp.int32)], axis=-1),
             n_ins=sizes,
             sent=jnp.zeros((L, 2), jnp.int32),
             prev_mode_l=link0.xl.mode,
             n_sw=jnp.zeros((L,), jnp.int32),
-            log_inj=jnp.zeros((E,), jnp.int32),
-            log_del=jnp.zeros((E,), jnp.int32),
-            log_dest=jnp.zeros((E,), jnp.int32),
+            log_pk=jnp.zeros((E + L, 3), jnp.int32),
             log_n=jnp.zeros((), jnp.int32),
             drops=jnp.zeros((), jnp.int32),
             busy_ns=jnp.zeros((L,), jnp.int32),
@@ -997,10 +1143,12 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
             # "any released entry", the earliest released release and the
             # earliest future arrival are all properties of the 1 + D
             # heads — no O(C) slot scan.
-            p_t = jnp.take_along_axis(
-                q0_time, s.h0[:, :, None], axis=2)[..., 0]       # (L, 2)
-            f_t = jnp.take_along_axis(
-                s.fq_time, s.fh[..., None], axis=3)[..., 0]      # (L, 2, D)
+            p_head = jnp.take_along_axis(
+                q0_all, s.h0[:, :, None, None], axis=2)[:, :, 0]  # (L,2,3)
+            f_head = jnp.take_along_axis(
+                s.fqs, s.fh[..., None, None], axis=3)[:, :, :, 0]  # (L,2,D,4)
+            p_t = p_head[..., 0]                                 # (L, 2)
+            f_t = f_head[..., 0]                                 # (L, 2, D)
             p_rel = p_t <= t_now[:, None]
             f_rel = f_t <= t_now[:, None, None]
             pend_side = p_rel | jnp.any(f_rel, axis=2)           # (L, 2)
@@ -1020,8 +1168,7 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
             # head's downstream targets; the send side's values are
             # gathered out after the FSM picks a direction — identical
             # math to a post-step send-side-only selection.
-            fk = jnp.take_along_axis(
-                s.fq_key, s.fh[..., None], axis=3)[..., 0]       # (L, 2, D)
+            fk = f_head[..., 3]                                  # (L, 2, D)
             cand_t = jnp.concatenate(
                 [p_t[:, :, None], f_t], axis=2)                  # (L,2,1+D)
             cand_k = jnp.concatenate(
@@ -1033,15 +1180,13 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
                               axis=2).astype(jnp.int32)          # (L, 2)
             from_pre = best == 0
             d_best = jnp.maximum(best - 1, 0)
-            slot_f = s.fh[li2, si2, d_best]                      # (L, 2)
-            p_route = jnp.take_along_axis(
-                q0_dest, s.h0[:, :, None], axis=2)[..., 0]
-            p_inj = jnp.take_along_axis(
-                q0_inj, s.h0[:, :, None], axis=2)[..., 0]
+            # the winning forward stream's head entry IS f_head at d_best
+            # (f_head gathers AT s.fh), so no second stream gather
+            best_head = f_head[li2, si2, d_best]                 # (L, 2, 4)
             cand_route = jnp.where(
-                from_pre, p_route, s.fq_dest[li2, si2, d_best, slot_f])
+                from_pre, p_head[..., 1], best_head[..., 1])
             cand_inj = jnp.where(
-                from_pre, p_inj, s.fq_inj[li2, si2, d_best, slot_f])
+                from_pre, p_head[..., 2], best_head[..., 2])
 
             # --- flow-control admission gate ----------------------------
             # Identical inputs and formulas to the slot engines: the
@@ -1096,12 +1241,17 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
             db_s = d_best[lidx, send_side]
             ev_route = cand_route[lidx, send_side]
             ev_inj = cand_inj[lidx, send_side]
-            h0 = s.h0.at[lidx, send_side].add(
-                (did & fp_s).astype(jnp.int32))
-            fh = s.fh.at[lidx, send_side, db_s].add(
-                (did & ~fp_s).astype(jnp.int32))
-            sent = s.sent.at[lidx, send_side].add(did32)
-            n_pop = s.n_pop.at[lidx, send_side].add(did32)
+            # single update per link row -> dense one-hot adds, not
+            # scatters (XLA lowers small scatters to a per-row loop; under
+            # vmap that loop serializes across the batch too)
+            oh_side = si2 == send_side[:, None]                  # (L, 2)
+            h0 = s.h0 + jnp.where(
+                oh_side, (did & fp_s).astype(jnp.int32)[:, None], 0)
+            oh_d = oh_side[:, :, None] & (didx == db_s[:, None, None])
+            fh = s.fh + jnp.where(
+                oh_d, (did & ~fp_s).astype(jnp.int32)[:, None, None], 0)
+            sent = s.sent + jnp.where(oh_side, did32[:, None], 0)
+            n_pop = s.n_pop + jnp.where(oh_side, did32[:, None], 0)
 
             # --- deliver and/or replicate -------------------------------
             # The replication-table row of (rx_chip, route) decides both:
@@ -1111,9 +1261,31 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
             rx_chip = links_j[lidx, rx_side]
             deliver = did & (route_del_j[rx_chip, ev_route] > 0)
 
-            log_inj, log_del, log_dest, log_n = _log_deliveries(
-                s.log_inj, s.log_del, s.log_dest, s.log_n,
-                deliver, ev_inj, link.t, rx_chip, E)
+            # Delivery slots are consecutive from log_n (the same
+            # log_n + cumsum slot rule as _log_deliveries), so instead of
+            # three scatters the step compacts the delivering links to
+            # the front — inv[p] is the (p+1)-th delivering link id,
+            # counted densely — and writes ONE (L, 3) block with
+            # dynamic_update_slice.  Rows at or past this step's delivery
+            # count nd are forced to zero: the next step's block starts
+            # exactly where this one's valid rows end, so overhang rows
+            # are always overwritten by later valid rows, and the final
+            # overhang leaves the same zeros an untouched buffer holds.
+            # The buffer's L-row slack keeps the slice start (<= E) from
+            # ever clamping.
+            d32l = deliver.astype(jnp.int32)
+            nd = jnp.sum(d32l)
+            csum = jnp.cumsum(d32l)
+            inv = jnp.minimum(jnp.sum(
+                (csum[None, :] <= lidx[:, None]).astype(jnp.int32),
+                axis=1), L - 1)                                  # (L,)
+            blk = jnp.where(
+                (lidx < nd)[:, None],
+                jnp.stack([ev_inj[inv], link.t[inv], rx_chip[inv]],
+                          axis=-1), 0)                           # (L, 3)
+            log_pk = jax.lax.dynamic_update_slice(
+                s.log_pk, blk, (s.log_n, jnp.int32(0)))
+            log_n = s.log_n + nd
 
             # --- forward append: tails of the delivering link's streams -
             # All K copies of one pop land at the SAME chip on K distinct
@@ -1132,31 +1304,28 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
             stream = fq_g * D + d_ins          # flat stream id
             stream_s = jnp.where(app, stream, Q * D)
             tail = s.ftl.reshape(-1)[stream]                     # (L·K,)
-            fq_time = s.fq_time.reshape(Q * D, Cf) \
-                .at[stream_s, tail].set(jnp.repeat(link.t, K),
-                                        mode="drop") \
-                .reshape(L, 2, D, Cf)
-            fq_dest = s.fq_dest.reshape(Q * D, Cf) \
-                .at[stream_s, tail].set(jnp.repeat(ev_route, K),
-                                        mode="drop") \
-                .reshape(L, 2, D, Cf)
-            fq_inj = s.fq_inj.reshape(Q * D, Cf) \
-                .at[stream_s, tail].set(jnp.repeat(ev_inj, K),
-                                        mode="drop") \
-                .reshape(L, 2, D, Cf)
-            fq_key = s.fq_key.reshape(Q * D, Cf) \
-                .at[stream_s, tail].set(key, mode="drop") \
-                .reshape(L, 2, D, Cf)
-            ftl = s.ftl.reshape(-1).at[stream_s].add(
-                1, mode="drop").reshape(L, 2, D)
-            n_ins = n_ins_f.at[jnp.where(app, fq_g, Q)].add(
-                1, mode="drop").reshape(L, 2)
+            # ONE packed append per step: all four channels of one entry
+            # travel in a single (L·K, 4) scatter row
+            upd = jnp.stack(
+                [jnp.repeat(link.t, K), jnp.repeat(ev_route, K),
+                 jnp.repeat(ev_inj, K), key], axis=-1)           # (L·K, 4)
+            fqs = s.fqs.reshape(Q * D, Cf, 4) \
+                .at[stream_s, tail].set(upd, mode="drop") \
+                .reshape(L, 2, D, Cf, 4)
+            # counter bumps as dense one-hot sums over the tiny (Q,) and
+            # (D,) index spaces — masked rows contribute zero everywhere
+            eq_q = fq_g[:, None] == qid                          # (L·K, Q)
+            app_q = (eq_q & app[:, None]).astype(jnp.int32)
+            n_ins = (n_ins_f + jnp.sum(app_q, axis=0)).reshape(L, 2)
+            eq_d = (d_ins[:, None] == didx[None, :]).astype(jnp.int32)
+            ftl = (s.ftl.reshape(Q, D) + jnp.einsum(
+                'rq,rd->qd', app_q, eq_d)).reshape(L, 2, D)
             drop_wt = jnp.where(dropped, wt_f, 0)
             drops = s.drops + jnp.sum(drop_wt)
             # telemetry: charge each weighted drop to its target queue
-            q_drops = s.q_drops.reshape(-1).at[
-                jnp.where(dropped, fq_g, Q)].add(
-                drop_wt, mode="drop").reshape(L, 2)
+            q_drops = (s.q_drops.reshape(-1) + jnp.sum(
+                eq_q.astype(jnp.int32) * drop_wt[:, None], axis=0)
+                ).reshape(L, 2)
 
             # --- switch counting (reset step excluded) ------------------
             n_sw = s.n_sw + jnp.where(
@@ -1165,16 +1334,25 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
 
             ns = _RingState(
                 link=link, h0=h0, fh=fh, ftl=ftl,
-                fq_time=fq_time, fq_dest=fq_dest, fq_inj=fq_inj,
-                fq_key=fq_key, n_ins=n_ins, sent=sent,
+                fqs=fqs, n_ins=n_ins, sent=sent,
                 prev_mode_l=link.xl.mode, n_sw=n_sw,
-                log_inj=log_inj, log_del=log_del, log_dest=log_dest,
-                log_n=log_n, drops=drops,
+                log_pk=log_pk, log_n=log_n, drops=drops,
                 busy_ns=busy_ns, busy_steps=busy_steps, q_drops=q_drops,
                 n_pop=n_pop, xoff=xoff,
                 in_stall=stalled.astype(jnp.int32),
                 stall_steps=stall_steps, credit_waits=credit_waits)
             return ns, None
+
+        return init, body
+
+    def run(q0_time, q0_dest, q0_inj, sizes, init_tx,
+            links_j, route_out_j, route_del_j, route_wt_j, in_rank_j,
+            t_cycle_v, t_rev_v, t_idle_v,
+            cap, real_e, max_burst, max_steps, fc_mode, xon):
+        init, body = start(q0_time, q0_dest, q0_inj, sizes, init_tx,
+                           links_j, route_out_j, route_del_j, route_wt_j,
+                           in_rank_j, t_cycle_v, t_rev_v, t_idle_v,
+                           cap, max_burst, fc_mode, xon)
 
         # --- chunked steps inside while_loop: exit within one chunk of
         # delivered + drops == injected.  Post-completion steps are
@@ -1200,14 +1378,114 @@ def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
 
         final, _ = jax.lax.while_loop(cond, chunk_body,
                                       (init, jnp.int32(0)))
-        return (final.log_n, final.log_inj, final.log_del, final.log_dest,
+        return (final.log_n, final.log_pk[:E, 0], final.log_pk[:E, 1],
+                final.log_pk[:E, 2],
                 final.sent, final.n_sw, final.link.t, final.drops,
                 final.busy_ns, final.busy_steps, final.q_drops,
                 final.stall_steps, final.credit_waits)
 
-    # no donation: the prefill arrays are read-only gather sources here
-    # (no same-shaped output exists to alias them into)
-    return _jit_cached(run)
+    run._start = start   # the batched runner reuses (init, body)
+    return run
+
+
+def _ring_run_batch(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
+    """Build the BATCHED ring ``run``: B instances, one computation.
+
+    Not a blind ``jax.vmap`` of the solo runner — that would batch the
+    loop bookkeeping too, and JAX's while/fori batching rules then pay
+    for it twice per micro-transaction: a batched inner trip count
+    turns the chunk ``fori_loop`` into a masked ``while_loop`` that
+    re-selects EVERY carry leaf (the full queue state) on EVERY step,
+    an ~8x per-instance slowdown on CPU.  Instead only the step
+    ``body`` is vmapped (gathers/scatters batch cleanly into one kernel
+    each); ``base``/``max_steps``/``chunk`` stay scalar, so the inner
+    ``fori_loop`` keeps the solo lowering, and the early exit is one
+    ``jnp.any`` over the per-instance delivery deficits: the loop runs
+    until ALL instances drain, finished instances executing
+    post-completion micro-transactions that are exact no-ops (the same
+    property the solo early exit relies on at chunk granularity).
+    Bit-exactness per instance is asserted by the batch tests and the
+    CI batch gate.
+
+    Signature matches the solo runner with every operand carrying a
+    leading ``(B,)`` instance axis — including the dynamic scalars
+    (``cap``/``real_e``/``max_burst``/``fc_mode``/``xon`` become (B,)
+    vectors) — EXCEPT ``max_steps``, which is one shared scalar bound
+    (``_plan_batch`` aligns the batch on it; a non-binding bound is
+    invisible in the results).
+    """
+    start = _ring_run(L, E, C0, D, Cf, chunk)._start
+
+    def run(q0_time, q0_dest, q0_inj, sizes, init_tx,
+            links_j, route_out_j, route_del_j, route_wt_j, in_rank_j,
+            t_cycle_v, t_rev_v, t_idle_v,
+            cap, real_e, max_burst, max_steps, fc_mode, xon):
+        ops = (q0_time, q0_dest, q0_inj, sizes, init_tx,
+               links_j, route_out_j, route_del_j, route_wt_j, in_rank_j,
+               t_cycle_v, t_rev_v, t_idle_v, cap, max_burst, fc_mode,
+               xon)
+
+        init = jax.vmap(lambda *o: start(*o)[0])(*ops)
+
+        def body_of(ops_i, s, step_i):
+            return start(*ops_i)[1](s, step_i)[0]
+
+        vbody = jax.vmap(body_of, in_axes=(0, 0, None))
+
+        def chunk_body(carry):
+            st, base = carry
+            this_chunk = jnp.minimum(jnp.int32(chunk), max_steps - base)
+            st2 = jax.lax.fori_loop(
+                jnp.int32(0), this_chunk,
+                lambda i, s: vbody(ops, s, base + i), st)
+            return st2, base + jnp.int32(chunk)
+
+        def cond(carry):
+            st, base = carry
+            return (jnp.any(st.log_n + st.drops < real_e)
+                    & (base < max_steps))
+
+        final, _ = jax.lax.while_loop(cond, chunk_body,
+                                      (init, jnp.int32(0)))
+        return (final.log_n, final.log_pk[:, :E, 0],
+                final.log_pk[:, :E, 1], final.log_pk[:, :E, 2],
+                final.sent, final.n_sw, final.link.t, final.drops,
+                final.busy_ns, final.busy_steps, final.q_drops,
+                final.stall_steps, final.credit_waits)
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _ring_engine(L: int, E: int, C0: int, D: int, Cf: int, chunk: int):
+    """Compile-once ring simulation for one static shape signature —
+    :func:`_ring_run` jitted.  No donation: the prefill arrays are
+    read-only gather sources here (no same-shaped output exists to alias
+    them into)."""
+    return _jit_cached(_ring_run(L, E, C0, D, Cf, chunk))
+
+
+@functools.lru_cache(maxsize=None)
+def _ring_engine_batch(L: int, E: int, C0: int, D: int, Cf: int,
+                       chunk: int, n_devices: int = 1):
+    """Batched ring engine: ONE compilation running B fabric instances.
+
+    ``jax.vmap`` of :func:`_ring_run` with every operand carrying a
+    leading ``(B,)`` instance axis — per-instance traffic, tables, timing
+    vectors AND per-instance dynamic scalars (``cap`` / ``real_e`` /
+    ``max_burst`` / ``fc_mode`` / ``xon`` become (B,) vectors;
+    ``max_steps`` is the one shared scalar bound).  The early-exit
+    ``while_loop`` is batch-aware by construction (see
+    :func:`_ring_run_batch`): it continues while ANY instance still has
+    a delivery/drop deficit — the max-over-instances exit the batch
+    semantics require — and finished instances execute exact-no-op
+    micro-transactions (the property the solo early exit already relies
+    on), so every instance stays bit-exact with its solo run.  With
+    ``n_devices > 1`` the batch axis is sharded across devices and each
+    shard drains independently (see :func:`_shard_over_batch`)."""
+    fn = _ring_run_batch(L, E, C0, D, Cf, chunk)
+    return _jit_cached(_shard_over_batch(fn, n_devices, n_args=19,
+                                         replicated=(16,)))
 
 
 # -----------------------------------------------------------------------

@@ -29,7 +29,8 @@ import numpy as np
 
 __all__ = [
     "AddressSpec", "Topology", "RoutingTable", "MulticastTable",
-    "MulticastTree", "line_topology", "ring_topology", "mesh2d_topology",
+    "MulticastTree", "find_route_cycles", "line_topology", "ring_topology",
+    "mesh2d_topology",
 ]
 
 
@@ -273,6 +274,48 @@ class RoutingTable:
                 hops[v, dst] = hops[u, dst] + 1
         return RoutingTable(next_link=next_link, out_side=out_side,
                             hops=hops)
+
+
+def find_route_cycles(topo: Topology, rt: RoutingTable) -> np.ndarray:
+    """All ``(chip, dest)`` pairs whose forwarding walk never reaches
+    ``dest`` — i.e. the pairs caught on (or feeding into) a next-hop
+    cycle of a hand-built / overridden table.
+
+    For each destination the ``next_link`` column is a functional graph
+    on chips; a walk from every chip either reaches the destination
+    within ``n_chips - 1`` hops or is provably cyclic.  The walk is
+    vectorised over all (chip, dest) pairs at once (numpy, setup-time).
+    Pairs with no route at all (``next_link < 0`` off-diagonal) are
+    *unreachable*, not cyclic, and are not reported — ``Fabric`` rejects
+    those separately when traffic actually addresses them.
+
+    Tables built by :meth:`RoutingTable.build` (BFS) or
+    :meth:`RoutingTable.build_weighted` (Dijkstra — next hops strictly
+    decrease the remaining cost) are acyclic by construction; this check
+    exists for ``table_override`` hooks and prebuilt tables, where a
+    cycle would otherwise silently truncate at the step bound (drop
+    mode) or deadlock the lossless flow-control modes.  Routes that
+    dead-end mid-path (an intermediate chip with no next hop) are
+    reported too — the walk never arrives either way.  Returns an
+    ``(n_bad, 2)`` int32 array of ``(chip, dest)`` pairs.
+    """
+    n, links = topo.n_chips, topo.links
+    nl = np.asarray(rt.next_link)
+    os_ = np.asarray(rt.out_side)
+    # chip the walk steps to: the far endpoint of the chosen link
+    step_to = np.where(nl >= 0,
+                       links[np.maximum(nl, 0), 1 - np.maximum(os_, 0)],
+                       -1)
+    dest = np.broadcast_to(np.arange(n)[None, :], (n, n))
+    pos = np.broadcast_to(np.arange(n)[:, None], (n, n)).copy()
+    routed = (nl >= 0) & (pos != dest)
+    for _ in range(max(n - 1, 0)):
+        at_dest = pos == dest
+        nxt = step_to[pos, dest]
+        # walk only pairs that still have a route and haven't arrived
+        pos = np.where(~at_dest & routed & (nxt >= 0), nxt, pos)
+    cyclic = routed & (pos != dest)
+    return np.argwhere(cyclic).astype(np.int32)
 
 
 # -----------------------------------------------------------------------

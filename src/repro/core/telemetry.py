@@ -60,7 +60,8 @@ from typing import NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Telemetry", "LinkLoad", "link_load", "merge_telemetry"]
+__all__ = ["Telemetry", "LinkLoad", "link_load", "link_load_batch",
+           "merge_telemetry"]
 
 
 class Telemetry(NamedTuple):
@@ -141,3 +142,19 @@ def link_load(result) -> LinkLoad:
     stalls = np.asarray(tel.stall_steps, np.int64).sum(axis=1)
     return LinkLoad(traversals=traversals, occupancy=occupancy,
                     backlog_steps=backlog, drops=drops, stalls=stalls)
+
+
+def link_load_batch(batch) -> list[LinkLoad]:
+    """Per-instance :class:`LinkLoad` roll-ups of one batched run.
+
+    ``batch`` is a ``network.FabricBatchResult``: the engines accumulate
+    the telemetry counters with a leading ``(B,)`` instance axis (one
+    more vmapped carry dimension — still zero extra compilation
+    buckets), and each instance's counters are bit-exact with its solo
+    run, so the per-instance roll-up is just :func:`link_load` over the
+    instance views.  Returns B loads in batch order — the Monte-Carlo
+    congestion picture: the spread of per-link occupancy/backlog across
+    seeds of one scenario.
+    """
+    return [link_load(batch.instance(i))
+            for i in range(batch.n_instances)]

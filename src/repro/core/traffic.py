@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["TrafficSpec", "poisson", "bursty", "ping_pong", "hot_spot",
-           "PATTERNS"]
+           "monte_carlo", "PATTERNS"]
 
 
 class TrafficSpec(NamedTuple):
@@ -144,6 +144,32 @@ def _ping_pong_default(key, n_chips, events_per_chip):
 
 def _hot_spot_default(key, n_chips, events_per_chip):
     return hot_spot(key, n_chips, events_per_chip)
+
+
+def monte_carlo(pattern: str, key, batch: int, n_chips: int,
+                events_per_chip: int) -> list[TrafficSpec]:
+    """B independently-seeded instances of one traffic scenario.
+
+    Splits ``key`` into ``batch`` subkeys and samples every instance in
+    a single ``vmap`` of the pattern's default generator — ONE traced
+    sampling computation regardless of B, matching the execution side
+    (``Fabric.run_batch``) where the B instances then simulate as one
+    compiled computation.  All instances share the static shape
+    ``(n_chips, events_per_chip)``, so they land in one engine shape
+    bucket by construction.  Returns the B specs in seed order (each an
+    ordinary :class:`TrafficSpec` — instance ``i`` is bit-identical to
+    ``PATTERNS[pattern](subkey_i, ...)`` sampled solo).
+    """
+    if pattern not in PATTERNS:
+        raise ValueError(f"unknown pattern {pattern!r}; expected one of "
+                         f"{sorted(PATTERNS)}")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    gen = PATTERNS[pattern]
+    keys = jax.random.split(key, batch)
+    stacked = jax.vmap(lambda k: gen(k, n_chips, events_per_chip))(keys)
+    return [TrafficSpec(src=stacked.src[i], t=stacked.t[i],
+                        dest=stacked.dest[i]) for i in range(batch)]
 
 
 #: name -> generator(key, n_chips, events_per_chip) for sweeps/tests.

@@ -144,6 +144,12 @@ def fabric_queue_scan(q_time: jnp.ndarray, q_dest: jnp.ndarray,
 
     Returns ``(pend, r_min, nxt, amin, busy, head_route)``, each (Q,)
     int32.
+
+    vmap-compatible: under a batched fabric run (``Fabric.run_batch``
+    with ``engine="pallas"``) the leading ``(B,)`` instance axis lowers
+    through ``pallas_call``'s batching rule as an extra grid dimension —
+    B independent (Q, C) scans in one kernel launch, bit-exact with the
+    solo calls (interpret mode included; asserted by the batch tests).
     """
     if use_ref:
         return ref.fabric_queue_scan(q_time, q_dest, t_q)
@@ -164,7 +170,10 @@ def fabric_queue_update(q_time, q_dest, q_inj, pop_q, pop_slot,
     Queue ids >= Q skip the lane (no pop / dropped forward); the append
     lanes may outnumber the pop lanes (in-fabric multicast replication:
     L·K candidate copies for L pops).  Returns the updated
-    ``(q_time, q_dest, q_inj)``.
+    ``(q_time, q_dest, q_inj)``.  vmap-compatible like
+    :func:`fabric_queue_scan` — per-instance queue/slot ids need no
+    offsetting because each batch member scatters into its own (Q, C)
+    slice.
     """
     if use_ref:
         return ref.fabric_queue_update(q_time, q_dest, q_inj, pop_q,
