@@ -14,7 +14,11 @@ the benchmark hot-spot ring with zero recompiles across epochs.  A batch
 cell gates the batched-execution claim: 32 seeded instances of the
 Monte-Carlo hot-spot ring must run as ONE dispatch, bit-exact with the
 sequential loop, with one compilation and a strict >= 3x per-instance
-wall-clock win (``run_batch_gate``).  Then it
+wall-clock win (``run_batch_gate``).  A verifier cell gates the static
+pre-flight claim in both directions: the cyclic-route/acyclic-CDG
+table must be admitted and run lossless bit-exactly, the saturable
+channel-dependency cycle must be refused with every channel named
+(``run_verifier_gate``).  Then it
 times the ring engine end-to-end (compile + run, the number a user
 feels) and fails if it regressed more than ``MAX_REGRESSION``x against
 the checked-in baseline in ``baselines/fabric_smoke.json``.
@@ -80,12 +84,13 @@ def run_smoke() -> dict:
     adaptive = run_adaptive_gate()
     lossless = run_lossless_gate()
     batched = run_batch_gate()
+    verifier = run_verifier_gate()
     return {"ring_us": t_ring * 1e6,
             "cells": len(tr.PATTERNS),
             "n_chips": N_CHIPS,
             "events_per_chip": EVENTS_PER_CHIP,
             "mcast_traversals_saved": saved,
-            **adaptive, **lossless, **batched}
+            **adaptive, **lossless, **batched, **verifier}
 
 
 def run_multicast_gate() -> int:
@@ -328,6 +333,91 @@ def _batch_speedup_floor() -> float:
     return MIN_BATCH_SPEEDUP if cores >= 4 else MIN_BATCH_SPEEDUP_SERIAL
 
 
+def run_verifier_gate() -> dict:
+    """Gate the static verifier's precision claim in both directions.
+
+    1. Precision (no false refusal): a ring-4 table whose dest-1 routes
+       are bent into a 0 <-> 3 next-hop cycle has a CYCLIC route graph
+       but an ACYCLIC channel-dependency graph — PR 7 refused it
+       outright; the Dally–Seitz criterion must ADMIT it
+       (``certificate == "acyclic-cdg"``), and traffic avoiding the
+       quarantined pairs must run lossless under credit flow,
+       bit-exact between the ring and reference engines.
+    2. Soundness (no false admission): the all-clockwise ring-4 table
+       under credit flow with capacity 2 and antipodal traffic is a
+       genuine saturable channel-dependency cycle; ``verify`` must
+       REFUSE it and NAME every channel of the cycle.
+    """
+    from repro.core.fabric import StaticShortestPath
+    from repro.core.router import RoutingTable
+
+    def bent(topo_, rt):
+        nl, os_ = rt.next_link.copy(), rt.out_side.copy()
+        nl[0, 1], os_[0, 1] = 3, 1
+        nl[3, 1], os_[3, 1] = 3, 0
+        return RoutingTable(next_link=nl, out_side=os_, hops=rt.hops)
+
+    def clockwise(topo_, rt):
+        n = rt.next_link.shape[0]
+        nl, os_, hops = (rt.next_link.copy(), rt.out_side.copy(),
+                         rt.hops.copy())
+        for c in range(n):
+            for d in range(n):
+                if c != d:
+                    nl[c, d], os_[c, d], hops[c, d] = c, 0, (d - c) % n
+        return RoutingTable(next_link=nl, out_side=os_, hops=hops)
+
+    i32 = lambda x: np.asarray(x, np.int32)  # noqa: E731
+
+    # -- 1. cyclic routes, acyclic CDG: admitted and lossless ----------
+    def bent_fab(engine):
+        return Fabric(ring_topology(4),
+                      routing=StaticShortestPath(table_override=bent),
+                      queues=QueuePolicy(capacity=8, flow="credit"),
+                      engine=engine)
+
+    rep = bent_fab("ring").verify()
+    if not rep.ok or rep.certificate != "acyclic-cdg":
+        raise RuntimeError(
+            f"verifier gate: the bent-route table must be admitted "
+            f"with the acyclic-cdg certificate, got {rep.summary()}")
+    clean = tr.TrafficSpec(src=i32([0, 1, 2, 3, 0, 2]),
+                           t=i32([0, 0, 0, 0, 40, 40]),
+                           dest=i32([2, 3, 0, 2, 3, 1]))
+    res_ring = bent_fab("ring").run(clean)
+    res_ref = bent_fab("reference").run(clean)
+    _assert_bit_exact(res_ring, res_ref, "verifier/bent-credit")
+    if int(res_ring.delivered) != res_ring.injected \
+            or int(res_ring.drops) != 0:
+        raise RuntimeError(
+            f"verifier gate: admitted bent-route fabric did not drain "
+            f"losslessly ({int(res_ring.delivered)}/{res_ring.injected}"
+            f" delivered, {int(res_ring.drops)} drops)")
+
+    # -- 2. saturable CDG cycle: refused with the cycle named ----------
+    dead = Fabric(ring_topology(4),
+                  routing=StaticShortestPath(table_override=clockwise),
+                  queues=QueuePolicy(capacity=2, flow="credit"))
+    src = np.repeat(np.arange(4, dtype=np.int32), 8)
+    spec = tr.TrafficSpec(src=src, t=i32(np.arange(32) * 5),
+                          dest=i32((src + 3) % 4))
+    rep = dead.verify(spec)
+    errs = [f for f in rep.findings
+            if f.severity == "error" and f.check == "cdg-cycle"]
+    if rep.ok or not errs:
+        raise RuntimeError(
+            f"verifier gate: the all-clockwise deadlock must be "
+            f"refused with a cdg-cycle error, got {rep.summary()}")
+    channels = ("L0:0->1", "L1:1->2", "L2:2->3", "L3:3->0")
+    missing = [ch for ch in channels if ch not in errs[0].message]
+    if missing:
+        raise RuntimeError(
+            f"verifier gate: deadlock refusal must name every channel "
+            f"of the cycle; missing {missing} in: {errs[0].message}")
+    return {"verifier_bent_delivered": int(res_ring.delivered),
+            "verifier_cycle_channels": len(channels)}
+
+
 def run_batch_gate() -> dict:
     """Gate the batched-execution claim end to end.
 
@@ -410,6 +500,9 @@ def main(argv=None) -> int:
           f"the sequential loop "
           f"({result['batch_us_per_instance']:.0f} vs "
           f"{result['batch_seq_us_per_instance']:.0f} us); "
+          f"static verifier admits the bent-route ring and names the "
+          f"{result['verifier_cycle_channels']}-channel deadlock "
+          f"cycle; "
           f"ring engine {result['ring_us'] / 1e3:.0f} ms total "
           f"(compile + run)")
 

@@ -427,6 +427,134 @@ def sweep_batched(engine=DEFAULT_ENGINE):
     return rows
 
 
+def sweep_verify(engine=DEFAULT_ENGINE, slow=False):
+    """Pre-flight lane: ``Fabric.verify()`` over every sweep config.
+
+    Runs the static verifier (``repro.analysis.verify``) against each
+    (fabric, spec) pair the other families execute — rings x patterns,
+    mesh, heterogeneous timing, multicast modes, every lossless flow
+    mode, the batch instances and the adaptive epoch slices — and
+    HARD-FAILS if any config is not statically admitted: the sweep must
+    never benchmark a workload the verifier can prove deadlocks or
+    overflows the clock.  The single cell reports total configs, the
+    certificate histogram and the whole lane's wall-time (the cost of
+    pre-flighting an entire benchmark campaign, all setup-time numpy —
+    no engine compile, no device dispatch).
+    """
+    t0 = time.perf_counter()
+    certs: dict[str, int] = {}
+    failures: list[str] = []
+    checked = 0
+
+    def check(label, fab, spec):
+        nonlocal checked
+        rep = fab.verify(spec)
+        checked += 1
+        cert = rep.certificate or "none"
+        certs[cert] = certs.get(cert, 0) + 1
+        if not rep.ok:
+            failures.append(f"{label}: {rep.summary()}")
+
+    # anchor + rings x patterns (same key schedule as sweep_rings, so
+    # the disk-cached specs are shared, not regenerated)
+    check("ring2/anchor", Fabric(ring_topology(2),
+                                 queues=QueuePolicy(max_burst=1),
+                                 engine=engine), tr.ping_pong(2, 1024))
+    key = jax.random.PRNGKey(0)
+    ns = SWEEP_N + (SLOW_SWEEP_N if slow else ())
+    for n in ns:
+        topo = ring_topology(n)
+        for name in sorted(tr.PATTERNS):
+            key, cell_key = jax.random.split(key)
+            spec = _spec_cached(name, cell_key, n, EVENTS_PER_CHIP)
+            check(f"ring{n}/{name}", Fabric(topo, engine=engine), spec)
+    for r, c in ((4, 4),) + (((8, 8),) if slow else ()):
+        topo = mesh2d_topology(r, c)
+        spec = _spec_cached("poisson", jax.random.PRNGKey(1), topo.n_chips,
+                            EVENTS_PER_CHIP)
+        check(f"{topo.name}/poisson", Fabric(topo, engine=engine), spec)
+
+    # heterogeneous per-link timing
+    topo = ring_topology(8)
+    spec = _spec_cached("poisson", jax.random.PRNGKey(7), 8,
+                        EVENTS_PER_CHIP)
+    mixed = per_link_timing(
+        [PAPER_TIMING, SERIAL_LVDS_TIMING],
+        [1 if l == topo.n_links - 1 else 0 for l in range(topo.n_links)])
+    for tag, timing in (("uniform", PAPER_TIMING), ("hetero", mixed)):
+        check(f"ring8/{tag}", Fabric(topo, timing=timing, engine=engine),
+              spec)
+
+    # multicast transport modes (the sweep_multicast workload)
+    addr = AddressSpec()
+    mc = MulticastTable(np.ones((1, 8), bool))
+    rng = np.random.default_rng(5)
+    n_ev = 8 * EVENTS_PER_CHIP
+    src = rng.integers(0, 8, n_ev).astype(np.int32)
+    t = np.sort(rng.integers(0, 80_000, n_ev)).astype(np.int32)
+    mspec = tr.TrafficSpec(
+        src=jax.numpy.asarray(src), t=jax.numpy.asarray(t),
+        dest=jax.numpy.asarray(addr.pack_multicast(np.zeros(n_ev,
+                                                            np.int64))))
+    for mode in ("source_expand", "in_fabric"):
+        check(f"ring8/mcast_{mode}",
+              Fabric(topo, addr=addr, engine=engine,
+                     mcast=MulticastPolicy(mode, mc)), mspec)
+
+    # lossless flow modes on both hot-spot points
+    topo16 = ring_topology(LOSSLESS_RING["n_chips"])
+    spec16 = _lossless_spec(LOSSLESS_RING)
+    for flow in ("drop", "credit", "onoff"):
+        check(f"ring16/lossless_{flow}",
+              Fabric(topo16, queues=QueuePolicy(
+                  capacity=LOSSLESS_RING["capacity"], flow=flow),
+                  engine=engine), spec16)
+    check("ring16/lossless_credit_hot",
+          Fabric(topo16, queues=QueuePolicy(
+              capacity=LOSSLESS_RING_HOT["capacity"], flow="credit"),
+              engine=engine), _lossless_spec(LOSSLESS_RING_HOT))
+
+    # batch instances (each seeded spec is its own verification)
+    bspecs = tr.monte_carlo(BATCH_RING["pattern"],
+                            jax.random.PRNGKey(BATCH_RING["key"]),
+                            max(BATCH_SIZES), BATCH_RING["n_chips"],
+                            BATCH_RING["epc"])
+    bfab = Fabric(ring_topology(BATCH_RING["n_chips"]), engine=engine)
+    for i, bspec in enumerate(bspecs):
+        check(f"ring16/batch_inst{i}", bfab, bspec)
+
+    # adaptive A/B epoch slices (run_epochs executes per-slice, so the
+    # slices are what must be admitted)
+    from repro.core.adaptive import partition_epochs
+    for cfg, topo_a in ((ADAPTIVE_RING,
+                         ring_topology(ADAPTIVE_RING["n_chips"])),
+                        (ADAPTIVE_MESH,
+                         mesh2d_topology(ADAPTIVE_MESH["rows"],
+                                         ADAPTIVE_MESH["cols"]))):
+        hot = cfg.get("hot_chip")
+        aspec = tr.hot_spot(jax.random.PRNGKey(cfg["key"]),
+                            topo_a.n_chips, cfg["epc"],
+                            **({"hot_chip": hot} if hot is not None
+                               else {}))
+        afab = Fabric(topo_a, queues=QueuePolicy(
+            capacity=cfg["capacity"]), engine=engine)
+        for e, part in enumerate(partition_epochs(aspec, cfg["epochs"])):
+            check(f"{topo_a.name}/hotspot_epoch{e}", afab, part)
+
+    if failures:
+        raise RuntimeError(
+            f"fabric pre-flight verification failed for "
+            f"{len(failures)}/{checked} config(s):\n" +
+            "\n".join(failures))
+    us = (time.perf_counter() - t0) * 1e6
+    cert_str = " ".join(f"{k}={v}" for k, v in sorted(certs.items()))
+    m = {"configs": checked, "us_per_config": us / max(checked, 1),
+         "certificates": certs}
+    return [_cell("fabric_verify_preflight", us,
+                  f"configs={checked} all-ok {cert_str}", engine, m,
+                  api="fabric.verify", tags=("verify",))]
+
+
 def enable_persistent_compile_cache():
     """Opt this process into a persistent XLA compile cache so repeat
     sweep runs (and CI with a cache action) skip the one shared engine
@@ -447,7 +575,7 @@ def enable_persistent_compile_cache():
 #: Every cell tag a sweep family can emit — the single source of truth
 #: the CLIs validate ``--tags`` against.
 KNOWN_TAGS = frozenset({"hetero", "mcast", "adaptive", "lossless",
-                        "batch"})
+                        "batch", "verify"})
 
 
 def run_structured(engine=DEFAULT_ENGINE, slow=False, tags=None):
@@ -470,6 +598,7 @@ def run_structured(engine=DEFAULT_ENGINE, slow=False, tags=None):
         (sweep_adaptive, (engine,), frozenset({"adaptive"})),
         (sweep_lossless, (engine,), frozenset({"lossless"})),
         (sweep_batched, (engine,), frozenset({"batch"})),
+        (sweep_verify, (engine, slow), frozenset({"verify"})),
     )
     if wanted is not None and wanted - KNOWN_TAGS:
         raise ValueError(f"unknown sweep tags "

@@ -1,0 +1,26 @@
+"""Static analysis: machine-checked correctness arguments.
+
+Two halves, both pure setup-time code (numpy + ast, nothing traced):
+
+* :mod:`repro.analysis.verify` — the fabric pre-flight verifier.
+  Builds the channel-dependency graph (CDG) over the fabric's
+  (link, endpoint) channels from the unicast routes and multicast-tree
+  branchings, runs Dally–Seitz cycle detection on it, checks route
+  termination / reachability / replication-table completeness, and
+  bounds the worst-case clock against the ``BIG_NS`` sentinel —
+  everything ``Fabric.verify(spec)`` reports before a single engine
+  step runs.
+
+* :mod:`repro.analysis.jaxlint` — an AST lint for the JAX pitfalls
+  this repo keeps hand-auditing: Python-level branches on traced
+  values, jit static args that should be dynamic operands (the
+  zero-new-buckets contract), and bare float literals that promote the
+  int32 hot path.  Runnable as ``python -m repro.analysis.jaxlint
+  src/ benchmarks/`` (the CI analysis lane).
+"""
+
+from .verify import (ChannelGraph, Finding, VerifyReport,  # noqa: F401
+                     channel_graph, describe_channel, verify_fabric)
+
+__all__ = ["ChannelGraph", "Finding", "VerifyReport", "channel_graph",
+           "describe_channel", "verify_fabric"]

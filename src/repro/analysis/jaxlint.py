@@ -1,0 +1,325 @@
+"""AST lint for the JAX pitfalls this repo keeps hand-auditing.
+
+Three rules, each encoding an invariant PRs 2–7 enforce by review and
+cross-engine bit-exactness tests — here turned into machine checks:
+
+``JX001`` **traced-branch** — a Python ``if`` / ``while`` / conditional
+    expression whose condition calls into ``jnp`` / ``jax.numpy`` /
+    ``lax`` / ``jax.random``.  Inside ``jit`` this raises
+    ``TracerBoolConversionError``; outside it silently forces a device
+    sync per evaluation.  Engine step functions must use ``jnp.where``
+    / ``lax.cond`` / ``lax.while_loop`` instead (every branch in the
+    fabric engines is data-flow, which is what keeps drop/credit/onoff
+    a *dynamic operand* rather than a retrace).
+
+``JX002`` **float-literal promotion** — an integer-valued float literal
+    (``2.0``, ``1.``) combined arithmetically with a ``jnp``-rooted
+    expression.  The fabric hot path is int32 end-to-end (the
+    ``BIG_NS`` sentinel, release times, queue slots); a bare float
+    literal promotes the whole expression to float32/float64 and the
+    sentinel comparison silently loses exactness.  Write the int
+    literal, or an explicit ``jnp.float32`` cast where float is meant.
+    Literals with fractional parts (``0.5``, ``1e-3``) are assumed
+    intentionally float and are not flagged, and neither is arithmetic
+    on an expression that explicitly names a float dtype
+    (``jnp.arange(n, dtype=jnp.float32) + 1.0``) — the author already
+    opted into float there.
+
+``JX003`` **jit-bucket hazard** — ``jax.jit`` ``static_argnums`` /
+    ``static_argnames`` naming a quantity the repo's zero-new-buckets
+    contract says must be a dynamic operand (capacity, flow mode, xon,
+    burst bound, step bound, seeds/keys, injection times).  Marking one
+    static recompiles per value — exactly the bucket explosion PRs 3–7
+    eliminated.  Genuinely static shape/config args (``block``,
+    ``budget``, ``interpret``, ...) are fine.
+
+Suppression: trailing ``# jaxlint: disable=JX001`` (comma-separate for
+several, bare ``disable`` for all) on the flagged line, or
+``# jaxlint: skip-file`` anywhere in the file.
+
+CLI (the CI analysis lane)::
+
+    python -m repro.analysis.jaxlint src/ benchmarks/
+
+exits 1 when any finding survives suppression.  Pure stdlib ``ast`` —
+nothing is imported or executed, so linting broken or GPU-only code is
+safe.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable
+
+__all__ = ["LintFinding", "RULES", "lint_source", "lint_paths", "main"]
+
+RULES = {
+    "JX001": "Python-level branch on a traced (jnp/lax) value",
+    "JX002": "integer-valued float literal promotes an int32 jnp "
+             "expression",
+    "JX003": "jit static arg that the zero-new-buckets contract says "
+             "must be a dynamic operand",
+}
+
+#: module roots whose call results are traced values under jit
+_TRACED_ROOTS = ("jnp.", "jax.numpy.", "lax.", "jax.lax.", "jax.random.")
+
+#: quantities that must travel as dynamic operands (the repo's
+#: zero-new-buckets contract: sweeping any of these must not add a
+#: compilation bucket).  Names, not positions — JX003 resolves argnums
+#: through the decorated function's signature.
+DYNAMIC_OPERAND_NAMES = frozenset({
+    "capacity", "cap", "xon", "fc", "fc_mode", "flow", "max_burst",
+    "max_steps", "seed", "key", "keys", "t", "t_max", "n_events",
+})
+
+_PRAGMA = re.compile(r"#\s*jaxlint:\s*disable(?:=([A-Z0-9,\s]+))?")
+_SKIP_FILE = re.compile(r"#\s*jaxlint:\s*skip-file")
+
+
+@dataclass(frozen=True)
+class LintFinding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+               f"{self.message}"
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` attribute chains as a dotted string (None otherwise)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def _is_traced_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    d = _dotted(node.func)
+    return d is not None and any(d.startswith(r) for r in _TRACED_ROOTS)
+
+
+def _contains_traced_call(node: ast.AST) -> ast.Call | None:
+    for sub in ast.walk(node):
+        if _is_traced_call(sub):
+            return sub
+    return None
+
+
+def _int_valued_float(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Constant)
+            and isinstance(node.value, float)
+            and node.value == int(node.value))
+
+
+_FLOAT_DTYPES = {"float16", "bfloat16", "float32", "float64"}
+
+
+def _names_float_dtype(node: ast.AST) -> bool:
+    """True when the expression explicitly names a float dtype
+    (``jnp.float32`` / ``dtype=jnp.float32`` / ``.astype(jnp.float32)``)
+    — the author opted into float, so a float literal next to it is
+    intentional, not an int32 promotion bug."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _FLOAT_DTYPES:
+            return True
+        if isinstance(sub, ast.Name) and sub.id in _FLOAT_DTYPES:
+            return True
+    return False
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: list[LintFinding] = []
+        # decorator jit calls checked with the signature in hand; the
+        # generic Call visit must not re-report them
+        self._decorator_jits: set[int] = set()
+
+    def _add(self, node: ast.AST, rule: str, message: str):
+        self.findings.append(LintFinding(
+            self.path, getattr(node, "lineno", 0),
+            getattr(node, "col_offset", 0), rule, message))
+
+    # ---- JX001: traced branch -----------------------------------------
+
+    def _check_branch(self, node, test, kind: str):
+        hit = _contains_traced_call(test)
+        if hit is not None:
+            name = _dotted(hit.func) or "jnp call"
+            self._add(node, "JX001",
+                      f"{kind} condition calls {name}(...): branching "
+                      f"on a traced value raises under jit (use "
+                      f"jnp.where / lax.cond, or hoist to setup time)")
+
+    def visit_If(self, node: ast.If):
+        self._check_branch(node, node.test, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While):
+        self._check_branch(node, node.test, "while")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp):
+        self._check_branch(node, node.test, "conditional-expression")
+        self.generic_visit(node)
+
+    # ---- JX002: float-literal promotion -------------------------------
+
+    def visit_BinOp(self, node: ast.BinOp):
+        if isinstance(node.op, (ast.Add, ast.Sub, ast.Mult,
+                                ast.FloorDiv, ast.Mod)):
+            for lit, other in ((node.left, node.right),
+                               (node.right, node.left)):
+                if _int_valued_float(lit) \
+                        and _contains_traced_call(other) is not None \
+                        and not _names_float_dtype(other):
+                    self._add(node, "JX002",
+                              f"float literal {lit.value!r} promotes "
+                              f"the jnp operand out of int32; write "
+                              f"{int(lit.value)} (or an explicit float "
+                              f"cast if float is meant)")
+                    break
+        self.generic_visit(node)
+
+    # ---- JX003: jit-bucket hazard -------------------------------------
+
+    def _jit_call(self, node: ast.AST) -> ast.Call | None:
+        """``jax.jit(...)`` or ``functools.partial(jax.jit, ...)``."""
+        if not isinstance(node, ast.Call):
+            return None
+        d = _dotted(node.func)
+        if d in ("jax.jit", "jit"):
+            return node
+        if d in ("functools.partial", "partial") and node.args:
+            if _dotted(node.args[0]) in ("jax.jit", "jit"):
+                return node
+        return None
+
+    def _static_names(self, call: ast.Call,
+                      params: list[str] | None) -> list[tuple[str, ast.AST]]:
+        out: list[tuple[str, ast.AST]] = []
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                vals = kw.value.elts if isinstance(
+                    kw.value, (ast.Tuple, ast.List)) else [kw.value]
+                for v in vals:
+                    if isinstance(v, ast.Constant) and isinstance(v.value,
+                                                                  str):
+                        out.append((v.value, kw.value))
+            elif kw.arg == "static_argnums" and params is not None:
+                vals = kw.value.elts if isinstance(
+                    kw.value, (ast.Tuple, ast.List)) else [kw.value]
+                for v in vals:
+                    if isinstance(v, ast.Constant) \
+                            and isinstance(v.value, int) \
+                            and 0 <= v.value < len(params):
+                        out.append((params[v.value], kw.value))
+        return out
+
+    def _check_jit(self, call: ast.Call, params: list[str] | None):
+        for name, where in self._static_names(call, params):
+            if name in DYNAMIC_OPERAND_NAMES:
+                self._add(where, "JX003",
+                          f"static arg {name!r} must be a dynamic "
+                          f"operand (zero-new-buckets contract): "
+                          f"marking it static recompiles per value")
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        params = [a.arg for a in (node.args.posonlyargs
+                                  + node.args.args)]
+        for dec in node.decorator_list:
+            call = self._jit_call(dec)
+            if call is not None:
+                self._decorator_jits.add(id(call))
+                self._check_jit(call, params)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_Call(self, node: ast.Call):
+        # non-decorator uses: jax.jit(f, static_argnames=...) — argnums
+        # cannot be resolved to names here, argnames still can
+        call = self._jit_call(node)
+        if call is not None and id(call) not in self._decorator_jits:
+            self._check_jit(call, None)
+        self.generic_visit(node)
+
+
+def _suppressed(finding: LintFinding, lines: list[str]) -> bool:
+    if not 1 <= finding.line <= len(lines):
+        return False
+    m = _PRAGMA.search(lines[finding.line - 1])
+    if m is None:
+        return False
+    if m.group(1) is None:
+        return True  # bare "disable": all rules
+    codes = {c.strip() for c in m.group(1).split(",")}
+    return finding.rule in codes
+
+
+def lint_source(source: str, path: str = "<string>") -> list[LintFinding]:
+    """Lint one source string; returns findings after pragma filtering."""
+    if _SKIP_FILE.search(source):
+        return []
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as err:
+        return [LintFinding(path, err.lineno or 0, err.offset or 0,
+                            "JX000", f"syntax error: {err.msg}")]
+    visitor = _Visitor(path)
+    visitor.visit(tree)
+    lines = source.splitlines()
+    out = [f for f in visitor.findings if not _suppressed(f, lines)]
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out
+
+
+def lint_paths(paths: Iterable[str | Path]) -> list[LintFinding]:
+    """Lint every ``*.py`` under the given files/directories."""
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+    findings: list[LintFinding] = []
+    for f in files:
+        findings.extend(lint_source(f.read_text(encoding="utf-8"), str(f)))
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.jaxlint",
+        description="JAX-pitfall lint (JX001 traced-branch, JX002 "
+                    "float-literal promotion, JX003 jit-bucket hazard)")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to lint")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress the summary line")
+    args = ap.parse_args(argv)
+    findings = lint_paths(args.paths)
+    for f in findings:
+        print(f)
+    if not args.quiet:
+        print(f"jaxlint: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

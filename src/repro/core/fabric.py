@@ -56,7 +56,8 @@ from .network import (DEFAULT_CHUNK_SIZE, ENGINES, FabricBatchResult,
                       _RING_L_FLOOR, _RING_N_FLOOR, _RING_R_FLOOR,
                       _RING_STREAM_FLOOR, _check_reachable, _expand,
                       _first_hop_queues, _in_edge_ranks, _overflow_guard,
-                      _pad_to, _pow2ceil, _prefill, _ring_engine,
+                      _overflow_guard_routed, _pad_to, _pow2ceil,
+                      _prefill, _ring_engine, _route_link_tx,
                       _ring_engine_batch, _routes_with_trees, _slot_engine,
                       _slot_engine_batch, _stream_quota,
                       _tree_stream_quota, _unicast_routes)
@@ -355,26 +356,54 @@ class Fabric:
         # normalised per-link cost vectors: the engines' dynamic operands
         self.timing_arrays = link_timing_arrays(timing, L)
         tc, tv, ti = self.timing_arrays
-        self._worst_cost = int((tc.astype(np.int64)
-                                + np.maximum(tv, ti)).max(initial=1))
+        # per-link worst single-transmission cost (the tight routed
+        # clock-budget guard) and its fabric-wide max (the documented
+        # fallback bound when a broken table defeats the route walk)
+        self._link_cost = tc.astype(np.int64) + np.maximum(tv, ti)
+        self._worst_cost = int(self._link_cost.max(initial=1))
         self.routing_table = policy.build(topo)
-        # Lossless flow control relies on every route making progress:
-        # a next-hop cycle (possible only through table_override hooks
+        # Lossless flow control relies on every route making progress.
+        # A next-hop cycle (possible only through table_override hooks
         # or prebuilt tables — BFS/Dijkstra tables are acyclic by
-        # construction) would deadlock the credit/on-off stall chain
-        # instead of merely truncating at the step bound, so it is
-        # refused eagerly here.  Drop mode keeps the historical
-        # behaviour (events on a cyclic route are dropped or truncated).
+        # construction) breaks that for the pairs caught on it; PR 7
+        # refused ANY such table outright.  The precise Dally–Seitz
+        # criterion (repro.analysis.verify) is finer: what deadlocks a
+        # stall chain is a cycle in the CHANNEL-DEPENDENCY graph of the
+        # routes events actually ride.  So: when broken pairs exist but
+        # the terminating routes' CDG is acyclic, the fabric is
+        # admitted and the broken pairs are QUARANTINED — planning
+        # refuses traffic that addresses them (see _plan_impl) while
+        # everything else provably drains.  Only when the remaining
+        # CDG itself carries a cycle is construction refused, with the
+        # offending channel cycle named.  Drop mode keeps the
+        # historical behaviour (events on a cyclic route are dropped
+        # or truncated; pops are never gated, so no deadlock).  Note
+        # a clean table (no broken pairs) may still have a cyclic CDG
+        # (every ring >= 5 does) — that hazard is graded per-spec by
+        # Fabric.verify(), which weighs channel demand against
+        # capacity; it is not a construction error.
+        self._nonterm_mask: np.ndarray | None = None
         if self.queues.flow != "drop":
             bad = find_route_cycles(topo, self.routing_table)
             if len(bad):
+                from ..analysis.verify import channel_graph
+                g = channel_graph(topo, self.routing_table,
+                                  exclude_pairs=bad)
+                cycle = g.find_cycle()
                 shown = ", ".join(f"{c}->{d}" for c, d in bad[:4].tolist())
-                raise ValueError(
-                    f"routing table has {len(bad)} (chip, dest) pair(s) "
-                    f"whose route never reaches the destination (next-hop "
-                    f"cycle or dead-end), e.g. {shown}; "
-                    f"flow={self.queues.flow!r} would deadlock on them — "
-                    f"fix the table or use flow='drop'")
+                if cycle is not None:
+                    raise ValueError(
+                        f"routing table has {len(bad)} (chip, dest) "
+                        f"pair(s) whose route never reaches the "
+                        f"destination (next-hop cycle or dead-end), "
+                        f"e.g. {shown}, and the terminating routes' "
+                        f"channel-dependency graph also carries a "
+                        f"cycle ({g.describe_cycle(cycle)}); "
+                        f"flow={self.queues.flow!r} would deadlock — "
+                        f"fix the table or use flow='drop'")
+                mask = np.zeros((topo.n_chips, topo.n_chips), bool)
+                mask[bad[:, 0], bad[:, 1]] = True
+                self._nonterm_mask = mask
         self._in_rank, self._D = _in_edge_ranks(topo)
         self._init_tx = np.broadcast_to(
             np.asarray(self.queues.initial_tx, np.int32), (L,))
@@ -412,6 +441,26 @@ class Fabric:
                 f"{len(self._compiled)} compiled bucket(s))")
 
     # --- lifecycle ------------------------------------------------------
+
+    def verify(self, spec: TrafficSpec | None = None, *,
+               max_steps: int | None = None):
+        """Static pre-flight verification — prove properties, run nothing.
+
+        Builds the channel-dependency graph of this fabric's routes
+        (unicast + in-fabric multicast branchings), runs Dally–Seitz
+        cycle detection, checks route termination / reachability /
+        replication-table completeness, and bounds the worst-case int32
+        clock against the ``BIG_NS`` sentinel (tight per-link budget).
+        With ``spec`` the deadlock grading is demand-aware: a CDG cycle
+        is an error only if every channel on some cycle can actually
+        fill to capacity under the spec's routed traffic.
+
+        Returns a :class:`repro.analysis.verify.VerifyReport`;
+        ``report.raise_if_failed()`` turns error findings into the same
+        ``ValueError`` refusal contract construction/planning uses.
+        """
+        from ..analysis.verify import verify_fabric
+        return verify_fabric(self, spec, max_steps=max_steps)
 
     def compile(self, spec: TrafficSpec, *, max_steps: int | None = None,
                 warm: bool = True) -> "CompiledFabric":
@@ -494,9 +543,10 @@ class Fabric:
         Batch-path caveat: with ``max_steps=None`` the batch shares the
         max of the per-spec default step bounds.  That is bit-exact with
         solo runs whenever each run drains (the bound does not bind) —
-        the universal case, since cyclic tables are refused for the
-        lossless modes at construction and drop-mode routes always
-        terminate.  Pass an explicit ``max_steps`` to pin the bound.
+        the universal case, since lossless-mode traffic on broken
+        routes is refused at plan time (cyclic-CDG tables already at
+        construction) and drop-mode routes always terminate.  Pass an
+        explicit ``max_steps`` to pin the bound.
         """
         from .adaptive import AdaptiveRouting
         specs = list(specs)
@@ -735,6 +785,23 @@ class Fabric:
             total_tx = int(rt.hops[src, dest].sum())
         if L == 0 or E == 0:
             raise ValueError("need at least one link and one event")
+        # quarantined route pairs (broken walks admitted at construction
+        # because the remaining CDG is acyclic): lossless flow refuses
+        # traffic that would ride them — those events can never be
+        # delivered, and their stall chain would wedge the run
+        if self._nonterm_mask is not None:
+            hit = self._nonterm_mask[u_src, u_dest]
+            if np.any(hit):
+                pairs = np.unique(np.stack([u_src[hit], u_dest[hit]], 1),
+                                  axis=0)
+                shown = ", ".join(f"{c}->{d}"
+                                  for c, d in pairs[:4].tolist())
+                raise ValueError(
+                    f"traffic addresses quarantined route pair(s) "
+                    f"{shown} whose walk never reaches the destination "
+                    f"(next-hop cycle or dead-end); "
+                    f"flow={self.queues.flow!r} would deadlock on them "
+                    f"— re-route those events or use flow='drop'")
 
         # flow-control scalars: all dynamic operands, so switching between
         # drop/credit/onoff (or sweeping the capacity) NEVER adds a
@@ -756,8 +823,21 @@ class Fabric:
         C = max(E, 1)
         if max_steps is None:
             max_steps = 4 * total_tx + 2 * E + 64 * (rt.diameter + 2)
-        _overflow_guard(int(copy_t.max(initial=0)), total_tx,
-                        self._worst_cost)
+        # int32 clock budget vs the BIG_NS sentinel: charge each link
+        # only the transmissions that actually cross it (tight bound —
+        # slow links no longer tax traffic that avoids them); fall back
+        # to the global worst-cost bound when a broken table defeats
+        # the route walk (drop mode admits cyclic tables)
+        t_max = int(copy_t.max(initial=0))
+        link_tx, walk_ok = _route_link_tx(rt, topo.links, u_src, u_dest,
+                                          L, topo.n_chips)
+        if walk_ok:
+            for tr, cnt in zip(trees, tree_counts):
+                if tr.n_edges:
+                    np.add.at(link_tx, tr.edges[:, 1], int(cnt))
+            _overflow_guard_routed(t_max, link_tx, self._link_cost)
+        else:
+            _overflow_guard(t_max, total_tx, self._worst_cost)
         R, K = route_out.shape[1], route_out.shape[2]
 
         eng = self.engine.resolved

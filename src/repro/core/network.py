@@ -584,6 +584,15 @@ def _overflow_guard(t_max: int, total_tx: int, worst_cost: int):
     fortiori).  ``worst_cost`` is the maximum single-transmission cost
     over all links (per-link heterogeneous timing maximises over the
     fabric).
+
+    This is the *global* bound — the documented fallback when per-route
+    tables are unavailable or broken (a cyclic/dead-end override walks
+    forever, so its per-link transmission counts are undefined).  When
+    the routes do terminate, :func:`_overflow_guard_routed` charges each
+    transmission its own link's cost instead of the fabric-wide worst —
+    a strictly tighter bound on heterogeneous fabrics (slow LVDS links
+    no longer tax traffic that never crosses them), so fewer false
+    refusals.
     """
     bound = int(t_max) + int(total_tx) * int(worst_cost)
     if bound >= int(_BIG):
@@ -593,6 +602,68 @@ def _overflow_guard(t_max: int, total_tx: int, worst_cost: int):
             f"simulations must keep max(t) + total_hops * "
             f"{worst_cost} ns below it; rebase injection times or split "
             f"the simulation.")
+
+
+def _route_link_tx(rt: RoutingTable, links: np.ndarray, src: np.ndarray,
+                   dest: np.ndarray, L: int, n_chips: int):
+    """Per-link transmission counts along the actual unicast routes.
+
+    Walks every event's deterministic path (the same O(E · diameter)
+    numpy pattern as ``_stream_quota``, collapsed to links) and counts
+    how many transmissions each link carries.  Returns ``(counts (L,)
+    int64, ok)``; ``ok`` is False when some walk failed to terminate
+    within ``n_chips - 1`` hops — a cyclic or dead-end override table,
+    whose per-link counts are undefined (the caller falls back to the
+    global :func:`_overflow_guard` bound).
+    """
+    counts = np.zeros(L, np.int64)
+    c = np.asarray(src, np.int64).copy()
+    dest = np.asarray(dest, np.int64)
+    active = c != dest
+    for _ in range(max(n_chips - 1, 0)):
+        if not active.any():
+            break
+        l = np.where(active, rt.next_link[c, dest], -1)
+        has = active & (l >= 0)
+        l_g = np.maximum(l, 0)
+        s_g = np.clip(np.where(has, rt.out_side[c, dest], 0), 0, 1)
+        np.add.at(counts, l_g[has], 1)
+        c = np.where(has, links[l_g, 1 - s_g], c)
+        active = has & (c != dest)
+    return counts, not bool(active.any())
+
+
+def _clock_bound(t_max: int, link_tx: np.ndarray,
+                 link_cost: np.ndarray) -> int:
+    """Worst-case end-time bound with per-link transmission costs:
+    ``t_max + sum_l link_tx[l] * link_cost[l]`` — each transmission pays
+    its own link's worst single-transmission cost rather than the
+    fabric-wide maximum."""
+    return int(t_max) + int((np.asarray(link_tx, np.int64)
+                             * np.asarray(link_cost, np.int64)).sum())
+
+
+def _overflow_guard_routed(t_max: int, link_tx: np.ndarray,
+                           link_cost: np.ndarray):
+    """Route-aware ``BIG_NS`` guard: the tight per-link clock budget.
+
+    Same refusal contract as :func:`_overflow_guard` (see there for why
+    the sentinel must stay unreachable), but the bound charges each
+    link only the transmissions that actually cross it under the
+    routing tables — on fabrics mixing fast parallel and slow serial
+    links this admits workloads the global worst-cost bound falsely
+    refused.
+    """
+    bound = _clock_bound(t_max, link_tx, link_cost)
+    if bound >= int(_BIG):
+        worst = int(np.asarray(link_cost).max(initial=1))
+        raise ValueError(
+            f"clock overflow risk: worst-case end time {bound} ns "
+            f"(routed per-link bound) reaches the BIG_NS sentinel "
+            f"({int(_BIG)} ns). Long-running simulations must keep "
+            f"max(t) + sum over links of transmissions * per-link cost "
+            f"(<= {worst} ns each) below it; rebase injection times or "
+            f"split the simulation.")
 
 
 def _jit_cached(fn, donate_argnums=()):

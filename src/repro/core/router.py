@@ -29,7 +29,8 @@ import numpy as np
 
 __all__ = [
     "AddressSpec", "Topology", "RoutingTable", "MulticastTable",
-    "MulticastTree", "find_route_cycles", "line_topology", "ring_topology",
+    "MulticastTree", "find_route_cycles", "route_step_tables",
+    "find_tree_cycles", "line_topology", "ring_topology",
     "mesh2d_topology",
 ]
 
@@ -276,18 +277,92 @@ class RoutingTable:
                             hops=hops)
 
 
-def find_route_cycles(topo: Topology, rt: RoutingTable) -> np.ndarray:
-    """All ``(chip, dest)`` pairs whose forwarding walk never reaches
-    ``dest`` — i.e. the pairs caught on (or feeding into) a next-hop
+def route_step_tables(topo: Topology, rt: RoutingTable):
+    """One-step traversal tables of the unicast functional route graph.
+
+    ``step_to[c, d]`` is the chip an event at ``c`` bound for ``d``
+    forwards to (the far endpoint of the chosen link) and
+    ``step_q[c, d]`` the flat endpoint-queue id it transmits from
+    (``link * 2 + out_side`` — the engines' queue encoding); both are
+    -1 where no route exists.  This is THE definition of "the route an
+    event takes": :func:`find_route_cycles` and the static verifier
+    (``repro.analysis.verify``) walk the same tables, so the
+    termination check and the channel-dependency graph can never
+    disagree about a path.
+    """
+    links = topo.links
+    nl = np.asarray(rt.next_link)
+    os_ = np.asarray(rt.out_side)
+    step_to = np.where(nl >= 0,
+                       links[np.maximum(nl, 0), 1 - np.maximum(os_, 0)],
+                       -1).astype(np.int32)
+    step_q = np.where(nl >= 0, nl * 2 + np.maximum(os_, 0),
+                      -1).astype(np.int32)
+    return step_to, step_q
+
+
+def find_tree_cycles(topo: Topology, trees) -> np.ndarray:
+    """Chips whose in-fabric replication never terminates, per tree.
+
+    A :class:`MulticastTree` route is the multicast analogue of a
+    unicast ``next_link`` column: an event arriving at chip ``u`` on
+    tree route ``N + i`` replicates along the tree's out-edges of
+    ``u``.  Trees built by :meth:`MulticastTree.build` are rooted
+    forests by construction, but hand-built trees (or corrupted
+    replication tables) can carry an edge cycle — an event riding one
+    replicates forever, exactly the failure mode a cyclic unicast
+    column has.  For each tree the edge graph ``u -> v`` is reduced to
+    a fixpoint of "all of my out-edges terminate"; chips that never
+    reach it (they lie on, or feed into, an edge cycle) are reported
+    as ``(chip, n_chips + i)`` pairs — the same (chip, route-id)
+    coordinates the engines' replication tables use.
+    """
+    n = topo.n_chips
+    bad: list[tuple[int, int]] = []
+    for i, tree in enumerate(trees):
+        edges = np.asarray(tree.edges, np.int64).reshape(-1, 4)
+        if not len(edges):
+            continue
+        terminated = np.ones(n, bool)
+        has_out = np.zeros(n, bool)
+        has_out[edges[:, 0]] = True
+        terminated[has_out] = False
+        for _ in range(n):
+            ok = terminated.copy()
+            # a chip terminates once every chip it replicates to does
+            nxt_ok = np.ones(n, bool)
+            np.logical_and.at(nxt_ok, edges[:, 0], terminated[edges[:, 3]])
+            ok |= nxt_ok & has_out
+            if np.array_equal(ok, terminated):
+                break
+            terminated = ok
+        touched = np.zeros(n, bool)
+        touched[edges[:, 0]] = True
+        touched[edges[:, 3]] = True
+        for c in np.flatnonzero(touched & ~terminated):
+            bad.append((int(c), n + i))
+    return np.asarray(bad, np.int32).reshape(-1, 2)
+
+
+def find_route_cycles(topo: Topology, rt: RoutingTable,
+                      trees=()) -> np.ndarray:
+    """All ``(chip, route)`` pairs whose forwarding walk never reaches
+    delivery — i.e. the pairs caught on (or feeding into) a next-hop
     cycle of a hand-built / overridden table.
 
     For each destination the ``next_link`` column is a functional graph
     on chips; a walk from every chip either reaches the destination
     within ``n_chips - 1`` hops or is provably cyclic.  The walk is
-    vectorised over all (chip, dest) pairs at once (numpy, setup-time).
-    Pairs with no route at all (``next_link < 0`` off-diagonal) are
-    *unreachable*, not cyclic, and are not reported — ``Fabric`` rejects
-    those separately when traffic actually addresses them.
+    vectorised over all (chip, dest) pairs at once (numpy, setup-time)
+    over the shared :func:`route_step_tables` traversal.  Pairs with no
+    route at all (``next_link < 0`` off-diagonal) are *unreachable*,
+    not cyclic, and are not reported — ``Fabric`` rejects those
+    separately when traffic actually addresses them.
+
+    ``trees`` extends the check to in-fabric multicast replication
+    (route id ``n_chips + i`` for ``trees[i]``): chips whose
+    replication walk cycles are reported in the same (chip, route)
+    coordinates — see :func:`find_tree_cycles`.
 
     Tables built by :meth:`RoutingTable.build` (BFS) or
     :meth:`RoutingTable.build_weighted` (Dijkstra — next hops strictly
@@ -297,25 +372,24 @@ def find_route_cycles(topo: Topology, rt: RoutingTable) -> np.ndarray:
     mode) or deadlock the lossless flow-control modes.  Routes that
     dead-end mid-path (an intermediate chip with no next hop) are
     reported too — the walk never arrives either way.  Returns an
-    ``(n_bad, 2)`` int32 array of ``(chip, dest)`` pairs.
+    ``(n_bad, 2)`` int32 array of ``(chip, route)`` pairs.
     """
-    n, links = topo.n_chips, topo.links
-    nl = np.asarray(rt.next_link)
-    os_ = np.asarray(rt.out_side)
-    # chip the walk steps to: the far endpoint of the chosen link
-    step_to = np.where(nl >= 0,
-                       links[np.maximum(nl, 0), 1 - np.maximum(os_, 0)],
-                       -1)
+    n = topo.n_chips
+    step_to, _step_q = route_step_tables(topo, rt)
     dest = np.broadcast_to(np.arange(n)[None, :], (n, n))
     pos = np.broadcast_to(np.arange(n)[:, None], (n, n)).copy()
-    routed = (nl >= 0) & (pos != dest)
+    routed = (np.asarray(rt.next_link) >= 0) & (pos != dest)
     for _ in range(max(n - 1, 0)):
         at_dest = pos == dest
         nxt = step_to[pos, dest]
         # walk only pairs that still have a route and haven't arrived
         pos = np.where(~at_dest & routed & (nxt >= 0), nxt, pos)
     cyclic = routed & (pos != dest)
-    return np.argwhere(cyclic).astype(np.int32)
+    out = np.argwhere(cyclic).astype(np.int32)
+    if len(trees):
+        out = np.concatenate(
+            [out.reshape(-1, 2), find_tree_cycles(topo, trees)], 0)
+    return out.astype(np.int32)
 
 
 # -----------------------------------------------------------------------

@@ -17,9 +17,12 @@ Contracts under test:
 * batches refuse mixed shape buckets, empty spec lists, fabric/spec
   count mismatches and AdaptiveRouting (sequential feedback);
 * the route-cycle detector (``find_route_cycles``) reports exactly the
-  (chip, dest) pairs whose walk never arrives, and lossless flow modes
-  refuse cyclic tables at ``Fabric`` construction (drop mode keeps the
-  historical truncation behaviour);
+  (chip, dest) pairs whose walk never arrives; lossless flow modes
+  refuse a broken table at construction only when the terminating
+  routes' channel-dependency graph also carries a cycle (Dally–Seitz),
+  otherwise the broken pairs are quarantined and traffic addressing
+  them is refused at plan time (drop mode keeps the historical
+  truncation behaviour);
 * ``traffic.monte_carlo`` instance i is bit-identical to the solo
   generator under subkey i; ``telemetry.link_load_batch`` matches
   per-instance ``link_load``;
@@ -242,6 +245,10 @@ class TestRunManyDispatch:
         assert len(results) == 2
 
 
+def jnp_i32(x):
+    return np.asarray(x, np.int32)
+
+
 def _cyclic_override(topo_, rt):
     """Bend dest-1 routing on ring(4) into the 2-cycle 0 <-> 3."""
     nl = rt.next_link.copy()
@@ -249,6 +256,31 @@ def _cyclic_override(topo_, rt):
     nl[0, 1], os[0, 1] = 3, 1   # chip 0 -> link 3 -> chip 3
     nl[3, 1], os[3, 1] = 3, 0   # chip 3 -> link 3 -> chip 0
     return RoutingTable(next_link=nl, out_side=os, hops=rt.hops)
+
+
+def _clockwise(topo_, rt):
+    """All-clockwise table on ring(n): chip c always exits on link c."""
+    n = rt.next_link.shape[0]
+    nl = rt.next_link.copy()
+    os = rt.out_side.copy()
+    hops = rt.hops.copy()
+    for c in range(n):
+        for d in range(n):
+            if c != d:
+                nl[c, d], os[c, d], hops[c, d] = c, 0, (d - c) % n
+    return RoutingTable(next_link=nl, out_side=os, hops=hops)
+
+
+def _cw_broken(topo_, rt):
+    """All-clockwise plus the dest-1 bend: the surviving routes still
+    carry the full clockwise channel cycle, so lossless flow must
+    refuse at construction."""
+    cw = _clockwise(topo_, rt)
+    nl = cw.next_link.copy()
+    os = cw.out_side.copy()
+    nl[0, 1], os[0, 1] = 3, 1
+    nl[3, 1], os[3, 1] = 3, 0
+    return RoutingTable(next_link=nl, out_side=os, hops=cw.hops)
 
 
 class TestRouteCycleDetector:
@@ -263,13 +295,37 @@ class TestRouteCycleDetector:
         assert {tuple(p) for p in bad.tolist()} == {(0, 1), (3, 1)}
 
     @pytest.mark.parametrize("flow,cap", [("credit", 4), ("onoff", 4)])
-    def test_lossless_refuses_cyclic_table(self, flow, cap):
-        """A cyclic route would deadlock the stall chain; refused at
-        construction, naming offending pairs."""
+    def test_lossless_quarantines_acyclic_cdg_table(self, flow, cap):
+        """On ring(4) the 0 <-> 3 bend leaves the terminating routes'
+        channel-dependency graph acyclic, so the table is ADMITTED
+        (Dally-Seitz: the stall chain cannot loop) with the broken
+        pairs quarantined — clean traffic runs lossless, traffic
+        addressing a quarantined pair is refused at plan time."""
+        fab = Fabric(ring_topology(4),
+                     routing=StaticShortestPath(
+                         table_override=_cyclic_override),
+                     queues=QueuePolicy(capacity=cap, flow=flow))
+        clean = tr.TrafficSpec(
+            src=jnp_i32([0, 1, 2, 3]), t=jnp_i32([0, 0, 0, 0]),
+            dest=jnp_i32([2, 3, 0, 2]))  # avoids (0,1) and (3,1)
+        res = fab.run(clean)
+        assert int(res.delivered) == 4
+        assert int(res.drops) == 0
+        quarantined = tr.TrafficSpec(
+            src=jnp_i32([0]), t=jnp_i32([0]), dest=jnp_i32([1]))
+        with pytest.raises(ValueError, match=r"quarantined.*never "
+                                             r"reaches"):
+            fab.run(quarantined)
+
+    @pytest.mark.parametrize("flow,cap", [("credit", 4), ("onoff", 4)])
+    def test_lossless_refuses_cyclic_cdg_table(self, flow, cap):
+        """When the surviving routes' channel-dependency graph is
+        itself cyclic the table is refused at construction, naming a
+        broken pair and the channel cycle."""
         with pytest.raises(ValueError, match=r"never reaches.*0->1"):
             Fabric(ring_topology(4),
                    routing=StaticShortestPath(
-                       table_override=_cyclic_override),
+                       table_override=_cw_broken),
                    queues=QueuePolicy(capacity=cap, flow=flow))
 
     def test_drop_mode_keeps_cyclic_table(self):

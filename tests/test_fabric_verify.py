@@ -1,0 +1,364 @@
+"""Fabric static verifier: ``Fabric.verify`` / ``repro.analysis.verify``.
+
+Contracts under test:
+
+* certificates — drop mode is always deadlock-free (``"drop-mode"``),
+  an acyclic channel-dependency graph certifies the stall modes
+  (``"acyclic-cdg"``), and a cyclic CDG whose every cycle crosses an
+  unsaturable channel certifies by demand (``"capacity-slack"``);
+* a verify()-admitted lossless config actually drains: delivered ==
+  injected, zero drops, and the step bound is non-binding (doubling it
+  changes nothing);
+* a cyclic ROUTE graph with an acyclic CDG (the ring(4) 0 <-> 3 bend)
+  is admitted and runs lossless bit-exactly on all three engines —
+  the precise Dally–Seitz criterion, not PR 7's blanket refusal;
+* a genuine saturable CDG cycle (all-clockwise ring(4) under credit
+  flow with tiny capacity) is named by verify() as an error, and the
+  engine run it predicts really does stall forever: delivered is
+  identical at the step bound and at twice the step bound, below
+  injected;
+* ``find_route_cycles`` extended over multicast trees reports
+  ``(chip, n_chips + i)`` coordinates for a hand-built cyclic tree,
+  and ``verify_fabric`` folds the same traversal into its findings;
+* the tight per-link clock budget admits heterogeneous-timing configs
+  the global worst-cost bound falsely refused, and reports the
+  headroom against the ``BIG_NS`` sentinel.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import verify_fabric
+from repro.analysis.verify import channel_graph, describe_channel
+from repro.core import network as net
+from repro.core import traffic as tr
+from repro.core.fabric import Fabric, QueuePolicy, StaticShortestPath
+from repro.core.link import PAPER_TIMING, per_link_timing
+from repro.core.router import (MulticastTree, RoutingTable, find_route_cycles,
+                               find_tree_cycles, line_topology, ring_topology)
+
+assert_bit_exact = net.assert_results_equal
+BIG = 2 ** 30
+
+
+def i32(x):
+    return np.asarray(x, np.int32)
+
+
+def _poisson(key=3, n=8, epc=24):
+    return tr.poisson(jax.random.PRNGKey(key), n, epc)
+
+
+def _bent_override(topo_, rt):
+    """Ring(4) dest-1 bend: routes (0,1)/(3,1) loop 0 <-> 3 forever,
+    yet the surviving routes' CDG is acyclic."""
+    nl = rt.next_link.copy()
+    os = rt.out_side.copy()
+    nl[0, 1], os[0, 1] = 3, 1
+    nl[3, 1], os[3, 1] = 3, 0
+    return RoutingTable(next_link=nl, out_side=os, hops=rt.hops)
+
+
+def _clockwise(topo_, rt):
+    """All-clockwise ring table: every route circles one way, so the
+    channel-dependency graph is one big cycle."""
+    n = rt.next_link.shape[0]
+    nl = rt.next_link.copy()
+    os = rt.out_side.copy()
+    hops = rt.hops.copy()
+    for c in range(n):
+        for d in range(n):
+            if c != d:
+                nl[c, d], os[c, d], hops[c, d] = c, 0, (d - c) % n
+    return RoutingTable(next_link=nl, out_side=os, hops=hops)
+
+
+def _checks(report):
+    return {f.check for f in report.findings}
+
+
+class TestCertificates:
+    def test_drop_mode_always_certified(self):
+        fab = Fabric(ring_topology(16))
+        rep = fab.verify()
+        assert rep.ok and rep.deadlock_free
+        assert rep.certificate == "drop-mode"
+        # the method delegates to the functional entrypoint
+        assert verify_fabric(fab).certificate == "drop-mode"
+
+    def test_small_ring_acyclic_cdg(self):
+        """Ring(4) BFS routes are <= 2 hops; their CDG has no cycle, so
+        credit flow is certified structurally, before any spec."""
+        fab = Fabric(ring_topology(4),
+                     queues=QueuePolicy(capacity=8, flow="credit"))
+        rep = fab.verify()
+        assert rep.ok and rep.deadlock_free
+        assert rep.certificate == "acyclic-cdg"
+        assert rep.cdg_cycle is None
+
+    def test_big_ring_cyclic_cdg_warns_without_spec(self):
+        """Ring(16) BFS routes wrap far enough that the CDG is cyclic.
+        Without a spec the hazard cannot be graded by demand: warning,
+        not proven deadlock-free, but not an error either."""
+        fab = Fabric(ring_topology(16),
+                     queues=QueuePolicy(capacity=64, flow="credit"))
+        rep = fab.verify()
+        assert rep.ok and not rep.deadlock_free
+        assert rep.certificate == ""
+        assert rep.cdg_cycle is not None
+        assert any(f.severity == "warning" and f.check == "cdg-cycle"
+                   for f in rep.findings)
+
+    def test_big_ring_capacity_slack_with_spec(self):
+        """With a spec the same cyclic CDG is graded by static demand:
+        uniform ring(16) traffic never fills the antipodal channels, so
+        every cycle crosses an unsaturable channel and credit flow is
+        certified."""
+        fab = Fabric(ring_topology(16),
+                     queues=QueuePolicy(capacity=64, flow="credit"))
+        rep = fab.verify(_poisson(2, 16, 24))
+        assert rep.ok and rep.deadlock_free
+        assert rep.certificate == "capacity-slack"
+        assert any(f.severity == "info" and f.check == "cdg-cycle"
+                   for f in rep.findings)
+
+    def test_summary_mentions_certificate(self):
+        rep = Fabric(ring_topology(8)).verify(_poisson())
+        assert "drop-mode" in rep.summary()
+        assert rep.raise_if_failed() is rep
+
+
+class TestAdmittedConfigsDrain:
+    """The verifier's soundness direction: admitted => drains."""
+
+    @pytest.mark.parametrize("flow,cap", [("drop", None), ("credit", 64),
+                                          ("onoff", 64)])
+    def test_admitted_lossless_delivers_everything(self, flow, cap):
+        spec = _poisson(5, 8, 16)
+        fab = Fabric(ring_topology(8),
+                     queues=QueuePolicy(capacity=cap, flow=flow))
+        rep = fab.verify(spec)
+        assert rep.ok, rep.summary()
+        res = fab.run(spec)
+        assert int(res.delivered) == res.injected
+        assert int(res.drops) == 0
+
+    def test_step_bound_non_binding(self):
+        """Admitted configs drain strictly before the default bound:
+        doubling max_steps is bit-identical."""
+        spec = _poisson(7, 8, 16)
+        fab = Fabric(ring_topology(8),
+                     queues=QueuePolicy(capacity=64, flow="credit"))
+        assert fab.verify(spec).ok
+        base = fab._plan(spec, None).max_steps
+        a = fab.run(spec, max_steps=base)
+        b = fab.run(spec, max_steps=2 * base)
+        assert int(a.delivered) == a.injected
+        assert int(a.delivered) == int(b.delivered)
+        assert int(a.t_end) == int(b.t_end)
+
+
+class TestCyclicRouteAcyclicCDG:
+    """The precision gate: a cyclic route graph alone is NOT a deadlock
+    — only a cyclic channel-dependency graph is."""
+
+    def _fabric(self, engine):
+        return Fabric(ring_topology(4),
+                      routing=StaticShortestPath(
+                          table_override=_bent_override),
+                      queues=QueuePolicy(capacity=8, flow="credit"),
+                      engine=engine)
+
+    def test_admitted_with_quarantine_warning(self):
+        rep = self._fabric("reference").verify()
+        assert rep.ok and rep.deadlock_free
+        assert rep.certificate == "acyclic-cdg"
+        assert any(f.severity == "warning"
+                   and f.check == "route-termination"
+                   for f in rep.findings)
+        assert {tuple(p) for p in rep.route_cycles.tolist()} \
+            == {(0, 1), (3, 1)}
+
+    def test_runs_lossless_bit_exact_on_all_engines(self):
+        clean = tr.TrafficSpec(src=i32([0, 1, 2, 3, 0, 2]),
+                               t=i32([0, 0, 0, 0, 40, 40]),
+                               dest=i32([2, 3, 0, 2, 3, 1]))
+        ref = self._fabric("reference").run(clean)
+        assert int(ref.delivered) == ref.injected
+        assert int(ref.drops) == 0
+        for engine in ("ring", "pallas"):
+            assert_bit_exact(ref, self._fabric(engine).run(clean),
+                             f"bent/{engine}")
+
+    def test_quarantined_traffic_refused_with_spec_verify(self):
+        fab = self._fabric("reference")
+        rep = fab.verify(tr.TrafficSpec(src=i32([0]), t=i32([0]),
+                                        dest=i32([1])))
+        assert not rep.ok
+        assert any(f.severity == "error"
+                   and f.check == "route-termination"
+                   for f in rep.findings)
+
+
+class TestDeadlockPrediction:
+    """The verifier's completeness direction: the saturable-cycle error
+    it reports corresponds to a real permanent stall."""
+
+    def _fabric(self):
+        return Fabric(ring_topology(4),
+                      routing=StaticShortestPath(
+                          table_override=_clockwise),
+                      queues=QueuePolicy(capacity=2, flow="credit"))
+
+    def _spec(self):
+        src = np.repeat(np.arange(4, dtype=np.int32), 8)
+        return tr.TrafficSpec(src=src,
+                              t=i32(np.arange(32) * 5),
+                              dest=i32((src + 3) % 4))
+
+    def test_verify_names_saturable_cycle(self):
+        rep = self._fabric().verify(self._spec())
+        assert not rep.ok and not rep.deadlock_free
+        err = [f for f in rep.findings
+               if f.severity == "error" and f.check == "cdg-cycle"]
+        assert err, rep.summary()
+        for ch in ("L0:0->1", "L1:1->2", "L2:2->3", "L3:3->0"):
+            assert ch in err[0].message
+
+    def test_stall_is_permanent(self):
+        """Forcing the refused config past the verifier: delivery stops
+        dead and MORE steps change nothing — the signature of a
+        deadlock, not slow progress truncated early."""
+        spec = self._spec()
+        a = self._fabric().run(spec, max_steps=400)
+        b = self._fabric().run(spec, max_steps=800)
+        assert int(a.delivered) == int(b.delivered) < a.injected
+        assert int(a.drops) == 0  # stalled, not dropped
+
+    def test_clean_table_same_capacity_drains(self):
+        """Control: identical traffic and capacity under the BFS table
+        (acyclic CDG) drains completely — the stall above really is
+        the routing cycle, not the tiny capacity."""
+        fab = Fabric(ring_topology(4),
+                     queues=QueuePolicy(capacity=2, flow="credit"))
+        assert fab.verify(self._spec()).ok
+        res = fab.run(self._spec())
+        assert int(res.delivered) == res.injected
+
+
+class TestTreeCycles:
+    def _cyclic_tree(self, topo):
+        """Hand-built 'tree' on ring(4) whose edges 1->2->3->1 loop."""
+        edges = i32([[0, 0, 0, 1],      # src out-edge 0 -> 1
+                     [1, 1, 0, 2],      # 1 -> 2
+                     [2, 2, 0, 3],      # 2 -> 3
+                     [3, 1, 1, 1]])     # 3 -> 1 : closes the loop
+        deliver = np.zeros(topo.n_chips, bool)
+        deliver[[1, 2, 3]] = True
+        return MulticastTree(src=0, edges=edges,
+                             parent=i32([-1, 0, 1, 2]),
+                             deliver=deliver,
+                             subtree=i32([3, 2, 1, 1]))
+
+    def test_find_tree_cycles_reports_tree_coordinates(self):
+        topo = ring_topology(4)
+        bad = find_tree_cycles(topo, [self._cyclic_tree(topo)])
+        # chips 1, 2, 3 ride the loop and the source 0 feeds into it;
+        # route id = n_chips + tree index
+        assert {tuple(p) for p in bad.tolist()} \
+            == {(0, 4), (1, 4), (2, 4), (3, 4)}
+
+    def test_find_route_cycles_merges_trees(self):
+        topo = ring_topology(4)
+        rt = RoutingTable.build(topo)
+        bad = find_route_cycles(topo, rt, [self._cyclic_tree(topo)])
+        assert {tuple(p) for p in bad.tolist()} \
+            == {(0, 4), (1, 4), (2, 4), (3, 4)}
+        assert len(find_route_cycles(topo, rt)) == 0
+
+    def test_acyclic_built_tree_is_clean(self):
+        topo = ring_topology(8)
+        rt = RoutingTable.build(topo)
+        tree = MulticastTree.build(topo, rt, src=0,
+                                   members=np.asarray([2, 4, 6]))
+        assert len(find_tree_cycles(topo, [tree])) == 0
+
+
+class TestChannelGraph:
+    def test_describe_channel_names_link_and_direction(self):
+        topo = ring_topology(4)
+        # link 0 connects chips 0-1; side 0 transmits 0->1
+        assert describe_channel(topo, 0) == "L0:0->1"
+        assert describe_channel(topo, 1) == "L0:1->0"
+
+    def test_bfs_ring4_edges_exact(self):
+        topo = ring_topology(4)
+        g = channel_graph(topo, RoutingTable.build(topo))
+        assert g.find_cycle() is None
+        assert sorted(map(tuple, g.edges.tolist())) \
+            == [(0, 2), (1, 7), (3, 1), (6, 0)]
+
+    def test_restrict_breaks_cycle(self):
+        topo = ring_topology(4)
+        g = channel_graph(topo, _clockwise(topo, RoutingTable.build(topo)))
+        cycle = g.find_cycle()
+        assert cycle is not None and len(cycle) == 4
+        keep = np.ones(g.n_channels, bool)
+        keep[cycle[0]] = False
+        assert g.restrict(keep).find_cycle() is None
+
+
+class TestTightClockBudget:
+    def _fabric(self):
+        timing = per_link_timing(
+            [PAPER_TIMING, PAPER_TIMING.subword(26)], [0, 1])
+        return Fabric(line_topology(3), timing=timing)
+
+    def _spec(self, t_max):
+        return tr.TrafficSpec(
+            src=i32([0, 1] * 4),
+            t=i32(sorted(t_max - 70 * k for k in range(8))),
+            dest=i32([1, 0] * 4))
+
+    def test_routed_bound_admits_what_global_bound_refused(self):
+        """Traffic confined to the fast link, injected close to the
+        sentinel: the fabric-wide worst-cost bound overflows but the
+        per-link budget does not — the run is admitted and drains."""
+        fab = self._fabric()
+        t_max = BIG - 1000
+        with pytest.raises(ValueError, match="overflow"):
+            net._overflow_guard(t_max, 8, fab._worst_cost)
+        rep = fab.verify(self._spec(t_max))
+        assert rep.ok
+        assert rep.clock_bound_ns < BIG
+        assert 0 < rep.clock_headroom_ns == BIG - rep.clock_bound_ns
+        res = fab.run(self._spec(t_max))
+        assert int(res.delivered) == res.injected
+
+    def test_slow_link_traffic_still_refused(self):
+        """The same injection times crossing the slow link exceed the
+        budget: verify() reports the overflow as an error and plan
+        refuses."""
+        fab = self._fabric()
+        t_max = BIG - 1000
+        spec = tr.TrafficSpec(
+            src=i32([1, 2] * 4),
+            t=i32(sorted(t_max - 70 * k for k in range(8))),
+            dest=i32([2, 1] * 4))
+        rep = fab.verify(spec)
+        assert not rep.ok
+        assert rep.clock_headroom_ns <= 0
+        assert "clock-overflow" in _checks(rep)
+        with pytest.raises(ValueError, match="overflow"):
+            fab.run(spec)
+
+    def test_route_link_tx_falls_back_on_broken_walk(self):
+        """A cyclic override defeats the route walk; the helper reports
+        ok=False so planning falls back to the global bound."""
+        topo = ring_topology(4)
+        rt = _bent_override(topo, RoutingTable.build(topo))
+        counts, ok = net._route_link_tx(
+            rt, topo.links, np.asarray([0]), np.asarray([1]),
+            topo.n_links, topo.n_chips)
+        assert not ok

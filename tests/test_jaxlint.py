@@ -1,0 +1,162 @@
+"""JAX-pitfall lint: ``repro.analysis.jaxlint``.
+
+Contracts under test:
+
+* each rule fires on a seeded violation — JX001 traced-value branch,
+  JX002 integer-valued float literal against a jnp expression, JX003
+  jit static arg naming a dynamic-operand quantity (argnames and
+  argnums spellings, decorator and call forms);
+* each rule stays quiet on the idiomatic fix (jnp.where, int literal /
+  explicit float dtype, dynamic operand);
+* pragma suppression (`# jaxlint: disable=...`, bare disable,
+  skip-file) and the CLI contract (exit 1 with findings, 0 without);
+* the shipped tree is clean: zero findings over src/ and benchmarks/
+  — the CI analysis lane's gate.
+"""
+
+from pathlib import Path
+
+from repro.analysis.jaxlint import RULES, lint_paths, lint_source, main
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+class TestJX001TracedBranch:
+    def test_if_on_jnp_call(self):
+        src = "if jnp.any(q == cap):\n    stall()\n"
+        assert rules_of(lint_source(src)) == ["JX001"]
+
+    def test_while_on_lax_call(self):
+        src = "while lax.lt(i, n):\n    i = step(i)\n"
+        assert rules_of(lint_source(src)) == ["JX001"]
+
+    def test_conditional_expression(self):
+        src = "x = a if jnp.all(mask) else b\n"
+        assert rules_of(lint_source(src)) == ["JX001"]
+
+    def test_python_value_branch_clean(self):
+        src = "if flow != 'drop':\n    check()\n"
+        assert lint_source(src) == []
+
+    def test_jnp_where_clean(self):
+        src = "x = jnp.where(q == cap, BIG, q)\n"
+        assert lint_source(src) == []
+
+
+class TestJX002FloatPromotion:
+    def test_integer_valued_float_literal(self):
+        src = "t = jnp.minimum(t, cap) * 2.0\n"
+        assert rules_of(lint_source(src)) == ["JX002"]
+
+    def test_literal_on_left(self):
+        src = "t = 1.0 + jnp.asarray(q)\n"
+        assert rules_of(lint_source(src)) == ["JX002"]
+
+    def test_int_literal_clean(self):
+        src = "t = jnp.minimum(t, cap) * 2\n"
+        assert lint_source(src) == []
+
+    def test_fractional_literal_assumed_intentional(self):
+        src = "t = jnp.asarray(x) * 0.5\n"
+        assert lint_source(src) == []
+
+    def test_explicit_float_dtype_clean(self):
+        """Arithmetic on an expression that names a float dtype is the
+        author opting into float — the kernels' MXU iota idiom."""
+        src = "i = jnp.arange(n, dtype=jnp.float32) + 1.0\n"
+        assert lint_source(src) == []
+        src = "i = jax.lax.broadcasted_iota(jnp.float32, (1, b), 1) " \
+              "+ 1.0\n"
+        assert lint_source(src) == []
+
+    def test_division_not_flagged(self):
+        # true division is float anyway; only int-preserving ops flag
+        src = "t = jnp.sum(x) / 2.0\n"
+        assert lint_source(src) == []
+
+
+class TestJX003JitBucketHazard:
+    def test_static_argnames_decorator(self):
+        src = ("@partial(jax.jit, static_argnames=('capacity',))\n"
+               "def step(q, capacity):\n    return q\n")
+        assert rules_of(lint_source(src)) == ["JX003"]
+
+    def test_static_argnums_resolved_through_signature(self):
+        src = ("@partial(jax.jit, static_argnums=(1,))\n"
+               "def step(q, max_steps):\n    return q\n")
+        assert rules_of(lint_source(src)) == ["JX003"]
+
+    def test_call_form_argnames(self):
+        src = "f = jax.jit(step, static_argnames=['flow'])\n"
+        assert rules_of(lint_source(src)) == ["JX003"]
+
+    def test_genuinely_static_args_clean(self):
+        src = ("@partial(jax.jit, static_argnames=('block', 'budget', "
+               "'interpret'))\n"
+               "def step(q, block, budget, interpret):\n    return q\n")
+        assert lint_source(src) == []
+
+    def test_call_form_argnums_unresolvable_stays_quiet(self):
+        # without the signature, positions cannot be mapped to names
+        src = "f = jax.jit(step, static_argnums=(0,))\n"
+        assert lint_source(src) == []
+
+
+class TestSuppression:
+    def test_pragma_single_rule(self):
+        src = "t = jnp.asarray(q) * 2.0  # jaxlint: disable=JX002\n"
+        assert lint_source(src) == []
+
+    def test_pragma_wrong_rule_does_not_suppress(self):
+        src = "t = jnp.asarray(q) * 2.0  # jaxlint: disable=JX001\n"
+        assert rules_of(lint_source(src)) == ["JX002"]
+
+    def test_bare_disable_suppresses_all(self):
+        src = "if jnp.any(jnp.asarray(q) * 2.0):  # jaxlint: disable\n" \
+              "    pass\n"
+        assert lint_source(src) == []
+
+    def test_skip_file(self):
+        src = "# jaxlint: skip-file\nt = jnp.asarray(q) * 2.0\n"
+        assert lint_source(src) == []
+
+    def test_syntax_error_reported_not_raised(self):
+        findings = lint_source("def broken(:\n", "x.py")
+        assert rules_of(findings) == ["JX000"]
+
+
+class TestCLI:
+    def test_seeded_file_exits_nonzero(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text(
+            "import jax.numpy as jnp\n"
+            "from functools import partial\n"
+            "import jax\n"
+            "if jnp.any(x):\n    pass\n"                       # JX001
+            "y = jnp.asarray(q) * 2.0\n"                       # JX002
+            "@partial(jax.jit, static_argnames=('capacity',))\n"
+            "def f(q, capacity):\n    return q\n")             # JX003
+        assert main([str(bad)]) == 1
+        out = capsys.readouterr().out
+        for rule in ("JX001", "JX002", "JX003"):
+            assert rule in out
+        assert "3 finding(s)" in out
+
+    def test_clean_file_exits_zero(self, tmp_path, capsys):
+        good = tmp_path / "good.py"
+        good.write_text("x = 1\n")
+        assert main([str(good)]) == 0
+        assert "0 finding(s)" in capsys.readouterr().out
+
+    def test_rule_table_documented(self):
+        assert set(RULES) == {"JX001", "JX002", "JX003"}
+
+
+class TestShippedTreeClean:
+    def test_zero_findings_on_src_and_benchmarks(self):
+        findings = lint_paths([REPO / "src", REPO / "benchmarks"])
+        assert findings == [], "\n".join(map(str, findings))
