@@ -6,7 +6,10 @@ against ``benchmarks/baselines/BENCH_fabric.json`` and exits non-zero if
 any TAGGED cell's ``us_per_call`` regressed more than ``--max-regression``
 (default 1.5x), or if a baseline cell vanished from the current run —
 renaming or deleting a benchmark must be an explicit baseline refresh,
-not a silent gap in coverage.
+not a silent gap in coverage.  Cells whose ``backend`` field differs
+from the baseline's are skipped: wall-clock is only comparable within
+one backend, so a baseline recorded on CPU never gates a TPU run (or
+vice versa) — refresh the baseline on the new backend instead.
 
 Only tagged cells (the ``Fabric``-API feature rows: hetero / mcast /
 adaptive / lossless / batch) gate; the untagged ring/mesh grid is tracked but
@@ -16,7 +19,8 @@ comparison measures the allocator, not the engine.
 
 Refresh after an intentional perf change::
 
-    python benchmarks/run.py --tags hetero,mcast,adaptive,lossless,batch \
+    python benchmarks/run.py \
+        --tags hetero,mcast,adaptive,lossless,batch,verify \
         --json benchmarks/baselines/BENCH_fabric.json
 """
 
@@ -54,6 +58,15 @@ def compare(current: dict[str, dict], baseline: dict[str, dict], *,
         if cur is None:
             failures.append(f"{name}: present in baseline but missing "
                             f"from the current sweep")
+            continue
+        if cur.get("backend") != base.get("backend"):
+            # wall-clock is only comparable within one backend: a CPU
+            # interpret-mode cell vs a compiled TPU/GPU cell differ by
+            # orders of magnitude in BOTH directions of "regression"
+            print(f"  skip {name}: backend changed "
+                  f"{base.get('backend')} -> {cur.get('backend')} "
+                  f"(cross-backend wall-clock is not comparable; "
+                  f"refresh the baseline on this backend)")
             continue
         b_us, c_us = float(base["us_per_call"]), float(cur["us_per_call"])
         if b_us < min_us:

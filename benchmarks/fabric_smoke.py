@@ -18,7 +18,11 @@ wall-clock win (``run_batch_gate``).  A verifier cell gates the static
 pre-flight claim in both directions: the cyclic-route/acyclic-CDG
 table must be admitted and run lossless bit-exactly, the saturable
 channel-dependency cycle must be refused with every channel named
-(``run_verifier_gate``).  Then it
+(``run_verifier_gate``).  A kernels cell
+(``fabric_ring16_pallas_multistep``) gates the fused multi-step kernel:
+bit-exact with the ring engine, one compilation, and strictly fewer
+Pallas launches than the per-step path by trace-probe count
+(``run_kernels_gate``).  Then it
 times the ring engine end-to-end (compile + run, the number a user
 feels) and fails if it regressed more than ``MAX_REGRESSION``x against
 the checked-in baseline in ``baselines/fabric_smoke.json``.
@@ -85,12 +89,13 @@ def run_smoke() -> dict:
     lossless = run_lossless_gate()
     batched = run_batch_gate()
     verifier = run_verifier_gate()
+    kernels = run_kernels_gate()
     return {"ring_us": t_ring * 1e6,
             "cells": len(tr.PATTERNS),
             "n_chips": N_CHIPS,
             "events_per_chip": EVENTS_PER_CHIP,
             "mcast_traversals_saved": saved,
-            **adaptive, **lossless, **batched, **verifier}
+            **adaptive, **lossless, **batched, **verifier, **kernels}
 
 
 def run_multicast_gate() -> int:
@@ -477,6 +482,85 @@ def run_batch_gate() -> dict:
             "batch_speedup_floor": floor}
 
 
+MULTISTEP_CHUNK = 64
+MIN_DISPATCH_WIN = 16.0
+
+
+def run_kernels_gate() -> dict:
+    """Gate the fused multi-step kernel claim
+    (``fabric_ring16_pallas_multistep``).
+
+    A hot-spot ring-16 workload through ``engine="pallas"`` with
+    ``kernel="multistep"`` must be
+
+    1. bit-exact with the ``ring`` engine (full ``FabricResult`` field
+       list) with ``delivered + drops == injected``;
+    2. served by exactly ONE compilation (``cache_size`` flat across a
+       repeat run — the no-recompile contract); and
+    3. STRICTLY cheaper in kernel dispatches than the per-step pallas
+       path on the same shape bucket: the trace probe
+       (``repro.analysis.dispatch``) must count ``2 * max_steps``
+       launches for the per-step engine, ``ceil(max_steps / chunk)``
+       for the fused one, a >= ``MIN_DISPATCH_WIN``x win.  The count is
+       a static program property, so the gate is immune to CI machine
+       noise.
+    """
+    from repro.analysis.dispatch import pallas_dispatches
+
+    topo = ring_topology(16)
+    spec = tr.hot_spot(jax.random.PRNGKey(5), 16, 3, mean_gap_ns=150.0,
+                       hot_frac=0.75)
+    from repro.core.fabric import EngineSpec
+    fab = Fabric(topo, engine=EngineSpec(name="pallas",
+                                         kernel="multistep",
+                                         chunk_size=MULTISTEP_CHUNK))
+    cf = fab.compile(spec, warm=False)
+    res = cf.run(spec)
+    n0 = cf.cache_size()
+    cf.run(spec)
+    if cf.cache_size() != n0 or n0 != 1:
+        raise RuntimeError(
+            f"multistep kernel gate: want exactly one compilation with "
+            f"a flat cache across runs, got {n0} -> {cf.cache_size()}")
+    _assert_bit_exact(Fabric(topo, engine="ring").run(spec), res,
+                      "kernels/ring16-multistep")
+    if int(res.delivered) + int(res.drops) != res.injected:
+        raise RuntimeError("multistep kernel gate: delivered + drops != "
+                           "injected")
+
+    # dispatch economy: trace both engine builds over this bucket's
+    # operand shapes and count pallas_call launches (loop trips applied)
+    _eng, L, E, C, max_steps, mb, R, K, _kern, chunk = cf.bucket
+    N = topo.n_chips
+    i32 = np.int32
+    args = (np.zeros((2 * L, C), i32), np.zeros((2 * L, C), i32),
+            np.zeros((2 * L, C), i32), np.zeros((L, 2), i32),
+            np.ones(L, i32), np.zeros((L, 2), i32),
+            np.zeros((N, R, K), i32), np.zeros((N, R), i32),
+            np.zeros((N, R, K), i32),
+            np.zeros(L, i32), np.zeros(L, i32), np.zeros(L, i32),
+            jax.numpy.int32(C), jax.numpy.int32(0), jax.numpy.int32(0))
+    d_step = pallas_dispatches(
+        net._slot_run(L, E, C, max_steps, mb, True), *args)
+    d_ms = pallas_dispatches(
+        net._slot_run_multistep(L, E, C, max_steps, mb, chunk), *args)
+    want_step, want_ms = 2 * max_steps, -(-max_steps // chunk)
+    if (d_step, d_ms) != (want_step, want_ms):
+        raise RuntimeError(
+            f"dispatch probe mismatch: per-step {d_step} (want "
+            f"{want_step}), multistep {d_ms} (want {want_ms})")
+    win = d_step / d_ms
+    if win < MIN_DISPATCH_WIN:
+        raise RuntimeError(
+            f"multistep kernel dispatch win too small: {win:.1f}x "
+            f"({d_step} vs {d_ms} launches; want >= "
+            f"{MIN_DISPATCH_WIN:.0f}x)")
+    return {"multistep_chunk": chunk,
+            "multistep_dispatches": d_ms,
+            "step_dispatches": d_step,
+            "multistep_dispatch_win": win}
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--update-baseline", action="store_true",
@@ -503,6 +587,11 @@ def main(argv=None) -> int:
           f"static verifier admits the bent-route ring and names the "
           f"{result['verifier_cycle_channels']}-channel deadlock "
           f"cycle; "
+          f"multistep kernel cuts dispatches "
+          f"{result['multistep_dispatch_win']:.0f}x "
+          f"({result['step_dispatches']} -> "
+          f"{result['multistep_dispatches']} launches at chunk "
+          f"{result['multistep_chunk']}); "
           f"ring engine {result['ring_us'] / 1e3:.0f} ms total "
           f"(compile + run)")
 

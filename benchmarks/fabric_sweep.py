@@ -119,10 +119,25 @@ def _derived(m: dict) -> str:
 
 
 def _cell(name, us, derived, engine, metrics=None, lane="fast",
-          api="simulate_fabric", tags=()) -> dict:
+          api="simulate_fabric", tags=(), kernel="step") -> dict:
     return {"name": name, "us_per_call": us, "derived": derived,
-            "engine": engine, "lane": lane, "api": api,
+            "engine": engine, "kernel": kernel, "lane": lane, "api": api,
             "tags": list(tags), "metrics": metrics or {}}
+
+
+def stamp_env(cells):
+    """Stamp every cell with the execution environment: the XLA backend
+    actually running the sweep plus the jax/jaxlib versions.  Timings
+    are only comparable within one backend (a CPU interpret-mode cell
+    vs a TPU compiled cell differ by orders of magnitude), so the
+    regression gate (``compare.py``) refuses cross-backend ratios."""
+    import jaxlib
+    backend = jax.default_backend()
+    for c in cells:
+        c["backend"] = backend
+        c["jax_version"] = jax.__version__
+        c["jaxlib_version"] = jaxlib.__version__
+    return cells
 
 
 def sweep_rings(engine=DEFAULT_ENGINE, slow=False):
@@ -611,7 +626,7 @@ def run_structured(engine=DEFAULT_ENGINE, slow=False, tags=None):
         cells.extend(fn(*args))
     if wanted is not None:
         cells = [c for c in cells if wanted & set(c["tags"])]
-    return cells
+    return stamp_env(cells)
 
 
 def run(engine=DEFAULT_ENGINE, slow=False, tags=None):

@@ -10,6 +10,21 @@ per cell, on TPU v5e constants:
 (the dry-run JSON stores PER-DEVICE numbers: the HLO module is the
 post-SPMD per-device program), plus MODEL_FLOPS = 6·N·D (dense) /
 6·N_active·D (MoE) and the useful-compute ratio.
+
+Plus a FABRIC roofline mode (:func:`fabric_roofline_cells`): the slot
+engines are memory-bound — every micro-transaction moves the packed
+carry (``network.slot_carry_bytes``: 3 (Q, C) slot planes + link/side
+lanes + logs) through memory, so the events/s ceiling is
+
+  bound_ev_s = HBM_bw / bytes_per_event
+  bytes_per_event = 2 * carry_bytes * launches_per_step * max_steps
+                    / delivered
+
+with ``launches_per_step`` = 1 for the per-step kernel pair (one full
+read+write round-trip per micro-transaction) and ``1 / chunk`` for the
+fused multi-step kernel (carry resident across ``chunk`` steps).  The
+mode times both kernels on the benchmark ring and emits per-backend
+cells (measured MEv/s vs the bound) into ``BENCH_fabric.json``.
 """
 
 from __future__ import annotations
@@ -162,6 +177,87 @@ def table(cells, fmt="md"):
             if "useful_ratio" in c else "-",
         ]) + " |")
     return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Fabric roofline: packed-carry traffic vs memory bandwidth, per kernel
+# ---------------------------------------------------------------------------
+
+FABRIC_ROOFLINE_CHUNK = 64
+
+
+def fabric_roofline_cells() -> list:
+    """Measured fabric throughput vs the memory-bandwidth roofline.
+
+    Runs the ring-16 hot-spot workload through ``engine="pallas"`` with
+    both kernel choices and derives, from the engine's OWN packed state
+    shapes (no profiler):
+
+    * ``carry_bytes``     — ``slot_carry_bytes(L, E, C)``, the int32
+      words one micro-transaction round-trips;
+    * ``bytes_per_event`` — carry read+write per launch group, times
+      launch groups per run, over delivered events;
+    * ``bound_ev_s``      — ``HBM_BW / bytes_per_event``, the roofline
+      ceiling for this shape on the modeled part;
+    * ``measured_ev_s``   — delivered events over wall-clock, and the
+      fraction of the bound it reaches.
+
+    On this CPU interpret-mode container the measured fraction is tiny
+    (interpret mode executes the kernel body as jnp ops — it measures
+    semantics, not deployment speed); the cells exist so a compiled
+    backend (TPU/GPU) reports its fraction against the SAME bound, and
+    so the multi-step kernel's ``chunk``-fold bytes/event reduction is
+    visible in the artifact.  Every cell carries ``backend`` +
+    ``kernel`` fields; ``compare.py`` only gates same-backend ratios.
+    """
+    import time
+
+    import jax
+    import numpy as np
+
+    from benchmarks.fabric_sweep import _derived, _metrics, stamp_env, _cell
+    from repro.core import traffic as tr
+    from repro.core.fabric import EngineSpec, Fabric
+    from repro.core.network import slot_carry_bytes
+    from repro.core.router import ring_topology
+
+    topo = ring_topology(16)
+    spec = tr.hot_spot(jax.random.PRNGKey(5), 16, 3, mean_gap_ns=150.0,
+                       hot_frac=0.75)
+    cells = []
+    for kern in ("step", "multistep"):
+        fab = Fabric(topo, engine=EngineSpec(
+            name="pallas", kernel=kern, chunk_size=FABRIC_ROOFLINE_CHUNK))
+        cf = fab.compile(spec)          # warmed: timing excludes compile
+        t0 = time.perf_counter()
+        res = cf.run(spec)
+        jax.block_until_ready(res.log_del)
+        us = (time.perf_counter() - t0) * 1e6
+
+        _eng, L, E, C, max_steps, _mb, _R, _K, _kern, chunk = cf.bucket
+        carry_bytes = slot_carry_bytes(L, E, C)
+        steps_per_launch = chunk if kern == "multistep" else 1
+        bytes_per_step = 2.0 * carry_bytes / steps_per_launch
+        delivered = max(int(res.delivered), 1)
+        bytes_per_event = bytes_per_step * max_steps / delivered
+        bound_ev_s = HBM_BW / bytes_per_event
+        measured_ev_s = delivered / (us * 1e-6)
+        m = _metrics(res)
+        m.update({"carry_bytes": carry_bytes,
+                  "bytes_per_event": bytes_per_event,
+                  "bound_mev_s": bound_ev_s / 1e6,
+                  "measured_wallclock_mev_s": measured_ev_s / 1e6,
+                  "roofline_fraction": measured_ev_s / bound_ev_s,
+                  "max_steps": max_steps,
+                  "chunk": steps_per_launch})
+        cells.append(_cell(
+            f"fabric_roofline_pallas_{kern}", us,
+            f"{_derived(m)} carry={carry_bytes}B "
+            f"bound={m['bound_mev_s']:.0f}MEv/s "
+            f"wallclock={m['measured_wallclock_mev_s']:.3f}MEv/s "
+            f"({m['roofline_fraction']:.1e} of bound)",
+            "pallas", metrics=m, api="Fabric", kernel=kern))
+    return stamp_env(cells)
 
 
 def run():

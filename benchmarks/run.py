@@ -49,6 +49,11 @@ def main(argv=None) -> None:
                                                    tags=tag_sel)
     except ValueError as e:   # unknown --tags: fail loudly, not empty
         p.error(str(e))
+    if tag_sel is None:
+        # the fabric roofline cells (both pallas kernels vs the
+        # memory-bandwidth bound) ride every untagged fabric sweep —
+        # they are the per-backend MEv/s-vs-roofline artifact rows
+        fabric_cells.extend(roofline.fabric_roofline_cells())
     if args.only not in (None, "fabric"):
         all_names = [c["name"] for c in fabric_cells]
         fabric_cells = [c for c in fabric_cells if args.only in c["name"]]
@@ -66,9 +71,15 @@ def main(argv=None) -> None:
         print(f"{name},{us:.1f},{derived}")
 
     if args.json:
+        import jax
+        import jaxlib
         with open(args.json, "w") as f:
             json.dump({"bench": "fabric_sweep", "engine": args.engine,
-                       "slow_lane": args.slow, "cells": fabric_cells},
+                       "slow_lane": args.slow,
+                       "backend": jax.default_backend(),
+                       "jax_version": jax.__version__,
+                       "jaxlib_version": jaxlib.__version__,
+                       "cells": fabric_cells},
                       f, indent=2)
         print(f"# wrote {len(fabric_cells)} fabric cells to {args.json}",
               file=sys.stderr)

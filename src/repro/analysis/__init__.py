@@ -16,11 +16,19 @@ Two halves, both pure setup-time code (numpy + ast, nothing traced):
   values, jit static args that should be dynamic operands (the
   zero-new-buckets contract), and bare float literals that promote the
   int32 hot path.  Runnable as ``python -m repro.analysis.jaxlint
-  src/ benchmarks/`` (the CI analysis lane).
+  src/ benchmarks/ examples/`` (the CI analysis lane).
+
+Plus one trace-time probe:
+
+* :mod:`repro.analysis.dispatch` — counts ``pallas_call`` launches in a
+  traced program (loop trip counts applied), the evidence behind the
+  multi-step kernel's fewer-dispatches claim.
 """
 
+from .dispatch import count_pallas_calls, pallas_dispatches  # noqa: F401
 from .verify import (ChannelGraph, Finding, VerifyReport,  # noqa: F401
                      channel_graph, describe_channel, verify_fabric)
 
 __all__ = ["ChannelGraph", "Finding", "VerifyReport", "channel_graph",
-           "describe_channel", "verify_fabric"]
+           "count_pallas_calls", "describe_channel", "pallas_dispatches",
+           "verify_fabric"]

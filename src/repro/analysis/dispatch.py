@@ -1,0 +1,86 @@
+"""Kernel-dispatch accounting: count Pallas launches in a traced program.
+
+The per-step pallas fabric engine dispatches TWO kernels per
+micro-transaction (queue scan + slot update), so a run costs
+``2 * max_steps`` launches with the full packed state round-tripping
+through XLA between every pair.  The multi-step kernel fuses ``chunk``
+micro-transactions per launch (carry resident across steps), cutting the
+count to ``ceil(max_steps / chunk)``.  This module makes that claim
+*checkable*: walk the jaxpr of an engine call and count how many
+``pallas_call`` equations execute, loop trip counts included.
+
+Counting rules (static program counts, not a runtime profiler):
+
+* ``scan``  — body count times the static trip count (``length``).
+* ``while`` — condition + body counted ONCE each (a conservative lower
+  bound: the true count multiplies by a data-dependent trip count).
+* ``cond``  — the maximum over branches (exactly one branch runs).
+* ``pjit`` / closed calls / custom derivatives — descend transparently.
+* ``pallas_call`` — counts 1; its kernel jaxpr is the launch body, not
+  further dispatches, so it is NOT descended.
+
+Used by the ``fabric_ring16_pallas_multistep`` smoke gate to assert the
+fused kernel issues strictly fewer launches than the per-step path, and
+by the roofline report to annotate measured cells with their dispatch
+economy.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["count_pallas_calls", "pallas_dispatches"]
+
+
+def _is_closed_jaxpr(v) -> bool:
+    # duck-typed: jax.core.ClosedJaxpr moves between jax versions
+    return hasattr(v, "jaxpr") and hasattr(getattr(v, "jaxpr"), "eqns")
+
+
+def _count_param(v) -> int:
+    """Pallas launches inside an arbitrary eqn param value."""
+    if _is_closed_jaxpr(v):
+        return _count(v.jaxpr)
+    if hasattr(v, "eqns"):  # open Jaxpr
+        return _count(v)
+    if isinstance(v, (tuple, list)):
+        return sum(_count_param(x) for x in v)
+    return 0
+
+
+def _count(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "pallas_call":
+            n += 1  # the kernel body is the launch, not more launches
+        elif prim == "scan":
+            n += int(eqn.params["length"]) * _count_param(
+                eqn.params["jaxpr"])
+        elif prim == "while":
+            n += _count_param(eqn.params["cond_jaxpr"])
+            n += _count_param(eqn.params["body_jaxpr"])
+        elif prim == "cond":
+            n += max((_count_param(b) for b in eqn.params["branches"]),
+                     default=0)
+        else:
+            for v in eqn.params.values():
+                n += _count_param(v)
+    return n
+
+
+def count_pallas_calls(jaxpr) -> int:
+    """Pallas launches in a (closed or open) jaxpr, trip counts applied."""
+    if _is_closed_jaxpr(jaxpr):
+        jaxpr = jaxpr.jaxpr
+    return _count(jaxpr)
+
+
+def pallas_dispatches(fn, *args, **kwargs) -> int:
+    """Trace ``fn(*args, **kwargs)`` and count its Pallas launches.
+
+    ``fn`` may be plain or jitted (``pjit`` bodies are descended).  The
+    args only need the right shapes/dtypes — tracing is abstract, no
+    kernel actually runs.
+    """
+    return count_pallas_calls(jax.make_jaxpr(fn)(*args, **kwargs))

@@ -59,7 +59,8 @@ from .network import (DEFAULT_CHUNK_SIZE, ENGINES, FabricBatchResult,
                       _overflow_guard_routed, _pad_to, _pow2ceil,
                       _prefill, _ring_engine, _route_link_tx,
                       _ring_engine_batch, _routes_with_trees, _slot_engine,
-                      _slot_engine_batch, _stream_quota,
+                      _slot_engine_batch, _slot_engine_multistep,
+                      _slot_engine_multistep_batch, _stream_quota,
                       _tree_stream_quota, _unicast_routes)
 from .router import (AddressSpec, MulticastTable, MulticastTree,
                      RoutingTable, Topology, find_route_cycles)
@@ -146,11 +147,24 @@ class EngineSpec:
 
     ``name``       — ``"auto"`` (= ring), ``"ring"``, ``"reference"`` or
                      ``"pallas"`` (see ``network`` module docstring).
-    ``chunk_size`` — ring engine only: micro-transactions per ``lax.scan``
-                     chunk between early-exit checks.
+    ``chunk_size`` — ring engine: micro-transactions per ``lax.scan``
+                     chunk between early-exit checks.  Pallas multi-step
+                     kernel: micro-transactions fused per kernel launch.
+    ``kernel``     — pallas engine only.  ``"step"`` (default) dispatches
+                     the per-step scan/update kernel pair once per
+                     micro-transaction; ``"multistep"`` runs the fused
+                     multi-step kernel — ``chunk_size`` steps per launch
+                     with the packed carry resident across steps, so a
+                     run costs ``ceil(max_steps / chunk_size)`` dispatches
+                     instead of ``2 * max_steps``.  Bit-exact with every
+                     other engine; each kernel choice compiles its own
+                     shape bucket (audited by ``cache_size()``).
     """
     name: str = "auto"
     chunk_size: int = DEFAULT_CHUNK_SIZE
+    kernel: str = "step"
+
+    KERNELS = ("step", "multistep")
 
     def __post_init__(self):
         resolved = "ring" if self.name == "auto" else self.name
@@ -162,6 +176,14 @@ class EngineSpec:
             # forever
             raise ValueError(f"chunk_size must be >= 1, got "
                              f"{self.chunk_size}")
+        if self.kernel not in self.KERNELS:
+            raise ValueError(f"unknown kernel {self.kernel!r}; expected "
+                             f"one of {self.KERNELS}")
+        if self.kernel == "multistep" and resolved != "pallas":
+            raise ValueError(
+                f"kernel='multistep' is a pallas-engine knob (the fused "
+                f"multi-step fabric kernel); engine {self.name!r} "
+                f"resolves to {resolved!r}")
 
     @property
     def resolved(self) -> str:
@@ -879,9 +901,17 @@ class Fabric:
             qt, qd, qi, sizes = _prefill(L, grp, copy_t, copy_route,
                                          copy_inj, chk, width=C)
             # the slot engines bake max_steps/max_burst into the scan, so
-            # they key the bucket too (R/K only shape the table operands)
+            # they key the bucket too (R/K only shape the table operands).
+            # The kernel choice is appended LAST so the positional
+            # accesses above it stay stable; chunk keys the bucket only
+            # for the multi-step kernel (it is baked into the fused
+            # launch) — the per-step kernels ignore chunk_size, so
+            # sweeping it never adds a step-kernel bucket.
+            kern = self.engine.kernel if eng == "pallas" else "step"
+            chunk = (int(self.engine.chunk_size) if kern == "multistep"
+                     else 0)
             bucket = (eng, L, E, C, int(max_steps),
-                      int(self.queues.max_burst), R, K)
+                      int(self.queues.max_burst), R, K, kern, chunk)
         return _Plan(E=E, C=C, max_steps=int(max_steps), q_time=qt,
                      q_dest=qd, q_inj=qi, sizes=sizes,
                      route_out=route_out, route_del=route_del,
@@ -927,9 +957,13 @@ class CompiledFabric:
                 jnp.asarray(_pad_to(ti, (Lp,), 0)),
             )
         else:
-            _, _L, E, C, max_steps, mb, _R, _K = bucket
-            self._fn = _slot_engine(L, E, C, max_steps, mb,
-                                    eng == "pallas")
+            _, _L, E, C, max_steps, mb, _R, _K, kern, chunk = bucket
+            if kern == "multistep":
+                self._fn = _slot_engine_multistep(L, E, C, max_steps, mb,
+                                                  chunk)
+            else:
+                self._fn = _slot_engine(L, E, C, max_steps, mb,
+                                        eng == "pallas")
             self._tables = (
                 jnp.asarray(fabric._init_tx),
                 jnp.asarray(topo.links, jnp.int32),
@@ -1187,7 +1221,10 @@ def _batch_engine_for(bucket: tuple, n_devices: int):
     if bucket[0] == "ring":
         _, Lp, _Np, Ep, C0, Dp, Cf, _Rp, _Kp, chunk = bucket
         return _ring_engine_batch(Lp, Ep, C0, Dp, Cf, chunk, n_devices)
-    eng, L, E, C, ms, mb, _R, _K = bucket
+    eng, L, E, C, ms, mb, _R, _K, kern, chunk = bucket
+    if kern == "multistep":
+        return _slot_engine_multistep_batch(L, E, C, ms, mb, chunk,
+                                            n_devices)
     return _slot_engine_batch(L, E, C, ms, mb, eng == "pallas", n_devices)
 
 

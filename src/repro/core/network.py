@@ -180,6 +180,7 @@ import numpy as np
 
 from .link import LinkTiming, PAPER_TIMING
 from .protocol_sim import BIG_NS, LinkState, link_step_batch, reset_link
+from .transceiver import XcvrState
 from .router import (AddressSpec, MulticastTable, MulticastTree,
                      RoutingTable, Topology)
 from .telemetry import Telemetry
@@ -794,71 +795,65 @@ class _SlotState(NamedTuple):
     credit_waits: jnp.ndarray  # (L, 2) telemetry: stall episodes
 
 
-def _slot_run(L: int, E: int, C: int, max_steps: int,
-              max_burst: int, use_kernels: bool):
-    """Build the slot-scan ``run`` function for one static shape signature
-    (uncompiled — ``_slot_engine`` jits it solo, ``_slot_engine_batch``
-    vmaps it over a ``(B,)`` leading instance axis).
+def _slot_init(L: int, E: int, q_time, q_dest, q_inj, sizes,
+               init_tx) -> _SlotState:
+    """Reset-time slot-engine carry (shared by the per-step scan and the
+    multi-step kernel path, so both start from the identical state)."""
+    link0 = reset_links(init_tx)
+    return _SlotState(
+        link=link0,
+        q_time=q_time, q_dest=q_dest, q_inj=q_inj,
+        n_ins=sizes,
+        sent=jnp.zeros((L, 2), jnp.int32),
+        prev_mode_l=link0.xl.mode,
+        n_sw=jnp.zeros((L,), jnp.int32),
+        log_inj=jnp.zeros((E,), jnp.int32),
+        log_del=jnp.zeros((E,), jnp.int32),
+        log_dest=jnp.zeros((E,), jnp.int32),
+        log_n=jnp.zeros((), jnp.int32),
+        drops=jnp.zeros((), jnp.int32),
+        busy_ns=jnp.zeros((L,), jnp.int32),
+        busy_steps=jnp.zeros((L, 2), jnp.int32),
+        q_drops=jnp.zeros((L, 2), jnp.int32),
+        n_pop=jnp.zeros((L, 2), jnp.int32),
+        xoff=jnp.zeros((L, 2), jnp.int32),
+        in_stall=jnp.zeros((L, 2), jnp.int32),
+        stall_steps=jnp.zeros((L, 2), jnp.int32),
+        credit_waits=jnp.zeros((L, 2), jnp.int32),
+    )
 
-    Timing arrives as *dynamic* (L,) cost vectors (``t_cycle_v`` /
-    ``t_rev_v`` / ``t_idle_v`` — see ``link.link_timing_arrays``), so one
-    compilation serves every timing contract, uniform or per-link
-    heterogeneous.  Routing arrives as the replication tables
-    ``route_out/route_del/route_wt`` ((N, R, K) / (N, R) / (N, R, K)):
-    one pop can deliver locally AND spawn up to K child copies, which
-    for unicast-only tables (K = 1, identity deliver) reproduces the
-    historical next-hop gather bit-exactly.
 
-    ``C`` is the *physical* slot width (the expanded event count — every
-    queue can always hold everything ever routed through it); the
-    logical per-endpoint budget arrives as the dynamic scalar ``cap``
-    together with the flow-control mode ``fc_mode`` and on/off low-water
-    mark ``xon``, so drop, credit and on/off runs of every capacity
-    share ONE compilation per shape signature.
+def _slot_results(final: _SlotState):
+    """The engine's 14-tuple result, read off the final carry."""
+    return (final.log_n, final.log_inj, final.log_del, final.log_dest,
+            final.sent, final.n_sw, final.link.t,
+            jnp.max(final.link.t), final.drops,
+            final.busy_ns, final.busy_steps, final.q_drops,
+            final.stall_steps, final.credit_waits)
+
+
+def _slot_step_body(L: int, E: int, C: int, max_burst: int,
+                    scan_fn, update_fn,
+                    links_j, route_out_j, route_del_j, route_wt_j,
+                    t_cycle_v, t_rev_v, t_idle_v, cap, fc_mode, xon):
+    """Build the per-micro-transaction physics ``body(s, step_i) -> s'``.
+
+    ONE implementation of the slot-engine step, closed over the dynamic
+    operands, consumed by three callers: the reference engine
+    (``scan_fn``/``update_fn`` = the pure-jnp oracles), the per-step
+    pallas engine (= the jitted kernel wrappers), and the multi-step
+    kernel body / its oracle (= the value-level kernel math) — which is
+    what makes ``kernel="multistep"`` bit-exact by construction rather
+    than by parallel maintenance.
     """
-    from ..kernels import ops as kops
-    from ..kernels import ref as kref
-    if use_kernels:
-        scan_fn = kops.fabric_queue_scan
-        update_fn = kops.fabric_queue_update
-    else:
-        scan_fn = kref.fabric_queue_scan
-        update_fn = kref.fabric_queue_update
-
     Q = 2 * L
     lidx = jnp.arange(L)
+    K = route_out_j.shape[2]
+    # the chip a pop over (link, side) would deliver into — the gate
+    # needs it for both sides before the FSM picks a direction
+    rx_chip_cand = jnp.stack([links_j[:, 1], links_j[:, 0]], axis=1)
 
-    def run(q_time, q_dest, q_inj, sizes, init_tx,
-            links_j, route_out_j, route_del_j, route_wt_j,
-            t_cycle_v, t_rev_v, t_idle_v, cap, fc_mode, xon):
-        K = route_out_j.shape[2]
-        link0 = reset_links(init_tx)
-        # the chip a pop over (link, side) would deliver into — the gate
-        # needs it for both sides before the FSM picks a direction
-        rx_chip_cand = jnp.stack([links_j[:, 1], links_j[:, 0]], axis=1)
-        init = _SlotState(
-            link=link0,
-            q_time=q_time, q_dest=q_dest, q_inj=q_inj,
-            n_ins=sizes,
-            sent=jnp.zeros((L, 2), jnp.int32),
-            prev_mode_l=link0.xl.mode,
-            n_sw=jnp.zeros((L,), jnp.int32),
-            log_inj=jnp.zeros((E,), jnp.int32),
-            log_del=jnp.zeros((E,), jnp.int32),
-            log_dest=jnp.zeros((E,), jnp.int32),
-            log_n=jnp.zeros((), jnp.int32),
-            drops=jnp.zeros((), jnp.int32),
-            busy_ns=jnp.zeros((L,), jnp.int32),
-            busy_steps=jnp.zeros((L, 2), jnp.int32),
-            q_drops=jnp.zeros((L, 2), jnp.int32),
-            n_pop=jnp.zeros((L, 2), jnp.int32),
-            xoff=jnp.zeros((L, 2), jnp.int32),
-            in_stall=jnp.zeros((L, 2), jnp.int32),
-            stall_steps=jnp.zeros((L, 2), jnp.int32),
-            credit_waits=jnp.zeros((L, 2), jnp.int32),
-        )
-
-        def body(s: _SlotState, step_i):
+    def body(s: _SlotState, step_i) -> _SlotState:
             t_now = s.link.t  # (L,)
 
             # --- pending & next-arrival per endpoint queue --------------
@@ -1017,16 +1012,213 @@ def _slot_run(L: int, E: int, C: int, max_steps: int,
                 n_pop=n_pop, xoff=xoff,
                 in_stall=stalled.astype(jnp.int32),
                 stall_steps=stall_steps, credit_waits=credit_waits)
-            return ns, None
+            return ns
 
-        final, _ = jax.lax.scan(body, init, jnp.arange(max_steps))
-        return (final.log_n, final.log_inj, final.log_del, final.log_dest,
-                final.sent, final.n_sw, final.link.t,
-                jnp.max(final.link.t), final.drops,
-                final.busy_ns, final.busy_steps, final.q_drops,
-                final.stall_steps, final.credit_waits)
+    return body
+
+
+def _slot_run(L: int, E: int, C: int, max_steps: int,
+              max_burst: int, use_kernels: bool):
+    """Build the slot-scan ``run`` function for one static shape signature
+    (uncompiled — ``_slot_engine`` jits it solo, ``_slot_engine_batch``
+    vmaps it over a ``(B,)`` leading instance axis).
+
+    Timing arrives as *dynamic* (L,) cost vectors (``t_cycle_v`` /
+    ``t_rev_v`` / ``t_idle_v`` — see ``link.link_timing_arrays``), so one
+    compilation serves every timing contract, uniform or per-link
+    heterogeneous.  Routing arrives as the replication tables
+    ``route_out/route_del/route_wt`` ((N, R, K) / (N, R) / (N, R, K)):
+    one pop can deliver locally AND spawn up to K child copies, which
+    for unicast-only tables (K = 1, identity deliver) reproduces the
+    historical next-hop gather bit-exactly.
+
+    ``C`` is the *physical* slot width (the expanded event count — every
+    queue can always hold everything ever routed through it); the
+    logical per-endpoint budget arrives as the dynamic scalar ``cap``
+    together with the flow-control mode ``fc_mode`` and on/off low-water
+    mark ``xon``, so drop, credit and on/off runs of every capacity
+    share ONE compilation per shape signature.
+    """
+    from ..kernels import ops as kops
+    from ..kernels import ref as kref
+    if use_kernels:
+        scan_fn = kops.fabric_queue_scan
+        update_fn = kops.fabric_queue_update
+    else:
+        scan_fn = kref.fabric_queue_scan
+        update_fn = kref.fabric_queue_update
+
+    def run(q_time, q_dest, q_inj, sizes, init_tx,
+            links_j, route_out_j, route_del_j, route_wt_j,
+            t_cycle_v, t_rev_v, t_idle_v, cap, fc_mode, xon):
+        init = _slot_init(L, E, q_time, q_dest, q_inj, sizes, init_tx)
+        body = _slot_step_body(
+            L, E, C, max_burst, scan_fn, update_fn,
+            links_j, route_out_j, route_del_j, route_wt_j,
+            t_cycle_v, t_rev_v, t_idle_v, cap, fc_mode, xon)
+
+        def scan_body(s, step_i):
+            return body(s, step_i), None
+
+        final, _ = jax.lax.scan(scan_body, init, jnp.arange(max_steps))
+        return _slot_results(final)
 
     return run
+
+
+# -----------------------------------------------------------------------
+# Multi-step slot engine (``kernel="multistep"``): the whole
+# micro-transaction loop fused into chunked Pallas launches
+# -----------------------------------------------------------------------
+
+#: packed-lane channel order of the multi-step carry, (16, L) int32:
+#: the link FSM pair + per-link engine bookkeeping.
+_MS_LANES = ("t", "last_dir", "bus_busy", "prev_tx_l", "prev_tx_r",
+             "xl.mode", "xl.sw_ack", "xl.rx_p", "xl.burst",
+             "xr.mode", "xr.sw_ack", "xr.rx_p", "xr.burst",
+             "prev_mode_l", "n_sw", "busy_ns")
+#: packed per-endpoint-side channel order, (9, L, 2) int32.
+_MS_SIDES = ("n_ins", "sent", "n_pop", "xoff", "in_stall",
+             "stall_steps", "credit_waits", "busy_steps", "q_drops")
+
+
+def _pack_slot_state(s: _SlotState):
+    """``_SlotState`` -> the multi-step kernel's packed int32 carry.
+
+    Seven arrays: the three (Q, C) slot planes, a (16, L) lane plane
+    (``_MS_LANES``), a (9, L, 2) side plane (``_MS_SIDES``), a (3, E)
+    delivery-log plane and a (2,) counter vector ``[log_n, drops]``.
+    The packing is what the roofline model meters: bytes/step on the
+    per-step path = this carry round-tripped through HBM twice per
+    micro-transaction."""
+    lk = s.link
+    lanes = jnp.stack([
+        lk.t, lk.last_dir, lk.bus_busy, lk.prev_tx_l, lk.prev_tx_r,
+        lk.xl.mode, lk.xl.sw_ack, lk.xl.rx_p, lk.xl.burst,
+        lk.xr.mode, lk.xr.sw_ack, lk.xr.rx_p, lk.xr.burst,
+        s.prev_mode_l, s.n_sw, s.busy_ns])
+    sides = jnp.stack([s.n_ins, s.sent, s.n_pop, s.xoff, s.in_stall,
+                       s.stall_steps, s.credit_waits, s.busy_steps,
+                       s.q_drops])
+    logs = jnp.stack([s.log_inj, s.log_del, s.log_dest])
+    counters = jnp.stack([s.log_n, s.drops])
+    return (s.q_time, s.q_dest, s.q_inj, lanes, sides, logs, counters)
+
+
+def _unpack_slot_state(carry) -> _SlotState:
+    q_time, q_dest, q_inj, lanes, sides, logs, counters = carry
+    link = LinkState(
+        t=lanes[0], last_dir=lanes[1], bus_busy=lanes[2],
+        prev_tx_l=lanes[3], prev_tx_r=lanes[4],
+        xl=XcvrState(mode=lanes[5], sw_ack=lanes[6], rx_p=lanes[7],
+                     burst=lanes[8]),
+        xr=XcvrState(mode=lanes[9], sw_ack=lanes[10], rx_p=lanes[11],
+                     burst=lanes[12]))
+    return _SlotState(
+        link=link, q_time=q_time, q_dest=q_dest, q_inj=q_inj,
+        n_ins=sides[0], sent=sides[1],
+        prev_mode_l=lanes[13], n_sw=lanes[14],
+        log_inj=logs[0], log_del=logs[1], log_dest=logs[2],
+        log_n=counters[0], drops=counters[1],
+        busy_ns=lanes[15], busy_steps=sides[7], q_drops=sides[8],
+        n_pop=sides[2], xoff=sides[3], in_stall=sides[4],
+        stall_steps=sides[5], credit_waits=sides[6])
+
+
+def slot_carry_bytes(L: int, E: int, C: int) -> int:
+    """Bytes of the packed multi-step carry (the roofline traffic unit).
+
+    ``3·(2L·C) + 16·L + 9·2L + 3·E + 2`` int32 words — exactly what the
+    per-step engine round-trips through XLA/HBM per micro-transaction
+    and the multi-step kernel keeps resident for ``chunk`` steps."""
+    q = 2 * L
+    words = 3 * q * C + len(_MS_LANES) * L + len(_MS_SIDES) * q + 3 * E + 2
+    return 4 * words
+
+
+def _slot_run_multistep(L: int, E: int, C: int, max_steps: int,
+                        max_burst: int, chunk: int):
+    """Multi-step variant of :func:`_slot_run`: same operand contract,
+    same 14-tuple result, but the scan over micro-transactions runs
+    ``chunk`` steps at a time INSIDE one Pallas launch
+    (``fabric_queue_multistep_pallas``) with the packed carry resident
+    across steps, instead of dispatching two kernels + a full state
+    round-trip per step.  The queue scan / pop / append inside the
+    kernel body is the value-level scatter-as-matmul math
+    (``scan_math`` / ``update_math``) — the same tile code the per-step
+    kernels execute, now fused with the FSM/flow physics of
+    :func:`_slot_step_body`.
+
+    The final chunk's in-kernel loop bound is
+    ``min(chunk, max_steps - base)``, so a binding ``max_steps`` is
+    honoured exactly (post-bound steps never execute — they are not
+    no-ops in general)."""
+    from ..kernels import fabric_queue as fqk
+
+    def run(q_time, q_dest, q_inj, sizes, init_tx,
+            links_j, route_out_j, route_del_j, route_wt_j,
+            t_cycle_v, t_rev_v, t_idle_v, cap, fc_mode, xon):
+        init = _slot_init(L, E, q_time, q_dest, q_inj, sizes, init_tx)
+        carry0 = _pack_slot_state(init)
+        consts = (links_j, route_out_j, route_del_j, route_wt_j,
+                  jnp.stack([t_cycle_v, t_rev_v, t_idle_v]),
+                  jnp.stack([jnp.asarray(cap, jnp.int32),
+                             jnp.asarray(fc_mode, jnp.int32),
+                             jnp.asarray(xon, jnp.int32)]))
+
+        def step_fn(car, con, step_i):
+            links_c, rout_c, rdel_c, rwt_c, timing_c, par_c = con
+            body = _slot_step_body(
+                L, E, C, max_burst, fqk.scan_math, fqk.update_math,
+                links_c, rout_c, rdel_c, rwt_c,
+                timing_c[0], timing_c[1], timing_c[2],
+                par_c[0], par_c[1], par_c[2])
+            return _pack_slot_state(body(_unpack_slot_state(car), step_i))
+
+        # base rides an array derived from a batched operand (sizes) so
+        # that under jax.vmap every pallas operand carries the batch
+        # axis — the batching rule then has no unbatched inputs to
+        # special-case.  Solo, the added term is exactly zero.
+        base0 = jnp.zeros((1,), jnp.int32) + 0 * sizes[0, 0]
+        n_chunks = -(-max_steps // chunk) if max_steps > 0 else 0
+
+        def chunk_body(state, _):
+            car, b = state
+            out = fqk.fabric_queue_multistep_pallas(
+                car, consts, b, step_fn=step_fn,
+                chunk=chunk, max_steps=max_steps)
+            return (tuple(out), b + chunk), None
+
+        carry = carry0
+        if n_chunks > 0:
+            (carry, _b), _ = jax.lax.scan(
+                chunk_body, (carry0, base0), None, length=n_chunks)
+        return _slot_results(_unpack_slot_state(carry))
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _slot_engine_multistep(L: int, E: int, C: int, max_steps: int,
+                           max_burst: int, chunk: int):
+    """Compile-once multi-step slot engine (``engine="pallas"`` with
+    ``kernel="multistep"``): ceil(max_steps / chunk) fused kernel
+    launches per run instead of 2·max_steps."""
+    return _jit_cached(
+        _slot_run_multistep(L, E, C, max_steps, max_burst, chunk),
+        donate_argnums=(0, 1, 2))
+
+
+@functools.lru_cache(maxsize=None)
+def _slot_engine_multistep_batch(L: int, E: int, C: int, max_steps: int,
+                                 max_burst: int, chunk: int,
+                                 n_devices: int = 1):
+    """Batched multi-step engine: ``jax.vmap`` over a ``(B,)`` instance
+    axis; the fused kernel batches through ``pallas_call``'s batching
+    rule (B independent carries per launch, interpret mode included)."""
+    fn = jax.vmap(_slot_run_multistep(L, E, C, max_steps, max_burst,
+                                      chunk))
+    return _jit_cached(_shard_over_batch(fn, n_devices))
 
 
 @functools.lru_cache(maxsize=None)

@@ -45,7 +45,11 @@ from .transceiver import RX, TX, XcvrState, reset_state, step as fsm_step
 # Trace action codes
 A_IDLE, A_HANDSHAKE, A_TX_L, A_TX_R = 0, 1, 2, 3
 
-_BIG = jnp.int32(2**30)
+# A plain Python int (NOT a jnp scalar): jnp scalars created at import
+# time become captured constants inside any Pallas kernel body that
+# closes over this module (rejected by pallas_call); a Python int stays
+# a literal in every trace and promotes to int32 identically.
+_BIG = 2**30
 BIG_NS = _BIG  # exported: "no further arrival" sentinel for link_step
 
 

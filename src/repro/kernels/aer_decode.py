@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import resolve_interpret
+
 
 def _decode_kernel(idx_ref, val_ref, out_ref):
     idx = idx_ref[...]                  # (rows, budget) i32
@@ -35,7 +37,8 @@ def _decode_kernel(idx_ref, val_ref, out_ref):
 
 
 def aer_decode_pallas(idx: jnp.ndarray, val: jnp.ndarray, block: int,
-                      *, rows_per_block: int = 4, interpret: bool = True):
+                      *, rows_per_block: int = 4,
+                      interpret: bool | str | None = None):
     """idx/val: (num_blocks, budget); returns dense (num_blocks, block)."""
     nb, budget = idx.shape
     assert nb % rows_per_block == 0, (nb, rows_per_block)
@@ -50,5 +53,5 @@ def aer_decode_pallas(idx: jnp.ndarray, val: jnp.ndarray, block: int,
         ],
         out_specs=pl.BlockSpec((rows_per_block, block), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, block), val.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(idx, val)

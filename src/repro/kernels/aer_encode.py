@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import resolve_interpret
+
 
 def _encode_kernel(x_ref, tau_ref, idx_ref, val_ref, count_ref, wanted_ref,
                    *, budget: int):
@@ -63,7 +65,8 @@ def _encode_kernel(x_ref, tau_ref, idx_ref, val_ref, count_ref, wanted_ref,
 
 
 def aer_encode_pallas(x: jnp.ndarray, tau: jnp.ndarray, budget: int,
-                      *, rows_per_block: int = 4, interpret: bool = True):
+                      *, rows_per_block: int = 4,
+                      interpret: bool | str | None = None):
     """x: (num_blocks, block) float; tau: (num_blocks,) float.
 
     Returns (idx i32, val x.dtype, count i32, wanted i32) with event slots
@@ -94,5 +97,5 @@ def aer_encode_pallas(x: jnp.ndarray, tau: jnp.ndarray, budget: int,
             pl.BlockSpec((rows_per_block,), lambda i: (i,)),
         ],
         out_shape=out_shape,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, tau)

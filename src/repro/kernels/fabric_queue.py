@@ -58,46 +58,58 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core.protocol_sim import BIG_NS
+from .dispatch import resolve_interpret
 
 # plain Python int: a jnp scalar would be a captured constant inside the
 # kernel, which pallas_call rejects
 _BIG = int(BIG_NS)
 
 
-def _scan_kernel(q_ref, qd_ref, t_ref, pend_ref, rmin_ref, nxt_ref,
-                 amin_ref, busy_ref, route_ref):
-    q = q_ref[...]                       # (rows, C) int32 release times
-    t = t_ref[...]                       # (rows,) int32 queue clocks
-    rows, ncols = q.shape
+def scan_math(q, qd, t):
+    """Value-level body of the scan kernel (kernel-safe jnp only).
 
+    Shared by ``_scan_kernel`` (one VMEM tile per grid step) and the
+    multi-step kernel's in-loop queue scan, so the tile math — the
+    first-minimum-index argmin recast, the one-hot head-route select —
+    exists exactly once.  Returns the six (rows,) int32 reductions.
+    """
+    rows, ncols = q.shape
     released = q <= t[:, None]
     val = jnp.where(released, q, _BIG)
     row_min = jnp.min(val, axis=1)
     pend = jnp.sum(released.astype(jnp.int32), axis=1)
-
-    pend_ref[...] = pend
-    rmin_ref[...] = row_min
-    nxt_ref[...] = jnp.min(jnp.where(released, _BIG, q), axis=1)
+    nxt = jnp.min(jnp.where(released, _BIG, q), axis=1)
     # first-minimum-index == jnp.argmin (all-BIG rows resolve to slot 0)
     iota_c = jax.lax.broadcasted_iota(jnp.int32, (rows, ncols), 1)
     amin = jnp.min(
         jnp.where(val == row_min[:, None], iota_c, ncols), axis=1)
-    amin_ref[...] = amin
     # 0/1 backlog indicator: the released mask is already in VMEM, so the
     # telemetry plane's per-step counter costs one more reduction of the
     # same tile instead of a second O(Q*C) pass off-kernel
-    busy_ref[...] = (pend > 0).astype(jnp.int32)
+    busy = (pend > 0).astype(jnp.int32)
     # head route = q_dest[row, amin] as a one-hot select (no gather
     # lowering needed): amin matches exactly one column per row, so the
     # masked sum IS the gather.  Feeds the flow-control admission gate.
-    route_ref[...] = jnp.sum(
-        jnp.where(iota_c == amin[:, None], qd_ref[...], 0), axis=1)
+    route = jnp.sum(jnp.where(iota_c == amin[:, None], qd, 0), axis=1)
+    return pend, row_min, nxt, amin, busy, route
+
+
+def _scan_kernel(q_ref, qd_ref, t_ref, pend_ref, rmin_ref, nxt_ref,
+                 amin_ref, busy_ref, route_ref):
+    pend, r_min, nxt, amin, busy, route = scan_math(
+        q_ref[...], qd_ref[...], t_ref[...])
+    pend_ref[...] = pend
+    rmin_ref[...] = r_min
+    nxt_ref[...] = nxt
+    amin_ref[...] = amin
+    busy_ref[...] = busy
+    route_ref[...] = route
 
 
 def fabric_queue_step_pallas(q_time: jnp.ndarray, q_dest: jnp.ndarray,
                              t_q: jnp.ndarray, *,
                              rows_per_block: int = 8,
-                             interpret: bool = True):
+                             interpret: bool | str | None = None):
     """Fused queue-step reductions.
 
     Args:
@@ -123,24 +135,25 @@ def fabric_queue_step_pallas(q_time: jnp.ndarray, q_dest: jnp.ndarray,
         in_specs=[tile, tile, row_spec],
         out_specs=[row_spec] * 6,
         out_shape=out_shape,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q_time, q_dest, t_q)
 
 
-def _update_kernel(qt_ref, qd_ref, qi_ref, popq_ref, pops_ref,
-                   appq_ref, apps_ref, appt_ref, appd_ref, appi_ref,
-                   ot_ref, od_ref, oi_ref, *, rows_per_block: int):
-    qt = qt_ref[...]                     # (rows, C)
-    rows, ncols = qt.shape
-    base = pl.program_id(0) * rows_per_block
-    row_ids = base + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+def update_math(qt, qd, qi, popq, pops, appq, apps, appt, appd, appi,
+                row_base=0):
+    """Value-level body of the update kernel (scatter-as-matmul, int32).
 
-    popq = popq_ref[...]                 # (Lp,) queue id or Q sentinel
-    pops = pops_ref[...]                 # (Lp,) popped slot
-    appq = appq_ref[...]                 # (La,) queue id or Q sentinel
-    apps = apps_ref[...]                 # (La,) append slot
-    n_pop = popq.shape[0]
-    n_app = appq.shape[0]                # = Lp·K under in-fabric mcast
+    ``row_base`` offsets the tile's row ids when the caller processes a
+    (rows, C) slice of a larger array (the gridded per-step kernel); the
+    multi-step kernel passes the whole array with ``row_base=0``.
+    Shared so the one-hot matmul scatter exists exactly once.  Returns
+    the updated ``(q_time, q_dest, q_inj)`` values.
+    """
+    rows, ncols = qt.shape
+    row_ids = row_base + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+
+    n_pop = popq.shape[0]                # (Lp,) lanes
+    n_app = appq.shape[0]                # (La,) = Lp·K under mcast
 
     iota_pop = jax.lax.broadcasted_iota(jnp.int32, (n_pop, ncols), 1)
     iota_app = jax.lax.broadcasted_iota(jnp.int32, (n_app, ncols), 1)
@@ -162,16 +175,28 @@ def _update_kernel(qt_ref, qd_ref, qi_ref, popq_ref, pops_ref,
                                    preferred_element_type=jnp.int32)
 
     keep = 1 - p_pop - p_app             # pop/append slots are disjoint
-    ot_ref[...] = qt * keep + _BIG * p_pop + scatter(appt_ref[...])
-    od_ref[...] = qd_ref[...] * (1 - p_app) + scatter(appd_ref[...])
-    oi_ref[...] = qi_ref[...] * (1 - p_app) + scatter(appi_ref[...])
+    return (qt * keep + _BIG * p_pop + scatter(appt),
+            qd * (1 - p_app) + scatter(appd),
+            qi * (1 - p_app) + scatter(appi))
+
+
+def _update_kernel(qt_ref, qd_ref, qi_ref, popq_ref, pops_ref,
+                   appq_ref, apps_ref, appt_ref, appd_ref, appi_ref,
+                   ot_ref, od_ref, oi_ref, *, rows_per_block: int):
+    ot, od, oi = update_math(
+        qt_ref[...], qd_ref[...], qi_ref[...], popq_ref[...], pops_ref[...],
+        appq_ref[...], apps_ref[...], appt_ref[...], appd_ref[...],
+        appi_ref[...], row_base=pl.program_id(0) * rows_per_block)
+    ot_ref[...] = ot
+    od_ref[...] = od
+    oi_ref[...] = oi
 
 
 def fabric_queue_update_pallas(q_time, q_dest, q_inj,
                                pop_q, pop_slot,
                                app_q, app_slot, app_t, app_dest, app_inj,
                                *, rows_per_block: int = 8,
-                               interpret: bool = True):
+                               interpret: bool | str | None = None):
     """Fused pop-consume + forward-append over the (Q, C) slot arrays.
 
     ``pop_q`` / ``app_q`` hold a queue id per lane, or ``Q`` (any id
@@ -201,6 +226,80 @@ def fabric_queue_update_pallas(q_time, q_dest, q_inj,
                   whole_app, whole_app, whole_app, whole_app, whole_app],
         out_specs=[tile, tile, tile],
         out_shape=out_shape,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q_time, q_dest, q_inj, pop_q, pop_slot,
       app_q, app_slot, app_t, app_dest, app_inj)
+
+
+# ---------------------------------------------------------------------------
+# Multi-step fused kernel: the whole micro-transaction loop per launch
+# ---------------------------------------------------------------------------
+
+def fabric_queue_multistep_pallas(carry, consts, base, *, step_fn,
+                                  chunk: int, max_steps: int,
+                                  interpret: bool | str | None = None):
+    """Run up to ``chunk`` fabric micro-transactions in ONE kernel launch.
+
+    The per-step path above dispatches two ``pallas_call``s per
+    micro-transaction and round-trips the full engine state through XLA
+    between them — 2·max_steps kernel launches per simulation, each
+    re-loading the (Q, C) slot arrays from HBM.  This kernel instead
+    loads the packed carry once, steps it ``chunk`` times with a
+    ``lax.fori_loop`` *inside* the kernel body (the carry stays resident
+    in VMEM/registers across steps), and writes it back once: HBM
+    traffic and launch count drop by the chunk factor.
+
+    The step loop is an in-kernel ``fori_loop`` rather than a grid
+    dimension deliberately: scratch carried across sequential grid steps
+    is a TPU-only guarantee, and interpret mode *unrolls* grid
+    iterations at trace time (chunk copies of the body), while a
+    ``fori_loop`` body traces once on every backend.  The outer
+    chunk-of-steps structure is the caller's ``lax.scan`` over
+    ``base`` values (``core.network._slot_run_multistep``).
+
+    Args:
+      carry:  tuple of int32 state arrays (slot arrays + packed lane /
+              side / log / counter planes — the caller owns the layout).
+      consts: tuple of read-only int32 arrays (links, replication
+              tables, timing planes, flow-control scalars).
+      base:   (1,) int32 — global index of this chunk's first step.
+      step_fn: ``step_fn(carry, consts, step_i) -> carry`` — one
+              micro-transaction of physics, built by the engine so the
+              kernel body and the pure-jnp oracle
+              (``ref.fabric_queue_multistep``) share it verbatim.  The
+              queue scan / scatter math inside it must use
+              :func:`scan_math` / :func:`update_math` (kernel-safe,
+              scatter-as-matmul) — that is what moves the pop/append
+              contractions inside the kernel body.
+      chunk / max_steps: static ints.  The loop bound is
+              ``min(chunk, max_steps - base)`` — dynamic, so a binding
+              ``max_steps`` is honoured exactly (post-bound steps are
+              NOT executed; they are not guaranteed to be no-ops).
+
+    Returns the stepped carry tuple (same shapes/dtypes).
+    """
+    carry = tuple(carry)
+    consts = tuple(consts)
+    n_car = len(carry)
+    n_con = len(consts)
+
+    def kernel(*refs):
+        car = tuple(r[...] for r in refs[:n_car])
+        con = tuple(r[...] for r in refs[n_car:n_car + n_con])
+        b = refs[n_car + n_con][0]
+        out_refs = refs[n_car + n_con + 1:]
+        n = jnp.minimum(chunk, max_steps - b)
+
+        def body(i, c):
+            return step_fn(c, con, b + i)
+
+        out = jax.lax.fori_loop(0, n, body, car)
+        for o_ref, o in zip(out_refs, out):
+            o_ref[...] = o
+
+    out_shape = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in carry]
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        interpret=resolve_interpret(interpret),
+    )(*carry, *consts, base)

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import resolve_interpret
+
 
 def _lif_kernel(v_ref, i_ref, v_out_ref, s_out_ref, *, decay, v_th, v_reset):
     v = v_ref[...]
@@ -26,7 +28,8 @@ def _lif_kernel(v_ref, i_ref, v_out_ref, s_out_ref, *, decay, v_th, v_reset):
 
 def lif_step_pallas(v: jnp.ndarray, i_syn: jnp.ndarray, *, decay: float,
                     v_th: float, v_reset: float,
-                    block_rows: int = 8, interpret: bool = True):
+                    block_rows: int = 8,
+                    interpret: bool | str | None = None):
     """v, i_syn: (rows, lanes) float32; lanes should be a multiple of 128.
 
     Returns (v_next, spikes) with spikes in v.dtype (0.0 / 1.0).
@@ -51,5 +54,5 @@ def lif_step_pallas(v: jnp.ndarray, i_syn: jnp.ndarray, *, decay: float,
             jax.ShapeDtypeStruct((rows, lanes), v.dtype),
             jax.ShapeDtypeStruct((rows, lanes), v.dtype),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(v, i_syn)

@@ -4,8 +4,11 @@ Handles flattening/padding arbitrary tensors into (num_blocks, block) tiles,
 threshold selection, event packing (26-bit-style wire words), and the
 error-feedback compose used by the sparse collectives.
 
-``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere (this
-container is CPU-only; the BlockSpec layout is the TPU deployment config).
+``interpret=None`` auto-selects via ``dispatch.resolve_interpret``:
+compiled wherever a Pallas backend exists (TPU/GPU), interpret elsewhere
+(this container is CPU-only; the BlockSpec layout is the TPU deployment
+config).  ``PALLAS_INTERPRET=1`` forces interpret mode everywhere — note
+it is read when a wrapper first traces, so set it before the first call.
 """
 
 from __future__ import annotations
@@ -20,18 +23,14 @@ from ..core import events as ev
 from . import ref
 from .aer_decode import aer_decode_pallas
 from .aer_encode import aer_encode_pallas
-from .fabric_queue import (fabric_queue_step_pallas,
+from .dispatch import resolve_interpret as _auto_interpret
+from .fabric_queue import (fabric_queue_multistep_pallas,
+                           fabric_queue_step_pallas,
                            fabric_queue_update_pallas)
 from .lif_step import lif_step_pallas
 
 DEFAULT_BLOCK = 1024
 DEFAULT_BUDGET = 128
-
-
-def _auto_interpret(interpret):
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
 
 
 class EventBlocks(NamedTuple):
@@ -184,6 +183,28 @@ def fabric_queue_update(q_time, q_dest, q_inj, pop_q, pop_slot,
         app_q, app_slot, app_t, app_dest, app_inj,
         rows_per_block=_rows_per_block_for(q_time.shape[0], rows_per_block),
         interpret=_auto_interpret(interpret))
+
+
+def fabric_queue_multistep(carry, consts, base, *, step_fn, chunk: int,
+                           max_steps: int, interpret: bool | None = None,
+                           use_ref: bool = False):
+    """Fused multi-step fabric loop: ``chunk`` micro-transactions per
+    kernel launch, carry resident across steps (vs. 2 launches + a full
+    state round-trip per step on the per-step path).
+
+    Not jitted here — the engine (``core.network._slot_run_multistep``)
+    calls it inside its own jitted chunk scan, and ``step_fn`` is a
+    per-engine closure (jit static-arg hashing by closure identity
+    would defeat the cache).
+    """
+    if use_ref:
+        return ref.fabric_queue_multistep(carry, consts, base,
+                                          step_fn=step_fn, chunk=chunk,
+                                          max_steps=max_steps)
+    return fabric_queue_multistep_pallas(carry, consts, base,
+                                         step_fn=step_fn, chunk=chunk,
+                                         max_steps=max_steps,
+                                         interpret=interpret)
 
 
 def lif_step(v: jnp.ndarray, i_syn: jnp.ndarray, *, decay: float = 0.9,

@@ -133,6 +133,29 @@ def fabric_queue_update(q_time, q_dest, q_inj, pop_q, pop_slot,
     return q_time, q_dest, q_inj
 
 
+def fabric_queue_multistep(carry, consts, base, *, step_fn, chunk: int,
+                           max_steps: int):
+    """Multi-step oracle: the semantics of one
+    ``fabric_queue_multistep_pallas`` launch in pure jnp (no Pallas).
+
+    Steps the packed carry ``min(chunk, max_steps - base)`` times with a
+    plain ``lax.fori_loop`` — same dynamic bound as the kernel, so a
+    binding ``max_steps`` truncates the final chunk identically.  The
+    injected ``step_fn`` should be built over *this module's*
+    ``fabric_queue_scan`` / ``fabric_queue_update`` (the engine's
+    ``kernels="ref"`` wiring does exactly that), making the oracle
+    Pallas-free end to end; the kernel must match it bit-for-bit for
+    any step_fn (tested in tests/test_fabric_queue_kernel.py).
+    """
+    b = jnp.asarray(base).reshape(-1)[0]
+    n = jnp.minimum(chunk, max_steps - b)
+
+    def body(i, c):
+        return step_fn(c, tuple(consts), b + i)
+
+    return jax.lax.fori_loop(0, n, body, tuple(carry))
+
+
 # ---------------------------------------------------------------------------
 # selective_scan_ref: plain time-step loop oracle for the S6 recurrence
 #   h_t = exp(dt_t · A) ⊙ h_{t-1} + (dt_t · x_t) ⊗ B_t ;  y_t = h_t · C_t
