@@ -22,7 +22,11 @@ channel-dependency cycle must be refused with every channel named
 (``fabric_ring16_pallas_multistep``) gates the fused multi-step kernel:
 bit-exact with the ring engine, one compilation, and strictly fewer
 Pallas launches than the per-step path by trace-probe count
-(``run_kernels_gate``).  Then it
+(``run_kernels_gate``).  A co-simulation cell gates the closed-loop
+claim: a recurrent SNN on the benchmark ring-16 must run fully closed
+loop over a credit fabric — exact per-tick conservation, 100% lossless
+delivery, and a spike-trajectory divergence from the open-loop control
+above a hard floor (``run_cosim_gate``).  Then it
 times the ring engine end-to-end (compile + run, the number a user
 feels) and fails if it regressed more than ``MAX_REGRESSION``x against
 the checked-in baseline in ``baselines/fabric_smoke.json``.
@@ -90,12 +94,14 @@ def run_smoke() -> dict:
     batched = run_batch_gate()
     verifier = run_verifier_gate()
     kernels = run_kernels_gate()
+    cosim = run_cosim_gate()
     return {"ring_us": t_ring * 1e6,
             "cells": len(tr.PATTERNS),
             "n_chips": N_CHIPS,
             "events_per_chip": EVENTS_PER_CHIP,
             "mcast_traversals_saved": saved,
-            **adaptive, **lossless, **batched, **verifier, **kernels}
+            **adaptive, **lossless, **batched, **verifier, **kernels,
+            **cosim}
 
 
 def run_multicast_gate() -> int:
@@ -482,6 +488,66 @@ def run_batch_gate() -> dict:
             "batch_speedup_floor": floor}
 
 
+MIN_COSIM_DIVERGENCE = 16
+
+
+def run_cosim_gate() -> dict:
+    """Gate the closed-loop co-simulation claim end to end.
+
+    A recurrent SNN on the benchmark ring-16
+    (``fabric_sweep.COSIM_RING``: forward + backward ring projections
+    plus local recurrence, deterministic key) runs fully closed-loop —
+    every inter-chip spike transported by a credit-flow-controlled
+    fabric, every delivered event fed back into the next tick's
+    membrane currents — and must satisfy:
+
+    1. exact conservation EVERY tick: delivered + drops == injected;
+    2. losslessness: credit flow control delivers 100% with ZERO drops;
+    3. the loop is real: the closed-loop spike trajectory diverges from
+       the open-loop control (identical placement, weights and drive;
+       the fabric path severed) by at least ``MIN_COSIM_DIVERGENCE``
+       spike-count units — a vacuously-closed loop (feedback never
+       arriving, scatter mapping broken, weights zeroed) fails the
+       floor immediately.
+    """
+    from benchmarks.fabric_sweep import COSIM_RING as cfg
+    from repro.cosim import CosimConfig, CosimEngine
+    from repro.cosim.traffic_bridge import _ring_placement
+
+    pl = _ring_placement(cfg["n_chips"], "recurrent", addr=AddressSpec())
+    key = jax.random.PRNGKey(cfg["key"])
+    ccfg = CosimConfig(input_rate=cfg["input_rate"], feedback="none")
+    opn = CosimEngine(pl, ccfg, key=key).run(cfg["ticks"])
+    fab = pl.fabric(queues=QueuePolicy(capacity=cfg["capacity"],
+                                       flow="credit"))
+    cls = CosimEngine(pl, ccfg._replace(feedback="next_tick"),
+                      fabric=fab, key=key).run(cfg["ticks"])
+
+    if not cls.conservation_exact:
+        bad = np.flatnonzero(cls.delivered + cls.drops != cls.injected)
+        raise RuntimeError(
+            f"cosim gate: delivered + drops != injected on tick(s) "
+            f"{bad.tolist()}")
+    if int(cls.drops.sum()) != 0 or \
+            int(cls.delivered.sum()) != int(cls.injected.sum()):
+        raise RuntimeError(
+            f"cosim gate: credit fabric was not lossless — delivered "
+            f"{int(cls.delivered.sum())}/{int(cls.injected.sum())}, "
+            f"drops {int(cls.drops.sum())}")
+    if int(cls.delivered.sum()) == 0:
+        raise RuntimeError("cosim gate is vacuous: the network never "
+                           "spiked across chips")
+    divergence = int(np.abs(cls.spikes - opn.spikes).sum())
+    if divergence < MIN_COSIM_DIVERGENCE:
+        raise RuntimeError(
+            f"cosim gate: closed-loop spiking diverged from open loop "
+            f"by only {divergence} (< {MIN_COSIM_DIVERGENCE}) — the "
+            f"fabric feedback path is not reaching the dynamics")
+    return {"cosim_ticks": cfg["ticks"],
+            "cosim_delivered": int(cls.delivered.sum()),
+            "cosim_divergence": divergence}
+
+
 MULTISTEP_CHUNK = 64
 MIN_DISPATCH_WIN = 16.0
 
@@ -592,6 +658,9 @@ def main(argv=None) -> int:
           f"({result['step_dispatches']} -> "
           f"{result['multistep_dispatches']} launches at chunk "
           f"{result['multistep_chunk']}); "
+          f"closed-loop SNN delivers {result['cosim_delivered']} events "
+          f"losslessly over {result['cosim_ticks']} ticks and diverges "
+          f"from open loop by {result['cosim_divergence']}; "
           f"ring engine {result['ring_us'] / 1e3:.0f} ms total "
           f"(compile + run)")
 

@@ -403,6 +403,77 @@ BATCH_RING = dict(n_chips=16, key=7, epc=EVENTS_PER_CHIP,
 BATCH_SIZES = (1, 8, 32)
 
 
+# Closed-loop co-simulation configuration (shared with the CI gate in
+# fabric_smoke.run_cosim_gate and sized like examples/closed_loop_snn.py):
+# a recurrent SNN on the benchmark ring-16, credit flow control.  The
+# sweep rows transport the OPEN-LOOP spike stream of this network (the
+# traffic-bridge A/B against the synthetic fabric_ring16_* rows on the
+# identical topology); the smoke gate closes the loop and asserts
+# lossless delivery plus the open-vs-closed divergence floor.
+COSIM_RING = dict(n_chips=16, key=9, epc=EVENTS_PER_CHIP, capacity=96,
+                  input_rate=0.06, ticks=24)
+
+# The bridge rollout is a pure function of (pattern, n, epc, key) and the
+# cosim-layer + LIF-kernel code, so specs memoize on disk like the
+# synthetic patterns — regenerating one costs an open-loop LIF rollout
+# (seconds of jit compiles) that has nothing to do with the fabric
+# engine being benchmarked.
+@functools.lru_cache(maxsize=None)
+def _snn_version() -> str:
+    import repro.cosim.engine as _ce
+    import repro.cosim.placement as _cp
+    import repro.cosim.traffic_bridge as _cb
+    import repro.kernels.ops as _ko
+    src = b"".join(inspect.getsource(m).encode()
+                   for m in (_cb, _ce, _cp, _ko))
+    return hashlib.sha1(src).hexdigest()[:10]
+
+
+def _snn_spec_cached(pattern: str, key, n_chips: int, epc: int):
+    from repro.cosim.traffic_bridge import SNN_PATTERNS
+    tag = "-".join(str(int(w)) for w in np.asarray(key).ravel())
+    path = os.path.join(
+        _TRAFFIC_CACHE,
+        f"{pattern}_n{n_chips}_e{epc}_k{tag}_v{_snn_version()}.npz")
+    if os.path.exists(path):
+        z = np.load(path)
+        return tr.TrafficSpec(src=jax.numpy.asarray(z["src"]),
+                              t=jax.numpy.asarray(z["t"]),
+                              dest=jax.numpy.asarray(z["dest"]))
+    spec = SNN_PATTERNS[pattern](key, n_chips, epc)
+    os.makedirs(_TRAFFIC_CACHE, exist_ok=True)
+    np.savez(path, src=np.asarray(spec.src), t=np.asarray(spec.t),
+             dest=np.asarray(spec.dest))
+    return spec
+
+
+def sweep_cosim(engine=DEFAULT_ENGINE):
+    """Spike-driven traffic rows: the two ``SNN_PATTERNS`` bridge
+    workloads (feedforward chain vs bidirectional recurrent coupling,
+    sampled from real LIF rollouts on the ``COSIM_RING`` ring) run
+    through the fabric exactly like any synthetic pattern — same
+    topology, same event budget as the ``fabric_ring16_*`` rows, so the
+    A/B between modelled and network-generated load is a straight row
+    comparison.  SNN load is tick-phased and projection-structured;
+    these rows pin how the fabric carries it."""
+    cfg = COSIM_RING
+    topo = ring_topology(cfg["n_chips"])
+    from repro.cosim.traffic_bridge import SNN_PATTERNS
+    rows = []
+    key = jax.random.PRNGKey(cfg["key"])
+    for name in sorted(SNN_PATTERNS):
+        key, cell_key = jax.random.split(key)
+        spec = _snn_spec_cached(name, cell_key, cfg["n_chips"],
+                                cfg["epc"])
+        fab = Fabric(topo, engine=engine)
+        (cell,) = fab.sweep([spec], warm=False)
+        m = _metrics(cell.result)
+        rows.append(_cell(f"fabric_{name}", cell.us_per_call,
+                          _derived(m), engine, m, api="fabric",
+                          tags=("cosim",)))
+    return rows
+
+
 def sweep_batched(engine=DEFAULT_ENGINE):
     """Batched Monte-Carlo rows: B independently-seeded hot-spot ring-16
     instances as ONE compiled dispatch (``Fabric.sweep_batch``).
@@ -538,6 +609,22 @@ def sweep_verify(engine=DEFAULT_ENGINE, slow=False):
     for i, bspec in enumerate(bspecs):
         check(f"ring16/batch_inst{i}", bfab, bspec)
 
+    # spike-driven bridge workloads (sweep_cosim), both on the plain
+    # benchmark ring AND on the closed-loop smoke gate's credit fabric —
+    # the co-simulation must never run a config the verifier refuses
+    from repro.cosim.traffic_bridge import SNN_PATTERNS
+    ctopo = ring_topology(COSIM_RING["n_chips"])
+    ckey = jax.random.PRNGKey(COSIM_RING["key"])
+    for name in sorted(SNN_PATTERNS):
+        ckey, cell_key = jax.random.split(ckey)
+        cspec = _snn_spec_cached(name, cell_key, COSIM_RING["n_chips"],
+                                 COSIM_RING["epc"])
+        check(f"ring16/{name}", Fabric(ctopo, engine=engine), cspec)
+        check(f"ring16/{name}_credit",
+              Fabric(ctopo, queues=QueuePolicy(
+                  capacity=COSIM_RING["capacity"], flow="credit"),
+                  engine=engine), cspec)
+
     # adaptive A/B epoch slices (run_epochs executes per-slice, so the
     # slices are what must be admitted)
     from repro.core.adaptive import partition_epochs
@@ -590,7 +677,7 @@ def enable_persistent_compile_cache():
 #: Every cell tag a sweep family can emit — the single source of truth
 #: the CLIs validate ``--tags`` against.
 KNOWN_TAGS = frozenset({"hetero", "mcast", "adaptive", "lossless",
-                        "batch", "verify"})
+                        "batch", "cosim", "verify"})
 
 
 def run_structured(engine=DEFAULT_ENGINE, slow=False, tags=None):
@@ -613,6 +700,7 @@ def run_structured(engine=DEFAULT_ENGINE, slow=False, tags=None):
         (sweep_adaptive, (engine,), frozenset({"adaptive"})),
         (sweep_lossless, (engine,), frozenset({"lossless"})),
         (sweep_batched, (engine,), frozenset({"batch"})),
+        (sweep_cosim, (engine,), frozenset({"cosim"})),
         (sweep_verify, (engine, slow), frozenset({"verify"})),
     )
     if wanted is not None and wanted - KNOWN_TAGS:

@@ -1,0 +1,119 @@
+"""Closed-loop SNN <-> fabric co-simulation on a 16-chip AER ring.
+
+A recurrent LIF network (forward + backward ring projections plus local
+recurrence, one population per chip) runs with its inter-chip spikes
+transported by a real credit-flow-controlled
+:class:`~repro.core.fabric.Fabric`, and the delivered events fed back
+into future membrane updates.  The run demonstrates the full contract
+stack of the ``repro.cosim`` layer, in order:
+
+  1. **transport adds nothing** — the open-loop run (``feedback="none"``)
+     is bit-exact with a standalone LIF rollout of the same dynamics;
+  2. **lossless closed loop** — under credit flow control every tick
+     satisfies delivered + drops == injected with ZERO drops;
+  3. **the loop is real** — closed-loop spike counts DIVERGE from the
+     open-loop control: fabric feedback changes the dynamics;
+  4. **congestion couples back** — on slow serial links with
+     ``feedback="measured"``, delivery latency crosses tick boundaries
+     and the delayed current measurably changes spiking vs the
+     idealized ``next_tick`` mode on the same fabric.
+
+    PYTHONPATH=src python examples/closed_loop_snn.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.core.fabric import QueuePolicy
+from repro.core.link import SERIAL_LVDS_TIMING
+from repro.core.router import AddressSpec, ring_topology
+from repro.cosim import (CosimConfig, CosimEngine, Population, Projection,
+                         place, reference_rollout)
+
+N_CHIPS = 16
+NEURONS = 128
+TICKS = 32
+KEY = jax.random.PRNGKey(7)
+
+
+def build_placement():
+    """Recurrent ring: chip i drives chips i+1 and i-1 (unicast cross
+    routes) and itself (local, never touches the fabric)."""
+    pops = [Population(f"pop{i}", NEURONS) for i in range(N_CHIPS)]
+    projs = []
+    for i in range(N_CHIPS):
+        projs.append(Projection(pre=i, posts=((i + 1) % N_CHIPS,),
+                                w_scale=0.4))
+        projs.append(Projection(pre=i, posts=((i - 1) % N_CHIPS,),
+                                w_scale=0.4))
+        projs.append(Projection(pre=i, posts=(i,), w_scale=0.3))
+    return place(pops, projs, ring_topology(N_CHIPS), addr=AddressSpec())
+
+
+def main():
+    pl = build_placement()
+    print(f"recurrent ring, {N_CHIPS} chips x {NEURONS} LIF neurons, "
+          f"{TICKS} ticks")
+
+    # 1. open-loop == standalone rollout, bit for bit
+    eng_open = CosimEngine(pl, CosimConfig(feedback="none"), key=KEY)
+    ref = reference_rollout(eng_open, TICKS, record_state=True)
+    opn = eng_open.run(TICKS, record_state=True)
+    assert np.array_equal(ref.v, opn.v)
+    assert np.array_equal(ref.raster, opn.raster)
+    print(f"  open loop == reference : bit-exact over {TICKS} ticks "
+          f"({opn.total_spikes} spikes)")
+
+    # 2. + 3. closed loop over a lossless credit fabric
+    fab = pl.fabric(queues=QueuePolicy(capacity=256, flow="credit"))
+    eng = CosimEngine(pl, CosimConfig(feedback="next_tick"),
+                      fabric=fab, key=KEY)
+    res = eng.run(TICKS)
+    assert res.conservation_exact
+    assert int(res.drops.sum()) == 0
+    assert int(res.delivered.sum()) == int(res.injected.sum())
+    print("  tick   spikes  offered  injected  delivered  drops")
+    show = list(range(4)) + [TICKS - 1]
+    for t in show:
+        print(f"  {t:4d} {int(res.spikes[t].sum()):8d} "
+              f"{int(res.offered[t]):8d} {int(res.injected[t]):9d} "
+              f"{int(res.delivered[t]):10d} {int(res.drops[t]):6d}")
+    print(f"  total conservation     : delivered {int(res.delivered.sum())}"
+          f" + drops 0 == injected {int(res.injected.sum())} "
+          f"(exact, every tick; credit flow => lossless)")
+    diverge = int(np.abs(res.spikes - opn.spikes).sum())
+    assert diverge > 0, "fabric feedback left the dynamics unchanged"
+    print(f"  closed vs open loop    : spike trajectories diverge by "
+          f"{diverge} (the feedback loop is real)")
+
+    # 4. measured feedback on slow serial links: congestion-delayed
+    # current vs the idealized next-tick delivery, same fabric + key
+    cfg_m = CosimConfig(feedback="measured", tick_dt_ns=600)
+    cfg_i = cfg_m._replace(feedback="next_tick")
+    qp = QueuePolicy(capacity=256, flow="credit")
+
+    def run_slow(cfg):
+        f = pl.fabric(timing=SERIAL_LVDS_TIMING, queues=qp)
+        return CosimEngine(pl, cfg, fabric=f, key=KEY).run(TICKS)
+
+    res_m, res_i = run_slow(cfg_m), run_slow(cfg_i)
+    assert res_m.conservation_exact and res_i.conservation_exact
+    lag = int(res_m.latency_ns.max()) / cfg_m.tick_dt_ns
+    delayed = int((res_m.latency_ns >= cfg_m.tick_dt_ns).sum())
+    gap = int(np.abs(res_m.spikes - res_i.spikes).sum())
+    assert delayed > 0, "serial links never crossed a tick boundary"
+    assert gap > 0, "delivery timing did not affect the dynamics"
+    print(f"  measured feedback      : serial links stretch delivery to "
+          f"{lag:.1f} ticks worst-case; {delayed} events land >=1 tick "
+          f"late")
+    print(f"  measured vs next_tick  : spike trajectories diverge by "
+          f"{gap} — fabric congestion perturbs the network dynamics")
+    print("  OK — closed-loop contracts all hold")
+
+
+if __name__ == "__main__":
+    main()

@@ -189,6 +189,7 @@ from .traffic import TrafficSpec
 __all__ = ["FabricResult", "FabricBatchResult", "simulate_fabric",
            "reset_links",
            "fabric_throughput_mev_s", "fabric_energy_pj",
+           "link_energy_pj",
            "per_link_throughput_mev_s", "delivered_latencies",
            "delivery_multiset", "latency_stats", "batch_latency_stats",
            "batch_throughput_mev_s", "ENGINES",
@@ -1848,14 +1849,27 @@ def per_link_throughput_mev_s(res: FabricResult) -> jnp.ndarray:
     return jnp.where(res.t_link > 0, 1e3 * n / res.t_link, 0.0)
 
 
+def link_energy_pj(sent, timing: LinkTiming = PAPER_TIMING) -> float:
+    """THE link energy model: every transmission on link ``l`` moves one
+    event at that link's ``e_event_pj`` (scalar timing: the paper's
+    11 pJ everywhere; per-link timing: the link's own class figure).
+
+    ``sent`` is per-link transmission counts — ``(L,)`` or ``(L, 2)``
+    (trailing axes summed per link).  Shared by
+    :func:`fabric_energy_pj` and the SNN report roll-ups
+    (``models/snn.py``), so the fabric's billed energy and the
+    application-level report can never drift apart."""
+    sent = np.asarray(sent, np.float64)
+    per_link = sent.sum(axis=tuple(range(1, sent.ndim)))
+    e = np.broadcast_to(np.asarray(timing.e_event_pj, np.float64),
+                        per_link.shape)
+    return float((per_link * e).sum())
+
+
 def fabric_energy_pj(res: FabricResult,
-                     timing: LinkTiming = PAPER_TIMING) -> jnp.ndarray:
-    """Total link energy: every hop on link ``l`` moves one event at that
-    link's ``e_event_pj`` (scalar timing: the paper's 11 pJ everywhere)."""
-    e = np.asarray(timing.e_event_pj)
-    if e.ndim == 0:
-        return jnp.sum(res.sent) * timing.e_event_pj
-    return jnp.sum(jnp.sum(res.sent, axis=1) * jnp.asarray(e))
+                     timing: LinkTiming = PAPER_TIMING) -> float:
+    """Total link energy of one fabric run (see :func:`link_energy_pj`)."""
+    return link_energy_pj(res.sent, timing)
 
 
 def delivery_multiset(res: FabricResult) -> list:

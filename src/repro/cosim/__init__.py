@@ -1,0 +1,26 @@
+"""Closed-loop SNN <-> fabric co-simulation.
+
+The layer that turns the repo's two previously-disjoint halves — LIF
+population dynamics (``kernels/lif_step``, ``models/snn``) and the
+N-chip AER transport (``core/fabric``) — into ONE loop:
+
+* :mod:`repro.cosim.placement` maps neuron populations onto fabric
+  chips and compiles projection specs (feedforward / recurrent /
+  fan-out) into unicast routes and in-fabric multicast tags;
+* :mod:`repro.cosim.engine` runs the tick-phased loop: populations
+  spike, spikes pack into 26-bit AEs and ride ``Fabric.run`` (any
+  engine, any flow mode), delivered events scatter back as next-tick
+  synaptic current — optionally delayed by the fabric's own measured
+  delivery latency, so congestion perturbs the dynamics;
+* :mod:`repro.cosim.traffic_bridge` exposes the resulting spike-driven
+  traffic as a first-class generator for sweeps and BENCH A/Bs against
+  the synthetic ``core/traffic`` patterns on identical topologies.
+"""
+
+from .engine import (CosimConfig, CosimEngine, CosimResult, EventSpec,
+                     reference_rollout)
+from .placement import Placement, Population, Projection, place
+
+__all__ = ["CosimConfig", "CosimEngine", "CosimResult", "EventSpec",
+           "Placement", "Population", "Projection", "place",
+           "reference_rollout"]

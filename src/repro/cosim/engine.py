@@ -1,0 +1,373 @@
+"""Tick-phased closed-loop co-simulation: LIF populations on a fabric.
+
+One tick has four phases, mirroring how multi-core neuromorphic systems
+(DYNAPs-family) run:
+
+  1. **integrate** — every population's membrane update runs as one
+     vmapped fused LIF kernel call (``kernels.ops.lif_step``) on the
+     summed synaptic current: local recurrent input + external Poisson
+     drive + the fabric feedback buffer of this tick;
+  2. **pack** — spikes on populations with inter-chip projections
+     become 26-bit Address-Events: the payload word carries
+     ``(projection, neuron)`` (``core/events`` layout), the transport
+     word the compiled route destination (unicast chip or multicast
+     tag), and every event gets a UNIQUE injection timestamp
+     ``tick * tick_dt_ns + position`` — the identity the delivery log
+     hands back;
+  3. **transport** — the tick's events run through ``Fabric.run`` as
+     one :class:`EventSpec` (any engine, any flow mode; zero-spike
+     ticks skip the fabric, which refuses empty plans);
+  4. **scatter** — each delivered event's ``(log_inj, log_dest)`` pair
+     maps back to its source neuron and target populations, and the
+     projection's weight column accumulates into a FUTURE tick's
+     feedback buffer: the next tick (``feedback="next_tick"``), or the
+     tick after the fabric's own measured delivery time
+     (``feedback="measured"`` — congestion delays spikes, so fabric
+     backlog perturbs the dynamics).  Dropped events never feed back.
+
+``feedback="none"`` is the open-loop control: the identical dynamics
+with the fabric path severed (bit-exact with
+:func:`reference_rollout`), the baseline every congestion-coupling
+claim is measured against.
+
+Per tick the conservation law ``delivered + drops == injected`` is
+inherited directly from the fabric result — the engine adds no event
+accounting of its own.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import events as ev
+from ..core import traffic as tr
+from ..core.fabric import Fabric
+from ..core.telemetry import Telemetry, merge_telemetry
+from ..kernels import ops as K
+from .placement import LANES, Placement
+
+__all__ = ["CosimConfig", "CosimEngine", "CosimResult", "EventSpec",
+           "reference_rollout"]
+
+#: feedback modes: open-loop control / idealised next-tick / fabric-timed
+FEEDBACK_MODES = ("none", "next_tick", "measured")
+
+#: injection-time bases must stay far below the engines' BIG_NS sentinel
+_MAX_BASE_NS = 1 << 29
+
+
+class CosimConfig(NamedTuple):
+    """Dynamics + loop parameters (placement-independent)."""
+    decay: float = 0.9
+    v_th: float = 1.0
+    v_reset: float = 0.0
+    input_rate: float = 0.05     # Poisson drive per neuron per tick
+    tick_dt_ns: int = 10_000     # network tick period (10 kHz default)
+    feedback: str = "next_tick"  # FEEDBACK_MODES
+    feedback_scale: float = 1.0  # gain on fabric-delivered current
+
+
+class EventSpec(NamedTuple):
+    """One tick's spike traffic, ready for ``Fabric.run``.
+
+    ``spec`` is the transport view (src chip, unique time, routed dest
+    word); ``words`` the 26-bit AER payload words; ``proj`` / ``neuron``
+    the per-event identity the delivery scatter reads back via
+    ``log_inj - base``.
+    """
+    tick: int
+    base: int                 # injection-time base of this tick
+    spec: tr.TrafficSpec
+    words: np.ndarray         # (E,) uint32 packed (projection, neuron)
+    proj: np.ndarray          # (E,) int32
+    neuron: np.ndarray        # (E,) int32
+
+    @property
+    def n_events(self) -> int:
+        return int(self.proj.shape[0])
+
+
+class CosimResult(NamedTuple):
+    """Per-tick trajectories of one co-simulation run (numpy)."""
+    spikes: np.ndarray        # (T, P) per-population spike counts
+    offered: np.ndarray       # (T,) events offered to the fabric
+    injected: np.ndarray      # (T,) expected deliveries (post-fanout)
+    delivered: np.ndarray     # (T,)
+    drops: np.ndarray         # (T,)
+    latency_ns: np.ndarray    # all delivered end-to-end latencies
+    sent: np.ndarray          # (L, 2) summed link transmissions
+    telemetry: Telemetry | None   # merged over all fabric ticks
+    v: np.ndarray | None = None       # (T, P, n) with record_state
+    raster: np.ndarray | None = None  # (T, P, n) with record_state
+    events: tuple = ()        # per-tick EventSpecs (collect_events)
+    fabric_results: tuple = ()  # (tick, FabricResult) (record_fabric)
+
+    @property
+    def total_spikes(self) -> int:
+        return int(self.spikes.sum())
+
+    @property
+    def conservation_exact(self) -> bool:
+        """Per-tick ``delivered + drops == injected`` — every tick."""
+        return bool(np.all(self.delivered + self.drops == self.injected))
+
+
+class CosimEngine:
+    """Closed-loop runner binding a :class:`Placement` to a fabric.
+
+    ``fabric`` may be any :class:`~repro.core.fabric.Fabric` whose
+    topology / address space matches the placement (build one with
+    ``placement.fabric(...)``); pass ``None`` for open-loop runs.  All
+    projection weights are drawn once at construction from ``key``
+    (dense ``(n, n)`` per projection, scaled by its ``w_scale /
+    sqrt(n)``), so two engines built from the same placement and key
+    are dynamically identical regardless of transport."""
+
+    def __init__(self, placement: Placement, cfg: CosimConfig = None,
+                 *, fabric: Fabric = None, key=None):
+        self.placement = placement
+        self.cfg = cfg if cfg is not None else CosimConfig()
+        if self.cfg.feedback not in FEEDBACK_MODES:
+            raise ValueError(f"feedback must be one of {FEEDBACK_MODES}, "
+                             f"got {self.cfg.feedback!r}")
+        if self.cfg.tick_dt_ns <= 0:
+            raise ValueError("tick_dt_ns must be positive")
+        self.fabric = fabric
+        if fabric is not None:
+            if fabric.topo.n_chips != placement.topo.n_chips:
+                raise ValueError(
+                    f"fabric topology ({fabric.topo.n_chips} chips) "
+                    f"does not match the placement "
+                    f"({placement.topo.n_chips} chips)")
+            if (placement.mcast is not None) and fabric.mcast is None:
+                raise ValueError("placement compiled multicast tags but "
+                                 "the fabric has no multicast table — "
+                                 "build it with placement.fabric(...)")
+        key = key if key is not None else jax.random.PRNGKey(0)
+        kw, self._drive_key = jax.random.split(key)
+        P, n = placement.n_pops, placement.neurons
+        n_proj = max(len(placement.projections), 1)
+        w = np.zeros((n_proj, n, n), np.float32)
+        for pi, proj in enumerate(placement.projections):
+            w[pi] = np.asarray(
+                jax.random.normal(jax.random.fold_in(kw, pi), (n, n),
+                                  jnp.float32)) * (proj.w_scale
+                                                   / float(np.sqrt(n)))
+        self._w_np = w
+        w_dev = jnp.asarray(w)
+        local = placement.local
+        c = self.cfg
+
+        def step(v, spikes, fb, key_t):
+            i_loc = jnp.zeros((P, n), jnp.float32)
+            for (pi, pre, post) in local:
+                i_loc = i_loc.at[post].add(w_dev[pi] @ spikes[pre])
+            drive = jax.random.uniform(key_t, (P, n)) < c.input_rate
+            i_syn = i_loc + drive.astype(jnp.float32) + fb
+            v2, spk = K.lif_step(v.reshape(P * (n // LANES), LANES),
+                                 i_syn.reshape(P * (n // LANES), LANES),
+                                 decay=c.decay, v_th=c.v_th,
+                                 v_reset=c.v_reset)
+            return v2.reshape(P, n), spk.reshape(P, n)
+
+        self._step = jax.jit(step)
+
+    # --- phase 2: spikes -> one tick's EventSpec -----------------------
+
+    def pack_events(self, spk: np.ndarray, tick: int) -> EventSpec | None:
+        """Spike matrix (P, n) -> this tick's :class:`EventSpec`, or
+        ``None`` when no inter-chip projection fired (the fabric refuses
+        empty plans, so empty ticks never reach it).  Event ``i`` of the
+        tick injects at ``base + i`` — times are unique and increasing,
+        which (a) satisfies the per-source nondecreasing contract and
+        (b) makes ``log_inj`` the delivery log's event identity."""
+        base = tick * self.cfg.tick_dt_ns
+        if base >= _MAX_BASE_NS:
+            raise ValueError(f"tick {tick} overflows the int32 ns clock "
+                             f"(base {base} >= {_MAX_BASE_NS})")
+        pl = self.placement
+        srcs, dests, projs, neurons = [], [], [], []
+        seq = 0
+        for r in pl.cross:
+            pre = pl.projections[r.proj].pre
+            j = np.flatnonzero(spk[pre] > 0.0).astype(np.int32)
+            if not j.size:
+                continue
+            srcs.append(np.full(j.size, r.src_chip, np.int32))
+            dests.append(np.full(j.size, r.dest_word, np.int32))
+            projs.append(np.full(j.size, r.proj, np.int32))
+            neurons.append(j)
+            seq += j.size
+        if seq == 0:
+            return None
+        if seq >= self.cfg.tick_dt_ns:
+            raise ValueError(
+                f"{seq} events in one tick exceed the tick_dt_ns="
+                f"{self.cfg.tick_dt_ns} unique-timestamp budget")
+        proj = np.concatenate(projs)
+        neuron = np.concatenate(neurons)
+        t = np.arange(seq, dtype=np.int32) + np.int32(base)
+        words = (((proj.astype(np.uint32) << np.uint32(16))
+                  | neuron.astype(np.uint32)) & np.uint32(ev.AER_ADDR_MASK))
+        spec = tr.TrafficSpec(src=jnp.asarray(np.concatenate(srcs)),
+                              t=jnp.asarray(t),
+                              dest=jnp.asarray(np.concatenate(dests)))
+        return EventSpec(tick=tick, base=base, spec=spec, words=words,
+                         proj=proj, neuron=neuron)
+
+    # --- phase 4: delivery log -> future feedback buffers --------------
+
+    def _scatter(self, evs: EventSpec, res, tick: int, pend: dict):
+        ndel = int(res.delivered)
+        if ndel == 0:
+            return
+        inj = np.asarray(res.log_inj)[:ndel]
+        chip = np.asarray(res.log_dest)[:ndel]
+        idx = inj - evs.base          # unique times -> event identity
+        proj = evs.proj[idx]
+        neuron = evs.neuron[idx]
+        if self.cfg.feedback == "measured":
+            dlv = np.asarray(res.log_del)[:ndel]
+            tt = dlv // self.cfg.tick_dt_ns + 1   # next update after
+        else:                                     # arrival; >= tick + 1
+            tt = np.full(ndel, tick + 1, np.int64)
+        pl = self.placement
+        P, n = pl.n_pops, pl.neurons
+        cols = self._w_np[proj, :, neuron]        # (ndel, n) W[p][:, j]
+        scale = np.float32(self.cfg.feedback_scale)
+        n_proj = self._w_np.shape[0]
+        group = (tt * n_proj + proj) * pl.topo.n_chips + chip
+        for g in np.unique(group):
+            sel = np.flatnonzero(group == g)
+            d0 = sel[0]
+            buf = pend.get(int(tt[d0]))
+            if buf is None:
+                buf = pend.setdefault(int(tt[d0]),
+                                      np.zeros((P, n), np.float32))
+            vec = cols[sel].sum(axis=0, dtype=np.float32) * scale
+            for post in pl.posts_on[(int(proj[d0]), int(chip[d0]))]:
+                buf[post] += vec
+
+    # --- the loop -------------------------------------------------------
+
+    def run(self, n_ticks: int, *, record_state: bool = False,
+            collect_events: bool = False,
+            record_fabric: bool = False) -> CosimResult:
+        pl, c = self.placement, self.cfg
+        P, n = pl.n_pops, pl.neurons
+        closed = self.fabric is not None and c.feedback != "none"
+        if c.feedback != "none" and self.fabric is None:
+            raise ValueError(f"feedback={c.feedback!r} needs a fabric "
+                             f"(pass fabric= or feedback='none')")
+        v = jnp.zeros((P, n), jnp.float32)
+        spikes = jnp.zeros((P, n), jnp.float32)
+        zero_fb = jnp.zeros((P, n), jnp.float32)
+        pend: dict[int, np.ndarray] = {}
+        spk_counts = np.zeros((n_ticks, P), np.int64)
+        offered = np.zeros(n_ticks, np.int64)
+        injected = np.zeros(n_ticks, np.int64)
+        delivered = np.zeros(n_ticks, np.int64)
+        drops = np.zeros(n_ticks, np.int64)
+        lats: list[np.ndarray] = []
+        sent = np.zeros((pl.topo.n_links, 2), np.int64)
+        tele: list[Telemetry] = []
+        v_hist = np.zeros((n_ticks, P, n), np.float32) \
+            if record_state else None
+        raster = np.zeros((n_ticks, P, n), np.float32) \
+            if record_state else None
+        events: list[EventSpec] = []
+        fres: list = []
+        for tick in range(n_ticks):
+            fb_np = pend.pop(tick, None)
+            fb = zero_fb if fb_np is None else jnp.asarray(fb_np)
+            v, spikes = self._step(
+                v, spikes, fb, jax.random.fold_in(self._drive_key, tick))
+            spk_np = np.asarray(spikes)
+            spk_counts[tick] = (spk_np > 0.0).sum(axis=1)
+            if record_state:
+                v_hist[tick] = np.asarray(v)
+                raster[tick] = spk_np
+            if not (closed or collect_events):
+                continue
+            evs = self.pack_events(spk_np, tick)
+            if evs is None:
+                continue
+            offered[tick] = evs.n_events
+            if collect_events:
+                events.append(evs)
+            if not closed:
+                continue
+            res = self.fabric.run(evs.spec)
+            injected[tick] = int(res.injected)
+            delivered[tick] = int(res.delivered)
+            drops[tick] = int(res.drops)
+            ndel = int(res.delivered)
+            lats.append((np.asarray(res.log_del)[:ndel]
+                         - np.asarray(res.log_inj)[:ndel]).astype(np.int64))
+            sent += np.asarray(res.sent, np.int64)
+            if res.telemetry is not None:
+                tele.append(res.telemetry)
+            if record_fabric:
+                fres.append((tick, res))
+            self._scatter(evs, res, tick, pend)
+        return CosimResult(
+            spikes=spk_counts, offered=offered, injected=injected,
+            delivered=delivered, drops=drops,
+            latency_ns=(np.concatenate(lats) if lats
+                        else np.zeros(0, np.int64)),
+            sent=sent,
+            telemetry=merge_telemetry(tele) if tele else None,
+            v=v_hist, raster=raster, events=tuple(events),
+            fabric_results=tuple(fres))
+
+    def traffic(self, n_ticks: int) -> tr.TrafficSpec:
+        """The spike-driven workload of an open-loop rollout, as ONE
+        flat :class:`~repro.core.traffic.TrafficSpec` — what the traffic
+        bridge hands to sweeps.  Transport-independent by construction
+        (no fabric runs; destinations are the placement's compiled
+        words, bare chip ids when the placement has no AddressSpec)."""
+        res = self.run(n_ticks, collect_events=True)
+        if not res.events:
+            raise ValueError(f"no inter-chip spikes in {n_ticks} ticks — "
+                             f"raise input_rate or n_ticks")
+        return tr.TrafficSpec(
+            src=jnp.concatenate([e.spec.src for e in res.events]),
+            t=jnp.concatenate([e.spec.t for e in res.events]),
+            dest=jnp.concatenate([e.spec.dest for e in res.events]))
+
+
+def reference_rollout(engine: CosimEngine, n_ticks: int, *,
+                      record_state: bool = False) -> CosimResult:
+    """Standalone LIF rollout: the engine's dynamics with NO fabric, no
+    placement routing, no feedback bookkeeping — just the membrane
+    update iterated with a zero feedback buffer.  The open-loop
+    contract (tested and CI-gated): ``engine.run`` with
+    ``feedback="none"`` must match this bit-for-bit, proving the
+    co-simulation plumbing adds nothing to the dynamics it transports.
+    """
+    P, n = engine.placement.n_pops, engine.placement.neurons
+    v = jnp.zeros((P, n), jnp.float32)
+    spikes = jnp.zeros((P, n), jnp.float32)
+    fb = jnp.zeros((P, n), jnp.float32)
+    spk_counts = np.zeros((n_ticks, P), np.int64)
+    v_hist = np.zeros((n_ticks, P, n), np.float32) if record_state else None
+    raster = np.zeros((n_ticks, P, n), np.float32) if record_state else None
+    for tick in range(n_ticks):
+        v, spikes = engine._step(
+            v, spikes, fb, jax.random.fold_in(engine._drive_key, tick))
+        spk_np = np.asarray(spikes)
+        spk_counts[tick] = (spk_np > 0.0).sum(axis=1)
+        if record_state:
+            v_hist[tick] = np.asarray(v)
+            raster[tick] = spk_np
+    z = np.zeros(n_ticks, np.int64)
+    return CosimResult(spikes=spk_counts, offered=z, injected=z.copy(),
+                       delivered=z.copy(), drops=z.copy(),
+                       latency_ns=np.zeros(0, np.int64),
+                       sent=np.zeros((engine.placement.topo.n_links, 2),
+                                     np.int64),
+                       telemetry=None, v=v_hist, raster=raster)

@@ -1,0 +1,105 @@
+"""Spike-driven traffic as a first-class generator for sweeps/BENCH.
+
+Every workload the fabric benchmarks ran before this module was
+synthetic (``core/traffic`` processes with hand-picked rate
+parameters).  The bridge closes ROADMAP open item 3's other half: it
+rolls a real LIF network out open-loop on the target topology and
+returns the resulting inter-chip Address-Event stream as an ordinary
+:class:`~repro.core.traffic.TrafficSpec` — same ``(key, n_chips,
+events_per_chip)`` signature as ``traffic.PATTERNS`` generators, bare
+chip-id destinations, so any plain :class:`~repro.core.fabric.Fabric`
+consumes it unchanged and a sweep can A/B synthetic vs SNN load on
+IDENTICAL topologies (the ``fabric_snn_*`` BENCH rows).
+
+The load shape is the point: SNN traffic is tick-phased (bursts at
+membrane-update boundaries, silence between), spatially structured by
+the projection graph (feedforward ring vs bidirectional recurrent
+coupling), and rate-modulated by the network's own dynamics — none of
+which a Poisson/bursty generator reproduces.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from ..core.router import ring_topology
+from ..core.traffic import TrafficSpec
+from .engine import CosimConfig, CosimEngine
+from .placement import LANES, Population, Projection, place
+
+__all__ = ["spike_traffic", "snn_feedforward", "snn_recurrent",
+           "SNN_PATTERNS"]
+
+#: tick period of the bridge rollouts (ns) — 10 kHz network update
+TICK_DT_NS = 10_000
+
+
+def _ring_placement(n_chips: int, mode: str, addr=None):
+    """One population per chip on a ring; projections by ``mode``:
+    ``"feedforward"`` chains i -> i+1, ``"recurrent"`` adds the reverse
+    chain and local self-recurrence.  Every cross route is unicast, so
+    the default ``addr=None`` yields bare chip-id destinations that
+    plain fabrics consume; pass an ``AddressSpec`` to get packed words
+    instead (the closed-loop smoke gate does)."""
+    pops = [Population(f"pop{i}", LANES) for i in range(n_chips)]
+    projs = []
+    for i in range(n_chips):
+        projs.append(Projection(pre=i, posts=((i + 1) % n_chips,),
+                                w_scale=0.4))
+    if mode == "recurrent":
+        for i in range(n_chips):
+            projs.append(Projection(pre=i,
+                                    posts=((i - 1) % n_chips,),
+                                    w_scale=0.4))
+            projs.append(Projection(pre=i, posts=(i,), w_scale=0.3))
+    elif mode != "feedforward":
+        raise ValueError(f"unknown bridge mode {mode!r}")
+    return place(pops, projs, ring_topology(n_chips), addr=addr)
+
+
+def spike_traffic(key, n_chips: int, events_per_chip: int, *,
+                  mode: str = "feedforward", input_rate: float = 0.06,
+                  max_ticks: int = 256) -> TrafficSpec:
+    """Sample ``>= n_chips * events_per_chip`` inter-chip spike events
+    from an open-loop LIF rollout on a ring of ``n_chips`` chips, then
+    truncate to exactly that count (whole prefix, so per-source time
+    order survives).  Deterministic in ``key``: the same key always
+    yields the identical spec, which is what lets the BENCH baseline
+    pin these rows.  Raises if ``max_ticks`` ticks cannot supply the
+    budget — a silent short spec would skew every derived metric."""
+    target = n_chips * events_per_chip
+    pl = _ring_placement(n_chips, mode)
+    eng = CosimEngine(pl, CosimConfig(input_rate=input_rate,
+                                      tick_dt_ns=TICK_DT_NS,
+                                      feedback="none"), key=key)
+    res = eng.run(max_ticks, collect_events=True)
+    total = int(sum(e.n_events for e in res.events))
+    if total < target:
+        raise ValueError(
+            f"snn traffic underran: {total} events in {max_ticks} ticks "
+            f"< {target} requested (raise input_rate or max_ticks)")
+    src = np.concatenate([np.asarray(e.spec.src) for e in res.events])
+    t = np.concatenate([np.asarray(e.spec.t) for e in res.events])
+    dest = np.concatenate([np.asarray(e.spec.dest) for e in res.events])
+    return TrafficSpec(src=jax.numpy.asarray(src[:target]),
+                       t=jax.numpy.asarray(t[:target]),
+                       dest=jax.numpy.asarray(dest[:target]))
+
+
+def snn_feedforward(key, n_chips: int, events_per_chip: int) -> TrafficSpec:
+    return spike_traffic(key, n_chips, events_per_chip,
+                         mode="feedforward")
+
+
+def snn_recurrent(key, n_chips: int, events_per_chip: int) -> TrafficSpec:
+    return spike_traffic(key, n_chips, events_per_chip, mode="recurrent")
+
+
+#: name -> generator(key, n_chips, events_per_chip): the spike-driven
+#: counterpart of ``traffic.PATTERNS`` (kept separate so importing the
+#: cosim layer never mutates the synthetic registry).
+SNN_PATTERNS = {
+    "snn_feedforward": snn_feedforward,
+    "snn_recurrent": snn_recurrent,
+}

@@ -13,10 +13,18 @@ Each "chip" is a population of LIF neurons (fused Pallas update,
      North-South buses — ONE bus per chip pair, direction switched on
      demand (the paper's block), instead of two unidirectional buses.
 
-``link_report`` post-processes per-tick event counts with the measured
-timing contract to give bus occupancy, switch counts, energy, and the
-pin / wire economy vs the dual-bus baseline.  The busiest link can be
-replayed exactly through ``core/protocol_sim`` for a cycle-accurate trace.
+Two report roll-ups share ONE energy model
+(``core.network.link_energy_pj`` — the same function the fabric bills
+through, so application figures can never drift from engine figures):
+
+* ``fabric_report`` — the real thing: per-link transmission counts and
+  busy-time telemetry from actual fabric runs (a
+  :class:`~repro.core.network.FabricResult` or a
+  ``repro.cosim`` closed-loop result) roll up into occupancy, energy
+  and the wire economy vs the dual-bus baseline;
+* ``link_report`` — the legacy pre-fabric ESTIMATE from per-tick
+  expected event counts (kept as the A/B baseline for what the
+  closed-loop co-simulation now measures instead of modelling).
 """
 
 from __future__ import annotations
@@ -135,16 +143,37 @@ def spikes_to_events(spk_chip: jnp.ndarray, core_id: int) -> jnp.ndarray:
     return words, count
 
 
+def _bus_figures(ev_total: float, busy_ns: float, wall_ns: float,
+                 energy_uj: float, timing: LinkTiming) -> dict:
+    """The shared report shape: rate, occupancy, energy, wire economy."""
+    return {
+        "events_total": ev_total,
+        "events_per_s": ev_total / (wall_ns * 1e-9),
+        "bus_busy_frac": busy_ns / wall_ns,
+        "energy_uj": energy_uj,
+        "shared_bus_wires_per_link": timing.word_bits + 2,
+        "dual_bus_wires_per_link": 2 * (timing.word_bits + 2),
+        "throughput_headroom_x":
+            (timing.bidir_throughput_mev_s() * 1e6) /
+            max(ev_total / (wall_ns * 1e-9), 1.0),
+    }
+
+
 def link_report(ticks: dict, tick_dt_us: float = 100.0,
                 timing: LinkTiming = PAPER_TIMING) -> dict:
-    """Aggregate per-tick event counts into bus-level figures.
+    """Aggregate per-tick EXPECTED event counts into bus-level figures.
 
     Each chip pair shares ONE bus.  Per tick the bus carries both
     directions' events: busy time = events·t_req2req + reversals·penalty
     (≈ 2 reversals per tick under alternating bursts).  Compared against
-    the dual-bus design: same events, two buses, 2× the wires.
+    the dual-bus design: same events, two buses, 2× the wires.  Energy
+    bills through :func:`repro.core.network.link_energy_pj` (the fabric's
+    own model).  This is the pre-fabric estimator — prefer
+    :func:`fabric_report` over results of a real fabric/cosim run.
     """
     import numpy as np
+
+    from ..core.network import link_energy_pj
     lr = np.asarray(ticks["ew_events_lr"], float)
     rl = np.asarray(ticks["ew_events_rl"], float)
     n_ticks = lr.shape[0]
@@ -154,14 +183,37 @@ def link_report(ticks: dict, tick_dt_us: float = 100.0,
     busy_ns = ev_total * timing.t_req2req_ns \
         + 2 * n_ticks * timing.t_reverse_penalty_ns
     wall_ns = n_ticks * tick_dt_us * 1e3
-    return {
-        "events_total": ev_total,
-        "events_per_s": ev_total / (wall_ns * 1e-9),
-        "bus_busy_frac": busy_ns / wall_ns,
-        "energy_uj": timing.e_event_pj * ev_total * 1e-6,
-        "shared_bus_wires_per_link": timing.word_bits + 2,
-        "dual_bus_wires_per_link": 2 * (timing.word_bits + 2),
-        "throughput_headroom_x":
-            (timing.bidir_throughput_mev_s() * 1e6) /
-            max(ev_total / (wall_ns * 1e-9), 1.0),
-    }
+    return _bus_figures(ev_total, busy_ns, wall_ns,
+                        link_energy_pj(np.asarray([ev_total]),
+                                       timing) * 1e-6, timing)
+
+
+def fabric_report(res, n_ticks: int, tick_dt_us: float = 100.0,
+                  timing: LinkTiming = PAPER_TIMING) -> dict:
+    """Bus-level figures of an ACTUAL fabric run — measured, not modelled.
+
+    ``res`` is anything with the fabric result surface: ``sent``
+    ``(L, 2)`` per-link transmission counts, ``delivered`` (scalar or
+    per-tick vector) and ``telemetry`` (per-link ``busy_ns`` counters)
+    — a :class:`~repro.core.network.FabricResult` or a
+    ``repro.cosim.CosimResult`` alike.  Energy is
+    :func:`repro.core.network.link_energy_pj` over the counted
+    transmissions (multi-hop and multicast traversals billed exactly);
+    occupancy is the telemetry's measured per-link busy time against
+    the run's wall-clock (``bus_busy_frac`` = mean over links,
+    ``max_link_busy_frac`` = the busiest bus).
+    """
+    import numpy as np
+
+    from ..core.network import link_energy_pj
+    sent = np.asarray(res.sent)
+    ev_total = float(np.asarray(res.delivered).sum())
+    wall_ns = n_ticks * tick_dt_us * 1e3
+    busy = (np.asarray(res.telemetry.busy_ns, np.float64)
+            if res.telemetry is not None
+            else np.zeros(sent.shape[0]))
+    rep = _bus_figures(ev_total, float(busy.mean()), wall_ns,
+                       link_energy_pj(sent, timing) * 1e-6, timing)
+    rep["max_link_busy_frac"] = float(busy.max(initial=0.0)) / wall_ns
+    rep["traversals"] = int(sent.sum())
+    return rep

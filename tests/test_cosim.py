@@ -1,0 +1,313 @@
+"""Closed-loop co-simulation tests: placement compilation, transport
+bit-exactness across engines, per-tick conservation, the open-loop ==
+standalone-rollout contract, and congestion-coupled feedback."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import events as ev
+from repro.core import network as net
+from repro.core.fabric import Fabric, QueuePolicy
+from repro.core.link import SERIAL_LVDS_TIMING
+from repro.core.router import AddressSpec, line_topology, ring_topology
+from repro.cosim import (CosimConfig, CosimEngine, Population, Projection,
+                         place, reference_rollout)
+from repro.cosim.traffic_bridge import SNN_PATTERNS, spike_traffic
+from repro.models import snn
+
+KEY = jax.random.PRNGKey(3)
+
+
+def ring_recurrent(n_chips=4, neurons=128, addr=AddressSpec()):
+    pops = [Population(f"p{i}", neurons) for i in range(n_chips)]
+    projs = []
+    for i in range(n_chips):
+        projs.append(Projection(i, ((i + 1) % n_chips,), 0.4))
+        projs.append(Projection(i, ((i - 1) % n_chips,), 0.4))
+        projs.append(Projection(i, (i,), 0.3))
+    return place(pops, projs, ring_topology(n_chips), addr=addr)
+
+
+class TestPlacement:
+    def test_compile_ring(self):
+        pl = ring_recurrent(4)
+        assert pl.n_pops == 4 and pl.neurons == 128
+        assert len(pl.local) == 4          # the self-projections
+        assert len(pl.cross) == 8          # fwd + back, all unicast
+        assert all(r.tag == -1 and r.fanout == 1 for r in pl.cross)
+        for r in pl.cross:                 # unicast word unpacks to chip
+            assert not pl.addr.is_multicast(r.dest_word)
+            chip, _ = pl.addr.unpack(r.dest_word)
+            assert int(chip) == r.chips[0]
+        # every cross route's delivery chip maps back to its posts
+        for r in pl.cross:
+            posts = pl.posts_on[(r.proj, r.chips[0])]
+            assert posts == (pl.projections[r.proj].posts[0],)
+
+    def test_multicast_fanout(self):
+        pops = [Population(f"p{i}") for i in range(4)]
+        projs = [Projection(0, (1, 2, 3), 0.4)]
+        pl = place(pops, projs, ring_topology(4), addr=AddressSpec())
+        (r,) = pl.cross
+        assert r.tag == 0 and r.chips == (1, 2, 3) and r.fanout == 3
+        assert pl.mcast is not None and pl.mcast.members.shape == (1, 4)
+        assert list(np.flatnonzero(pl.mcast.members[0])) == [1, 2, 3]
+        fab = pl.fabric()                  # auto-attaches the in_fabric
+        assert fab.mcast is not None       # multicast table
+
+    def test_strategies_and_pins(self):
+        pops = [Population(f"p{i}") for i in range(4)]
+        projs = [Projection(0, (1,))]
+        topo = ring_topology(2)
+        rr = place(pops, projs, topo)
+        assert list(rr.chip_of) == [0, 1, 0, 1]
+        blk = place(pops, projs, topo, strategy="block")
+        assert list(blk.chip_of) == [0, 0, 1, 1]
+        pin = place(pops, projs, topo, chips=[1, 1, 0, 0])
+        assert list(pin.chip_of) == [1, 1, 0, 0]
+        assert len(blk.cross) == 0 and len(blk.local) == 1  # co-located
+
+    @pytest.mark.parametrize("bad", [
+        lambda: place([], [], ring_topology(2)),
+        lambda: place([Population("a", 100)], [], ring_topology(2)),
+        lambda: place([Population("a"), Population("b", 256)], [],
+                      ring_topology(2)),
+        lambda: place([Population("a")], [], ring_topology(2),
+                      chips=[5]),
+        lambda: place([Population("a")], [], ring_topology(2),
+                      chips=[0, 1]),
+        lambda: place([Population("a")], [], ring_topology(2),
+                      strategy="scatter"),
+        lambda: place([Population("a"), Population("b")],
+                      [Projection(0, ())], ring_topology(2)),
+        lambda: place([Population("a"), Population("b")],
+                      [Projection(2, (0,))], ring_topology(2)),
+        lambda: place([Population("a"), Population("b")],
+                      [Projection(0, (9,))], ring_topology(2)),
+        # fan-out without an AddressSpec: no mcast bit to set
+        lambda: place([Population(f"p{i}") for i in range(3)],
+                      [Projection(0, (1, 2))], ring_topology(3),
+                      addr=None),
+        # more chips than the word's chip field can name
+        lambda: place([Population("a")], [], ring_topology(8),
+                      addr=AddressSpec(chip_bits=2)),
+    ])
+    def test_rejects(self, bad):
+        with pytest.raises(ValueError):
+            bad()
+
+
+class TestEngineContracts:
+    def test_open_loop_matches_reference(self):
+        pl = ring_recurrent(4)
+        eng = CosimEngine(pl, CosimConfig(feedback="none"), key=KEY)
+        ref = reference_rollout(eng, 12, record_state=True)
+        opn = eng.run(12, record_state=True)
+        assert np.array_equal(ref.v, opn.v)
+        assert np.array_equal(ref.raster, opn.raster)
+        assert np.array_equal(ref.spikes, opn.spikes)
+        assert opn.total_spikes > 0
+
+    def test_closed_loop_needs_fabric(self):
+        pl = ring_recurrent(4)
+        eng = CosimEngine(pl, CosimConfig(feedback="next_tick"), key=KEY)
+        with pytest.raises(ValueError, match="needs a fabric"):
+            eng.run(2)
+        with pytest.raises(ValueError, match="feedback"):
+            CosimEngine(pl, CosimConfig(feedback="sometimes"), key=KEY)
+
+    def test_mismatched_fabric_rejected(self):
+        pl = ring_recurrent(4)
+        with pytest.raises(ValueError, match="topology"):
+            CosimEngine(pl, fabric=Fabric(ring_topology(6)), key=KEY)
+        pops = [Population(f"p{i}") for i in range(4)]
+        mc = place(pops, [Projection(0, (1, 2, 3))], ring_topology(4),
+                   addr=AddressSpec())
+        with pytest.raises(ValueError, match="multicast"):
+            CosimEngine(mc, fabric=Fabric(ring_topology(4),
+                                          addr=AddressSpec()), key=KEY)
+
+    def test_conservation_credit_lossless(self):
+        pl = ring_recurrent(4)
+        fab = pl.fabric(queues=QueuePolicy(capacity=128, flow="credit"))
+        res = CosimEngine(pl, fabric=fab, key=KEY).run(10)
+        assert res.conservation_exact
+        assert int(res.drops.sum()) == 0
+        assert int(res.delivered.sum()) == int(res.injected.sum()) > 0
+
+    def test_conservation_under_drops(self):
+        """A many-to-one funnel on bounded drop-mode queues overflows
+        at the hot chip; the dropped events must still balance the
+        books and must never feed back."""
+        pops = [Population(f"p{i}") for i in range(8)]
+        projs = [Projection(i, (0,), 0.4) for i in range(1, 8)]
+        projs += [Projection(i, (i,), 0.3) for i in range(8)]
+        pl = place(pops, projs, line_topology(8), addr=AddressSpec())
+        # every source's events converge on chip 0's last link (~7x one
+        # population's spikes) while each endpoint's own injections stay
+        # well under capacity — through-traffic, not backlog, overflows
+        fab = pl.fabric(queues=QueuePolicy(capacity=32, flow="drop"))
+        res = CosimEngine(pl, CosimConfig(input_rate=0.1,
+                                          feedback_scale=0.0),
+                          fabric=fab, key=KEY).run(10)
+        assert int(res.drops.sum()) > 0     # the funnel overflows
+        assert res.conservation_exact       # and is still accounted
+
+    def test_closed_diverges_from_open(self):
+        pl = ring_recurrent(4)
+        eng_o = CosimEngine(pl, CosimConfig(feedback="none"), key=KEY)
+        fab = pl.fabric(queues=QueuePolicy(capacity=128, flow="credit"))
+        eng_c = CosimEngine(pl, fabric=fab, key=KEY)
+        opn, cls = eng_o.run(12), eng_c.run(12)
+        assert int(np.abs(cls.spikes - opn.spikes).sum()) > 0
+
+    def test_measured_feedback_diverges_from_next_tick(self):
+        """Slow serial links delay deliveries past tick boundaries; the
+        late current must change the dynamics vs idealized delivery."""
+        pl = ring_recurrent(4)
+        qp = QueuePolicy(capacity=128, flow="credit")
+        runs = {}
+        for mode in ("measured", "next_tick"):
+            fab = pl.fabric(timing=SERIAL_LVDS_TIMING, queues=qp)
+            cfg = CosimConfig(feedback=mode, tick_dt_ns=600)
+            runs[mode] = CosimEngine(pl, cfg, fabric=fab, key=KEY).run(16)
+        assert int((runs["measured"].latency_ns >= 600).sum()) > 0
+        assert runs["measured"].conservation_exact
+        gap = np.abs(runs["measured"].spikes
+                     - runs["next_tick"].spikes).sum()
+        assert int(gap) > 0
+
+    def test_tick_budget_guard(self):
+        pl = ring_recurrent(4)
+        fab = pl.fabric(queues=QueuePolicy(capacity=128, flow="credit"))
+        eng = CosimEngine(pl, CosimConfig(input_rate=1.0, tick_dt_ns=60),
+                          fabric=fab, key=KEY)
+        with pytest.raises(ValueError, match="unique-timestamp budget"):
+            eng.run(2)
+
+    def test_aer_word_roundtrip(self):
+        """EventSpec payload words are 26-bit AER (projection, neuron)
+        pairs in the core/events layout, exactly recoverable."""
+        pl = ring_recurrent(4)
+        eng = CosimEngine(pl, CosimConfig(feedback="none"), key=KEY)
+        res = eng.run(6, collect_events=True)
+        assert res.events, "no spikes crossed chips in 6 ticks"
+        for e in res.events:
+            core, neuron = ev.unpack_aer_address(e.words)
+            assert np.array_equal(np.asarray(core), e.proj)
+            assert np.array_equal(np.asarray(neuron), e.neuron)
+            assert int(e.words.max()) <= ev.AER_ADDR_MASK
+
+
+class TestCrossEngine:
+    def test_engines_bit_exact(self):
+        """The SAME closed-loop co-simulation on ring / reference /
+        pallas transports: every per-tick FabricResult and the spike
+        trajectory must agree bit for bit."""
+        pl = ring_recurrent(4)
+        runs = {}
+        for engine in ("ring", "reference", "pallas"):
+            fab = pl.fabric(engine=engine,
+                            queues=QueuePolicy(capacity=128,
+                                               flow="credit"))
+            runs[engine] = CosimEngine(pl, fabric=fab, key=KEY).run(
+                8, record_fabric=True)
+        base = runs["ring"]
+        for other in ("reference", "pallas"):
+            r = runs[other]
+            assert np.array_equal(base.spikes, r.spikes)
+            assert np.array_equal(base.delivered, r.delivered)
+            assert len(base.fabric_results) == len(r.fabric_results)
+            for (ta, fa), (tb, fb) in zip(base.fabric_results,
+                                          r.fabric_results):
+                assert ta == tb
+                net.assert_results_equal(fa, fb, f"ring vs {other} @ {ta}")
+
+    def test_multicast_closed_loop(self):
+        """A fanout-3 projection through in-fabric multicast trees:
+        injected = fanout x offered, and every delivery lands on a
+        member chip."""
+        pops = [Population(f"p{i}") for i in range(4)]
+        projs = [Projection(0, (1, 2, 3), 0.5), Projection(0, (0,), 0.3),
+                 Projection(1, (0,), 0.4)]
+        pl = place(pops, projs, ring_topology(4), addr=AddressSpec())
+        fab = pl.fabric(queues=QueuePolicy(capacity=128, flow="credit"))
+        res = CosimEngine(pl, CosimConfig(input_rate=0.08),
+                          fabric=fab, key=KEY).run(
+            8, collect_events=True, record_fabric=True)
+        assert res.conservation_exact and int(res.drops.sum()) == 0
+        by_tick = {e.tick: e for e in res.events}
+        for tick, fr in res.fabric_results:
+            e = by_tick[tick]
+            n_mc = int((e.proj == 0).sum())     # the fanout-3 route
+            n_uc = e.n_events - n_mc
+            assert int(fr.injected) == 3 * n_mc + n_uc
+            dest = np.asarray(fr.log_dest)[:int(fr.delivered)]
+            assert set(np.unique(dest)) <= {0, 1, 2, 3}
+            # member chips 1,2,3 each see every multicast event once;
+            # chip 0 sees exactly the unicast 1 -> 0 events
+            for c in (1, 2, 3):
+                assert int((dest == c).sum()) == n_mc
+            assert int((dest == 0).sum()) == n_uc
+
+
+class TestTrafficBridge:
+    def test_deterministic_and_sized(self):
+        k = jax.random.PRNGKey(11)
+        a = spike_traffic(k, 8, 16)
+        b = spike_traffic(k, 8, 16)
+        assert a.src.shape == (128,)
+        for f in ("src", "t", "dest"):
+            assert np.array_equal(np.asarray(getattr(a, f)),
+                                  np.asarray(getattr(b, f)))
+
+    @pytest.mark.parametrize("name", sorted(SNN_PATTERNS))
+    def test_patterns_fabric_ready(self, name):
+        spec = SNN_PATTERNS[name](jax.random.PRNGKey(5), 8, 12)
+        src = np.asarray(spec.src)
+        dest = np.asarray(spec.dest)
+        t = np.asarray(spec.t)
+        assert np.all(src != dest)          # fabric refuses self-routes
+        assert np.all((dest >= 0) & (dest < 8))  # bare chip ids
+        for s in range(8):                  # per-source nondecreasing
+            ts = t[src == s]
+            assert np.all(np.diff(ts) >= 0)
+        # and a plain fabric consumes it whole, conservatively
+        res = Fabric(ring_topology(8)).run(spec)
+        assert int(res.delivered) + int(res.drops) == int(res.injected)
+
+    def test_underrun_and_bad_mode(self):
+        with pytest.raises(ValueError, match="underran"):
+            spike_traffic(jax.random.PRNGKey(0), 8, 10_000, max_ticks=3)
+        with pytest.raises(ValueError, match="mode"):
+            spike_traffic(jax.random.PRNGKey(0), 8, 4, mode="chaotic")
+
+
+class TestFabricReport:
+    def test_report_measures_the_run(self):
+        pl = ring_recurrent(4)
+        fab = pl.fabric(queues=QueuePolicy(capacity=128, flow="credit"))
+        res = CosimEngine(pl, fabric=fab, key=KEY).run(10)
+        rep = snn.fabric_report(res, 10, tick_dt_us=10.0)
+        assert rep["events_total"] == float(res.delivered.sum())
+        # energy bills per link traversal through the ONE shared model
+        assert rep["energy_uj"] == pytest.approx(
+            net.link_energy_pj(res.sent) * 1e-6)
+        assert rep["energy_uj"] == pytest.approx(
+            float(res.sent.sum()) * 11.0 * 1e-6)
+        assert 0.0 <= rep["bus_busy_frac"] <= 1.0
+        assert rep["max_link_busy_frac"] >= rep["bus_busy_frac"] > 0.0
+        assert rep["traversals"] == int(res.sent.sum())
+        assert rep["dual_bus_wires_per_link"] == \
+            2 * rep["shared_bus_wires_per_link"]
+
+    def test_link_report_same_energy_model(self):
+        """The legacy estimator and the fabric path charge the same
+        model: N events -> N * e_event_pj, exactly."""
+        ticks = {"ew_events_lr": np.asarray([3.0, 2.0]),
+                 "ew_events_rl": np.asarray([1.0, 0.0]),
+                 "ns_events": np.asarray([4.0, 2.0])}
+        rep = snn.link_report(ticks)
+        assert rep["energy_uj"] == net.link_energy_pj(
+            np.asarray([12.0])) * 1e-6
